@@ -1,0 +1,36 @@
+"""Communication-load table (paper §Case Study text): per-token bytes of C2C vs
+T2T for the real case-study zoo (88 KB vs 16 B claim) and for every assigned
+architecture (what federating THOSE models would cost)."""
+from __future__ import annotations
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.core import commload
+
+
+def run() -> dict:
+    from repro.core.quant import c2c_bytes_per_token_quantized
+    paper = commload.paper_case_study_bytes(dtype_bytes=2)
+    archs = {a: commload.c2c_bytes_per_token(get_config(a), 2)
+             for a in ARCH_IDS if get_config(a).attention_layers}
+    int8 = {a: int(c2c_bytes_per_token_quantized(get_config(a)))
+            for a in ARCH_IDS if get_config(a).attention_layers}
+    return {"paper": paper, "assigned": archs, "assigned_int8": int8}
+
+
+def main() -> None:
+    r = run()
+    p = r["paper"]
+    for name, b in p["per_transmitter_bytes"].items():
+        print(f"comm,case_study,{name},{b},B/token")
+    print(f"comm,case_study,TOTAL_C2C,{p['c2c_total_per_token']},B/token"
+          f"  (paper: ~88 KB)")
+    print(f"comm,case_study,TOTAL_T2T,{p['t2t_total_per_token']},B/token"
+          f"  (paper: 16 B)")
+    for a, b in r["assigned"].items():
+        print(f"comm,assigned,{a},{b},B/token")
+    for a, b in r["assigned_int8"].items():
+        print(f"comm,assigned_int8,{a},{b},B/token  (beyond-paper 2x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,270 @@
+"""Shared case-study harness for the paper-figure benchmarks.
+
+Builds the simulated case study (DESIGN.md §1, repro band 2): the five-member
+heterogeneous tiny zoo, knowledge-partitioned synthetic world, trained
+transmitters (each on its own domain), a weak generalist receiver, trained
+fusers, and the evaluation loop. All benchmarks share one cached build so
+``python -m benchmarks.run`` trains everything exactly once.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.case_study import tiny_zoo
+from repro.core import c2c, fuser as F
+from repro.core.fedrefine import FedRefineSystem, Participant
+from repro.core.fuser_training import train_fuser
+from repro.data.synthetic import World, WorldSpec, lm_stream
+from repro.launch.train import train_loop
+from repro.models import transformer as T
+from repro.models.cache import attn_kv_stack
+
+CKPT = os.path.join(os.path.dirname(__file__), "..", "experiments", "case_study")
+
+# sized for single-core CPU: enough training to separate the curves, not more.
+# Epistemic setup (paper's regime): transmitters master their own domain (all
+# facts); the receiver masters the task FORMAT + the 30% receiver-known fact
+# subset; evaluation asks receiver-UNSEEN facts, so standalone ≈ chance and the
+# knowledge must arrive over the federation medium.
+TRAIN_STEPS = int(os.environ.get("CS_TRAIN_STEPS", 300))
+RX_STEPS = int(os.environ.get("CS_RX_STEPS", 300))
+FUSER_STEPS = int(os.environ.get("CS_FUSER_STEPS", 400))
+BATCH, SEQ = 8, 24
+EVAL_N = int(os.environ.get("CS_EVAL_N", 128))
+EVAL_KNOWN = None if os.environ.get("CS_EVAL_ALL") else False
+
+
+@functools.lru_cache(maxsize=1)
+def build_case_study():
+    """Train the zoo + fusers once; returns a dict with everything benchmarks need."""
+    t0 = time.time()
+    world = World(WorldSpec(seed=0))
+    zoo = tiny_zoo(vocab_size=world.spec.vocab_size)
+    rx_cfg = zoo["receiver"]
+    tx_cfgs = zoo["transmitters"]
+
+    # --- transmitters: each an expert on its own knowledge domain -----------
+    participants = []
+    for d, cfg in enumerate(tx_cfgs):
+        stream = lm_stream(world, 100 + d, BATCH, SEQ, domain=d)
+        params, losses = train_loop(cfg, stream, TRAIN_STEPS, lr=1e-3,
+                                    seed=d, verbose=False)
+        participants.append(Participant(cfg.name, cfg, params))
+        print(f"  [build] {cfg.name}: domain {d} loss "
+              f"{losses[0]:.3f}->{losses[-1]:.3f} ({time.time()-t0:.0f}s)")
+
+    # --- receiver: task-format expert on the receiver-known fact subset -----
+    stream = lm_stream(world, 999, BATCH, SEQ, domain=None, known=True)
+    rx_params, losses = train_loop(rx_cfg, stream, RX_STEPS, lr=1e-3,
+                                   seed=42, verbose=False)
+    receiver = Participant(rx_cfg.name, rx_cfg, rx_params)
+    print(f"  [build] {rx_cfg.name} (receiver): loss "
+          f"{losses[0]:.3f}->{losses[-1]:.3f}")
+
+    system = FedRefineSystem.build([receiver, *participants])
+    system.channel = world.synonym_channel()
+
+    # --- fusers: one per transmitter -> receiver link ------------------------
+    channel = system.channel
+    for d, tx in enumerate(participants):
+        def batches(dd=d):
+            # transport task: QUESTION-ONLY rows (answers live solely in the
+            # transmitter's weights — question_batch docstring explains the
+            # cheating failure mode this prevents) whose answers the receiver
+            # does NOT know. tx and rx see DIFFERENT rephrasings (the privacy
+            # regime of Fig. 2).
+            rng = np.random.default_rng(500 + dd)
+            i = 0
+            while True:
+                # seq=4 single-question rows: EXACTLY the eval prompt shape
+                # (packed longer rows train fine but eval at len 4 is then
+                # out-of-distribution — pilot-2 lesson)
+                b = world.question_batch(rng, 4 * BATCH, 4, domain=dd,
+                                         known=False)
+                toks = jnp.asarray(b["tokens"])
+                k1 = jax.random.PRNGKey(2 * i)
+                k2 = jax.random.PRNGKey(2 * i + 1)
+                i += 1
+                yield {"tx_tokens": channel.rephrase(toks, k1),
+                       "rx_tokens": channel.rephrase(toks, k2),
+                       "labels": jnp.asarray(b["labels"])}
+        fz, _, hist = train_fuser(tx.cfg, rx_cfg, tx.params, rx_params,
+                                  batches(), steps=FUSER_STEPS, lr=2e-3)
+        system.registry.fusers[(tx.name, rx_cfg.name)] = fz
+        print(f"  [build] fuser {tx.name}->rx: loss {hist[0]:.3f}->{hist[-1]:.3f}")
+
+    # --- gating network: learn to SELECT the right transmitter per question --
+    # (paper: "a gating network is required for each LLM to select the data
+    # from its own model or other fusers"). Individual fusers transport
+    # knowledge (~80% in-domain), but concatenating 4 prefixes of which 3 are
+    # out-of-domain interferes; the gate learns per-request weights.
+    gating, new_fusers, g_hist = train_gating(
+        world, system, receiver, participants,
+        steps=int(os.environ.get("CS_GATE_STEPS", 250)))
+    system.registry.gating[rx_cfg.name] = gating
+    for t, fz in zip(participants, new_fusers):
+        system.registry.fusers[(t.name, rx_cfg.name)] = fz
+    print(f"  [build] joint federation refinement: loss "
+          f"{g_hist[0]:.3f}->{g_hist[-1]:.3f}")
+
+    print(f"  [build] case study ready in {time.time()-t0:.0f}s")
+    return {"world": world, "system": system, "receiver": receiver,
+            "transmitters": participants}
+
+
+def train_gating(world, system, receiver, transmitters, *, steps=250, lr=2e-3):
+    """JOINT federation refinement (the paper's "continuous global federation
+    iterations"): train the gating network AND all fusers together on
+    mixed-domain question batches with every transmitter present (full Eq. 4).
+    Individually-pretrained fusers steer confidently even out-of-domain;
+    joint training teaches each link to stand down when its transmitter
+    doesn't know (pilot-4 lesson: gate-only training cannot fix this)."""
+    from repro.core.gating import apply_gates, init_gating
+    from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state
+
+    rx = receiver
+    channel = system.channel
+    fusers0 = [system.registry.get(t.name, rx.name) for t in transmitters]
+    cfgs = [t.cfg for t in transmitters]
+    gating0 = init_gating(rx.cfg, jax.random.PRNGKey(77))
+    opt_cfg = AdamWConfig(lr=lr, schedule="cosine", total_steps=steps)
+
+    def loss_fn(trainable, tx_toks, rx_toks, labels, mask):
+        fusers, gating = trainable
+        projected = []
+        for i, (tx, fz, cfg) in enumerate(zip(transmitters, fusers, cfgs)):
+            _, cache = T.prefill(cfg, jax.lax.stop_gradient(tx.params),
+                                 tx_toks[i], max_seq=tx_toks.shape[-1],
+                                 cache_dtype=jnp.float32)
+            st = jax.lax.stop_gradient(
+                attn_kv_stack(cfg, cache, length=tx_toks.shape[-1]))
+            projected.append(F.project_cache(fz, cfg, rx.cfg, st))
+        gated = apply_gates(gating, projected)
+        # transmitter-subset dropout: every federation size is in-distribution
+        # (evaluating n < N transmitters otherwise degrades — pilot-5 lesson)
+        gated = [dict(p, bias=p["bias"] + jnp.log(mask[i]))
+                 for i, p in enumerate(gated)]
+        fused = {
+            "k": jnp.concatenate([p["k"] for p in gated], axis=-2),
+            "v": jnp.concatenate([p["v"] for p in gated], axis=-2),
+            "bias": jnp.concatenate([p["bias"] for p in gated], axis=-1),
+        }
+        logits, _ = c2c.c2c_forward(rx.cfg, jax.lax.stop_gradient(rx.params),
+                                    rx_toks, fused)
+        logits = logits.astype(jnp.float32)
+        valid = labels >= 0
+        safe = jnp.where(valid, labels, 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1)
+
+    trainable = (fusers0, gating0)
+    opt_state = init_opt_state(trainable)
+
+    @jax.jit
+    def step(trainable, opt_state, tx_toks, rx_toks, labels, mask):
+        loss, grads = jax.value_and_grad(loss_fn, allow_int=True)(
+            trainable, tx_toks, rx_toks, labels, mask)
+        t2, s2 = apply_updates(opt_cfg, trainable, grads, opt_state)
+        return t2, s2, loss
+
+    rng = np.random.default_rng(888)
+    hist = []
+    n_tx = len(transmitters)
+    for i in range(steps):
+        b = world.question_batch(rng, 2 * BATCH, 4, domain=None, known=False)
+        toks = jnp.asarray(b["tokens"])
+        tx_toks = jnp.stack([
+            channel.rephrase(toks, jax.random.PRNGKey(1000 * i + j))
+            for j in range(n_tx)])
+        rx_toks = channel.rephrase(toks, jax.random.PRNGKey(1000 * i + 99))
+        keep = rng.random(n_tx) < 0.7
+        if not keep.any():
+            keep[rng.integers(n_tx)] = True
+        mask = jnp.asarray(keep, jnp.float32)
+        trainable, opt_state, loss = step(trainable, opt_state, tx_toks,
+                                          rx_toks, jnp.asarray(b["labels"]),
+                                          mask)
+        hist.append(float(loss))
+    fusers, gating = trainable
+    return gating, fusers, hist
+
+
+# ------------------------------------------------------------------- eval
+
+
+def answer_accuracy_standalone(p: Participant, world: World, rng, n=EVAL_N,
+                               rephrase_key=None, channel=None) -> float:
+    ev = world.eval_batch(rng, n, known=EVAL_KNOWN)
+    prompts = jnp.asarray(ev["prompt"])
+    if channel is not None and rephrase_key is not None:
+        prompts = channel.rephrase(prompts, rephrase_key)
+    logits, _ = T.forward(p.cfg, p.params, prompts)
+    pred = jnp.argmax(logits[:, -1], axis=-1)
+    return float(jnp.mean(pred == jnp.asarray(ev["answer"])))
+
+
+def answer_accuracy_c2c(cs, tx_names, rng, n=EVAL_N, *, rephrased=True,
+                        key=None, gated: bool = True) -> float:
+    """Receiver answers with fused caches from ``tx_names`` (Eq. 4, gated)."""
+    world, system, rx = cs["world"], cs["system"], cs["receiver"]
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ev = world.eval_batch(rng, n, known=EVAL_KNOWN)
+    prompts = jnp.asarray(ev["prompt"])
+    answers = jnp.asarray(ev["answer"])
+    if not tx_names:
+        logits, _ = T.forward(rx.cfg, rx.params, prompts)
+        return float(jnp.mean(jnp.argmax(logits[:, -1], -1) == answers))
+
+    stacks, fusers, cfgs = [], [], []
+    for i, name in enumerate(tx_names):
+        tx = system.participants[name]
+        tp = (system.channel.rephrase(prompts, jax.random.fold_in(key, i))
+              if rephrased else prompts)
+        S = tp.shape[1]
+        _, cache = T.prefill(tx.cfg, tx.params, tp, max_seq=S,
+                             cache_dtype=jnp.float32)
+        stacks.append(attn_kv_stack(tx.cfg, cache, length=S))
+        fusers.append(system.registry.get(name, rx.name))
+        cfgs.append(tx.cfg)
+    rx_prompts = (system.channel.rephrase(prompts, jax.random.fold_in(key, 99))
+                  if rephrased else prompts)
+    gating = system.registry.gating.get(rx.name) if gated else None
+    fused = c2c.fused_prefix(fusers, cfgs, rx.cfg, stacks, gating=gating)
+    logits, _ = c2c.c2c_forward(rx.cfg, rx.params, rx_prompts, fused)
+    return float(jnp.mean(jnp.argmax(logits[:, -1], -1) == answers))
+
+
+def answer_accuracy_t2t(cs, tx_names, rng, n=EVAL_N, *, rephrased=True,
+                        key=None) -> float:
+    """T2T baseline: each transmitter ships its question+answer AS TEXT
+    ([Q s r A o_tx SEP], the receiver's trained packed-QA format); the receiver
+    re-prefills everything and answers its own copy of the question — paying
+    the full prefill rebuild the paper charges T2T with."""
+    from repro.data.synthetic import SEP_TOK
+
+    world, system, rx = cs["world"], cs["system"], cs["receiver"]
+    key = key if key is not None else jax.random.PRNGKey(0)
+    ev = world.eval_batch(rng, n, known=EVAL_KNOWN)
+    prompts = jnp.asarray(ev["prompt"])
+    answers = jnp.asarray(ev["answer"])
+    B = prompts.shape[0]
+    sep = jnp.full((B, 1), SEP_TOK, prompts.dtype)
+    shared = []
+    for i, name in enumerate(tx_names):
+        tx = system.participants[name]
+        tp = (system.channel.rephrase(prompts, jax.random.fold_in(key, i))
+              if rephrased else prompts)
+        ans_tok = c2c.generate(tx.cfg, tx.params, tp, 1)  # (B, 1)
+        shared.append(jnp.concatenate([tp, ans_tok, sep], axis=1))
+    rx_prompts = (system.channel.rephrase(prompts, jax.random.fold_in(key, 99))
+                  if rephrased else prompts)
+    combined = jnp.concatenate([*shared, rx_prompts], axis=1)
+    logits, _ = T.forward(rx.cfg, rx.params, combined)
+    return float(jnp.mean(jnp.argmax(logits[:, -1], -1) == answers))

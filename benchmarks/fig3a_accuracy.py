@@ -1,0 +1,41 @@
+"""Fig. 3(a): accuracy vs number of participating transmitters, for
+{C2C ("KV"), T2T ("Token")} × {Original, Rephrased}.
+
+Paper's claims this reproduces qualitatively (simulated case study, see
+DESIGN.md §1): (i) accuracy rises with transmitter count; (ii) C2C > T2T;
+(iii) rephrasing costs only a small accuracy delta; (iv) every federated
+variant beats the standalone receiver.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (answer_accuracy_c2c, answer_accuracy_t2t,
+                               build_case_study)
+
+
+def run() -> list:
+    cs = build_case_study()
+    system = cs["system"]
+    tx_all = [t.name for t in cs["transmitters"]]
+    rng = np.random.default_rng(7)
+    rows = []
+    base = answer_accuracy_c2c(cs, [], rng)
+    rows.append(("standalone", 0, "none", base))
+    for n in range(1, len(tx_all) + 1):
+        names = tx_all[:n]
+        for proto, fn in (("KV", answer_accuracy_c2c), ("Token", answer_accuracy_t2t)):
+            for variant, reph in (("original", False), ("rephrased", True)):
+                rng_e = np.random.default_rng(7)  # same eval set everywhere
+                acc = fn(cs, names, rng_e, rephrased=reph)
+                rows.append((proto, n, variant, acc))
+    return rows
+
+
+def main() -> None:
+    for proto, n, variant, acc in run():
+        print(f"fig3a,{proto},{n},{variant},{acc:.4f}")
+
+
+if __name__ == "__main__":
+    main()

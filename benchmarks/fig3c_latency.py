@@ -1,0 +1,90 @@
+"""Fig. 3(c): end-to-end latency of C2C (original + rephrased) vs T2T.
+
+Two complementary measurements:
+  1. MEASURED wall-clock of the tiny-zoo pipeline stages on this host (the
+     relative structure — C2C skips the receiver-side re-prefill — is hardware
+     independent);
+  2. the ANALYTIC link+compute model (core/protocol.py) on the paper's real
+     case-study dims (Qwen3-0.6B receiver etc.) over a WiFi-class link, which is
+     the configuration Fig. 3(c) describes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import build_case_study
+from repro.configs.case_study import ZOO
+from repro.core import c2c, protocol
+from repro.models import transformer as T
+from repro.models.cache import attn_kv_stack
+
+
+def _timed(fn, *args, repeat=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeat
+
+
+def run_measured(gen_steps: int = 8) -> dict:
+    cs = build_case_study()
+    system, rx = cs["system"], cs["receiver"]
+    tx = cs["transmitters"][0]
+    world = cs["world"]
+    rng = np.random.default_rng(3)
+    prompts = jnp.asarray(world.eval_batch(rng, 8)["prompt"])
+    S = prompts.shape[1]
+    fz = system.registry.get(tx.name, rx.name)
+
+    def c2c_pipeline(p):
+        _, cache = T.prefill(tx.cfg, tx.params, p, max_seq=S, cache_dtype=jnp.float32)
+        stack = attn_kv_stack(tx.cfg, cache, length=S)
+        fused = c2c.fused_prefix([fz], [tx.cfg], rx.cfg, [stack])
+        return c2c.generate(rx.cfg, rx.params, p, gen_steps, fused=fused)
+
+    def c2c_rephrased(p):
+        return c2c_pipeline(system.channel.rephrase(p, jax.random.PRNGKey(1)))
+
+    def t2t_pipeline(p):
+        shared = c2c.generate(tx.cfg, tx.params, p, gen_steps)  # tx generates
+        combined = jnp.concatenate([shared, p], axis=1)  # rx re-prefills ALL
+        return c2c.generate(rx.cfg, rx.params, combined, gen_steps)
+
+    return {
+        "c2c_original_s": _timed(c2c_pipeline, prompts),
+        "c2c_rephrased_s": _timed(c2c_rephrased, prompts),
+        "t2t_s": _timed(t2t_pipeline, prompts),
+    }
+
+
+def run_analytic(seq: int = 64, gen_steps: int = 128) -> dict:
+    """Paper-dims analytic latency over a 100 Mbit/s edge link (QA-length
+    queries, matching the OpenBookQA workload of Fig. 3c)."""
+    rx = ZOO["receiver"]
+    txs = ZOO["transmitters"]
+    link = protocol.LinkModel(bandwidth_bps=12.5e6, rtt_s=0.02)
+    return {
+        "standalone_s": protocol.latency_standalone(rx, seq, gen_steps),
+        "c2c_s": protocol.latency_c2c(txs, rx, seq, gen_steps, link),
+        "t2t_s": protocol.latency_t2t(txs, rx, seq, gen_steps, link,
+                                      shared_tokens=gen_steps),
+    }
+
+
+def main() -> None:
+    m = run_measured()
+    for k, v in m.items():
+        print(f"fig3c_measured,{k},{v*1e3:.1f}ms")
+    a = run_analytic()
+    for k, v in a.items():
+        print(f"fig3c_analytic,{k},{v:.3f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Micro-benchmarks of the Pallas kernels (interpret mode on CPU — numbers are
+for relative tracking only; real perf comes from the dry-run roofline) and of
+their pure-jnp twins at case-study sizes."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _timed(fn, *args, repeat=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeat * 1e6  # us
+
+
+def run() -> list:
+    key = jax.random.PRNGKey(0)
+    rows = []
+    # fuser MLP at a 1k-token cache projection size
+    T_, d = 1024, 256
+    x = jax.random.normal(key, (T_, d), jnp.float32)
+    p = {f"w{i}": {"w": jax.random.normal(jax.random.fold_in(key, i),
+                                          (d, d), jnp.float32) * 0.05,
+                   "b": jnp.zeros((d,), jnp.float32)} for i in (1, 2, 3)}
+    rows.append(("fuser_mlp_pallas_interp", _timed(ops.fuser_mlp, p, x)))
+    rows.append(("fuser_mlp_jnp", _timed(
+        jax.jit(lambda xx: ref.fuser_mlp_ref(
+            xx, p["w1"]["w"], p["w1"]["b"], p["w2"]["w"], p["w2"]["b"],
+            p["w3"]["w"], p["w3"]["b"])), x)))
+    # decode attention at 4k cache
+    B, H, Hkv, S, hd = 2, 8, 2, 4096, 64
+    q = jax.random.normal(key, (B, H, hd), jnp.float32)
+    k = jax.random.normal(key, (B, Hkv, S, hd), jnp.float32)
+    v = jax.random.normal(key, (B, Hkv, S, hd), jnp.float32)
+    bias = jnp.zeros((B, S))
+    rows.append(("decode_attn_pallas_interp", _timed(ops.decode_attention, q, k, v, bias)))
+    rows.append(("decode_attn_jnp", _timed(
+        jax.jit(lambda *a: ref.decode_attention_ref(
+            a[0].reshape(B, Hkv, H // Hkv, hd), *a[1:])), q, k, v, bias)))
+    # int8-KV decode (quantised C2C serving path)
+    from repro.core import quant
+    qs = quant.quantize_stack({"k": k[None], "v": v[None]})
+    qstack = {kk: vv[0] for kk, vv in qs.items()}
+    rows.append(("decode_attn_q8_pallas_interp",
+                 _timed(lambda: ops.decode_attention_q8(q, qstack, bias))))
+    # banded SWA prefill vs dense-masked reference at window << S
+    Sb, w = 2048, 256
+    qb = jax.random.normal(key, (1, 4, Sb, 64), jnp.float32)
+    kb = jax.random.normal(key, (1, 4, Sb, 64), jnp.float32)
+    vb = jax.random.normal(key, (1, 4, Sb, 64), jnp.float32)
+    rows.append(("banded_swa_pallas_interp",
+                 _timed(lambda: ops.banded_attention(qb, kb, vb, window=w,
+                                                     block=256))))
+    rows.append(("swa_dense_masked_jnp", _timed(
+        jax.jit(lambda a, b, c: ref.banded_attention_ref(
+            a.reshape(4, Sb, 64), b.reshape(4, Sb, 64), c.reshape(4, Sb, 64),
+            window=w)), qb, kb, vb)))
+    return rows
+
+
+def main() -> None:
+    for name, us in run():
+        print(f"kernel,{name},{us:.0f},us_per_call")
+
+
+if __name__ == "__main__":
+    main()

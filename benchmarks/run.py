@@ -1,0 +1,46 @@
+"""Benchmark suite entry point: one module per paper table/figure.
+
+  fig3a_accuracy — Fig. 3(a): accuracy vs #transmitters (KV/Token × orig/reph)
+  fig3b_sharers  — Fig. 3(b): per-sharer contribution (in- vs off-domain)
+  fig3c_latency  — Fig. 3(c): latency C2C vs T2T (measured + analytic)
+  comm_table     — §Case Study byte counts (88 KB vs 16 B) + assigned archs
+  kernel_bench   — Pallas kernel micro-bench (interpret mode)
+
+Output: CSV-ish lines ``name,...`` on stdout. The case-study build (zoo +
+fuser training) runs once and is shared across the fig3* modules. Roofline
+numbers live in EXPERIMENTS.md §Roofline (produced by repro.launch.dryrun,
+not here).
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    import benchmarks.comm_table as comm
+    import benchmarks.kernel_bench as kb
+
+    t0 = time.time()
+    print("# comm_table")
+    comm.main()
+    print("# kernel_bench")
+    kb.main()
+
+    if "--fast" not in sys.argv:
+        import benchmarks.fig3a_accuracy as f3a
+        import benchmarks.fig3b_sharers as f3b
+        import benchmarks.fig3c_latency as f3c
+        print("# fig3a_accuracy (builds + trains the case study once)")
+        f3a.main()
+        print("# fig3b_sharers")
+        f3b.main()
+        print("# fig3c_latency")
+        f3c.main()
+    print(f"# total {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Long-context decode (the long_500k regime) at CPU scale: sliding-window
+ring-buffer caches (dense archs) and constant-size recurrent state (Mamba-2)
+make half-million-token decoding memory-feasible.
+
+Demonstrates, on reduced configs:
+  1. a windowed dense model decodes past 4x its window with an O(window) cache;
+  2. mamba2's state never grows;
+  3. decode past the window matches a teacher-forced full forward.
+
+Run:  PYTHONPATH=src python examples/long_context_decode.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_smoke_config
+from repro.models import transformer as T
+
+key = jax.random.PRNGKey(0)
+
+# --- dense arch in its long-context (sliding-window) variant ---------------
+cfg = get_smoke_config("qwen2.5-32b").with_overrides(
+    block_pattern=("swa",), sliding_window=16)
+params = T.init_params(cfg, key, jnp.float32)
+S, extra = 48, 24  # decode to 72 tokens with a 16-token window
+toks = jax.random.randint(key, (1, S + extra), 0, cfg.vocab_size)
+full, _ = T.forward(cfg, params, toks)
+_, cache = T.prefill(cfg, params, toks[:, :S], max_seq=S + extra,
+                     cache_dtype=jnp.float32)
+cache_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+errs = []
+for i in range(extra):
+    lg, cache = T.decode_step(cfg, params, cache, toks[:, S + i])
+    errs.append(float(jnp.abs(lg - full[:, S + i]).max()))
+print(f"[swa ] window=16 cache={cache_bytes/1024:.0f} KiB "
+      f"(vs {(S+extra)*cache_bytes/(16*1024):.0f} KiB unwindowed), "
+      f"decode-vs-teacher max err {max(errs):.2e}")
+
+# --- mamba2: O(1) state ------------------------------------------------------
+cfg = get_smoke_config("mamba2-130m")
+params = T.init_params(cfg, key, jnp.float32)
+toks = jax.random.randint(key, (1, S + extra), 0, cfg.vocab_size)
+full, _ = T.forward(cfg, params, toks)
+_, cache = T.prefill(cfg, params, toks[:, :S], max_seq=S + extra,
+                     cache_dtype=jnp.float32)
+state_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+errs = []
+for i in range(extra):
+    lg, cache = T.decode_step(cfg, params, cache, toks[:, S + i])
+    errs.append(float(jnp.abs(lg - full[:, S + i]).max()))
+print(f"[ssm ] state={state_bytes/1024:.0f} KiB (constant in context length), "
+      f"decode-vs-teacher max err {max(errs):.2e}")
+print("at full scale: see `python -m repro.launch.dryrun --shape long_500k`")

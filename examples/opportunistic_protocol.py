@@ -1,0 +1,28 @@
+"""Opportunistic protocol selection demo (paper §Possible Variants).
+
+Sweeps link bandwidth / QoS latency budgets for the paper's real case-study zoo
+(Qwen3-0.6B receiver + 4 transmitters) and prints which protocol the
+opportunistic controller picks — C2C when the pipe affords 86 KB/token,
+degrading to T2T then standalone as the link or the budget tightens.
+
+Run:  PYTHONPATH=src python examples/opportunistic_protocol.py
+"""
+from repro.configs.case_study import ZOO
+from repro.core import protocol
+
+rx = ZOO["receiver"]
+txs = ZOO["transmitters"]
+
+print(f"receiver {rx.name}; transmitters {[t.name for t in txs]}")
+print(f"{'bandwidth':>12} {'QoS budget':>10} {'chosen':>11} "
+      f"{'c2c_s':>8} {'t2t_s':>8} {'solo_s':>8}")
+for bw_mbps in (1, 10, 100, 1000, 10_000, 400_000):
+    for budget_s in (0.5, 2.0, 10.0):
+        link = protocol.LinkModel(bandwidth_bps=bw_mbps * 125_000, rtt_s=0.02)
+        qos = protocol.QoS(max_latency_s=budget_s)
+        r = protocol.choose_protocol(txs, rx, seq=512, gen_steps=128,
+                                     link=link, qos=qos)
+        lat = r["latencies"]
+        flag = "" if r["qos_met"] else "  (QoS infeasible -> fastest)"
+        print(f"{bw_mbps:>9}Mbps {budget_s:>9.1f}s {r['protocol']:>11} "
+              f"{lat['c2c']:8.2f} {lat['t2t']:8.2f} {lat['standalone']:8.2f}{flag}")

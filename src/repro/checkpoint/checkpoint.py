@@ -1,0 +1,95 @@
+"""Checkpointing without orbax: a pytree is flattened to numpy arrays stored in a
+single .npz plus a JSON manifest describing the tree structure and dtypes.
+
+Safe against pickle (arrays only), deterministic key ordering, supports nested
+dicts / lists / tuples / None leaves (None encoded in the manifest).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str, out: dict, manifest: list) -> None:
+    if tree is None:
+        manifest.append({"path": prefix, "kind": "none"})
+    elif isinstance(tree, dict):
+        manifest.append({"path": prefix, "kind": "dict",
+                         "keys": sorted(tree.keys())})
+        for k in sorted(tree.keys()):
+            _flatten(tree[k], f"{prefix}/{k}", out, manifest)
+    elif isinstance(tree, (list, tuple)):
+        manifest.append({"path": prefix,
+                         "kind": "list" if isinstance(tree, list) else "tuple",
+                         "len": len(tree)})
+        for i, v in enumerate(tree):
+            _flatten(v, f"{prefix}/{i}", out, manifest)
+    else:
+        arr = np.asarray(tree)
+        key = f"a{len(out)}"
+        dtype = str(arr.dtype)
+        if arr.dtype == np.dtype("O") or dtype in ("bfloat16", "float8_e4m3fn",
+                                                   "float8_e5m2", "float16"):
+            # ml_dtypes aren't numpy-native: store the raw bits (npz would
+            # otherwise fall back to pickled object arrays)
+            import ml_dtypes  # noqa: F401 - ensures dtype registry
+            arr = np.asarray(tree)
+            width = arr.dtype.itemsize
+            arr = arr.view({1: np.uint8, 2: np.uint16}[width])
+        out[key] = arr
+        manifest.append({"path": prefix, "kind": "leaf", "npz_key": key,
+                         "dtype": dtype})
+
+
+def _unflatten(manifest: list, arrays: dict, idx: list) -> Any:
+    entry = manifest[idx[0]]
+    idx[0] += 1
+    if entry["kind"] == "none":
+        return None
+    if entry["kind"] == "leaf":
+        arr = arrays[entry["npz_key"]]
+        dtype = entry.get("dtype", str(arr.dtype))
+        if dtype != str(arr.dtype):  # bit-stored ml_dtype: view back
+            import ml_dtypes
+            arr = arr.view(np.dtype(dtype))
+        return jnp.asarray(arr)
+    if entry["kind"] == "dict":
+        return {k: _unflatten(manifest, arrays, idx) for k in entry["keys"]}
+    n = entry["len"]
+    items = [_unflatten(manifest, arrays, idx) for _ in range(n)]
+    return items if entry["kind"] == "list" else tuple(items)
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tree = jax.tree.map(lambda a: a if a is None else np.asarray(a), tree,
+                        is_leaf=lambda x: x is None)
+    arrays: dict = {}
+    manifest: list = []
+    _flatten(tree, "", arrays, manifest)
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f)
+
+
+def load_pytree(path: str) -> Any:
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    with np.load(path + ".npz") as z:
+        arrays = {k: z[k] for k in z.files}
+    return _unflatten(manifest, arrays, [0])
+
+
+def save_train_state(path: str, step: int, params: Any, opt_state: Any,
+                     extra: dict | None = None) -> None:
+    save_pytree(path, {"step": np.asarray(step), "params": params,
+                       "opt_state": opt_state, "extra": extra or {}})
+
+
+def load_train_state(path: str) -> dict:
+    return load_pytree(path)

@@ -1,0 +1,246 @@
+"""Configuration system for the FedRefine framework.
+
+Every assigned architecture gets a module ``src/repro/configs/<id>.py`` exposing
+``CONFIG`` (the exact published dims) and ``smoke()`` (a reduced variant of the same
+family for CPU tests). ``get_config(name)`` resolves either.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned; see system brief).
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One benchmark input shape."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Model configuration.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description covering all six assigned families.
+
+    ``block_pattern`` cycles over layers; entries are:
+      "attn"  — full (causal) attention + FFN block
+      "swa"   — sliding-window attention + FFN block
+      "rec"   — RG-LRU recurrent block + FFN block (RecurrentGemma)
+      "ssd"   — Mamba-2 SSD block (attention-free, no separate FFN)
+    """
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    source: str = ""  # provenance citation
+
+    # --- attention options -------------------------------------------------
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 1_000_000.0
+    mrope_sections: Optional[Tuple[int, int, int]] = None  # qwen2-vl M-RoPE
+    sliding_window: int = 0  # >0: window for "swa" layers
+    tie_embeddings: bool = False
+
+    # --- long-context variant (used only for the long_500k shape on
+    # full-attention archs; see DESIGN.md §Arch-applicability) --------------
+    long_context_window: int = 4_096
+
+    # --- layer pattern ------------------------------------------------------
+    block_pattern: Tuple[str, ...] = ("attn",)
+
+    # --- MoE ----------------------------------------------------------------
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0
+    router_aux_coef: float = 0.001
+    moe_group_size: int = 512       # dispatch token-group (perf knob, §Perf B2)
+    moe_capacity_factor: float = 1.5
+
+    # --- RG-LRU (hybrid) ----------------------------------------------------
+    rglru_width: int = 0  # recurrence width (d_rnn); 0 -> d_model
+    conv_kernel: int = 4
+
+    # --- Mamba-2 SSD (ssm) --------------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_ngroups: int = 1
+
+    # --- modality frontend (stubbed per the brief) --------------------------
+    frontend: Optional[str] = None  # "audio" | "vision"
+
+    norm_eps: float = 1e-6
+
+    # ------------------------------------------------------------------ utils
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.num_heads if self.num_heads else 0
+
+    @property
+    def layer_types(self) -> Tuple[str, ...]:
+        """Per-layer block type, cycling ``block_pattern``."""
+        p = self.block_pattern
+        return tuple(p[i % len(p)] for i in range(self.num_layers))
+
+    @property
+    def attention_layers(self) -> Tuple[int, ...]:
+        """Indices of layers that own a KV cache (C2C attach points)."""
+        return tuple(
+            i for i, t in enumerate(self.layer_types) if t in ("attn", "swa")
+        )
+
+    @property
+    def d_inner(self) -> int:
+        """SSD inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_head_dim if self.ssm_state else 0
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.resolved_head_dim
+
+    def with_overrides(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6·N·D roofline sanity)."""
+        d, hd = self.d_model, self.resolved_head_dim
+        n = self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            n += self.vocab_size * d  # lm head
+        for t in self.layer_types:
+            if t in ("attn", "swa"):
+                n += d * (self.num_heads * hd)  # wq
+                n += 2 * d * (self.num_kv_heads * hd)  # wk, wv
+                n += (self.num_heads * hd) * d  # wo
+                if self.qkv_bias:
+                    n += (self.num_heads + 2 * self.num_kv_heads) * hd
+                n += self._ffn_params()
+                n += 2 * d  # norms
+            elif t == "rec":
+                w = self.rglru_width or d
+                nh = max(self.num_heads, 1)
+                n += 2 * d * w + w * d  # in-projs (x, gate) + out-proj
+                n += self.conv_kernel * w + w  # conv
+                n += 3 * w  # Λ + gate biases
+                n += 2 * nh * (w // nh) ** 2  # block-diagonal gate projections
+                n += self._ffn_params()
+                n += 2 * d
+            elif t == "ssd":
+                di, ns = self.d_inner, self.ssm_state
+                nh = self.ssm_nheads
+                n += d * (2 * di + 2 * self.ssm_ngroups * ns + nh)  # in_proj
+                n += self.conv_kernel * (di + 2 * self.ssm_ngroups * ns)
+                n += di * d  # out_proj
+                n += 2 * nh  # A_log, D
+                n += d  # norm
+        n += d  # final norm
+        return n
+
+    def _ffn_params(self) -> int:
+        d = self.d_model
+        if self.num_experts:
+            per_expert = 3 * d * self.moe_d_ff
+            n = self.num_experts * per_expert + d * self.num_experts  # router
+            if self.num_shared_experts:
+                n += 3 * d * (self.moe_d_ff * self.num_shared_experts)
+                n += d  # shared-expert gate
+            return n
+        return 3 * d * self.d_ff  # SwiGLU
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: routed top-k + shared only)."""
+        if not self.num_experts:
+            return self.param_count()
+        full = self.param_count()
+        d = self.d_model
+        per_expert = 3 * d * self.moe_d_ff
+        n_moe_layers = sum(1 for t in self.layer_types if t in ("attn", "swa"))
+        inactive = (
+            (self.num_experts - self.num_experts_per_tok) * per_expert * n_moe_layers
+        )
+        return full - inactive
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+
+ARCH_IDS: tuple[str, ...] = (
+    "qwen3_moe_30b_a3b",
+    "qwen2_5_32b",
+    "musicgen_large",
+    "granite_20b",
+    "recurrentgemma_9b",
+    "qwen2_vl_72b",
+    "internlm2_1_8b",
+    "mamba2_130m",
+    "qwen3_1_7b",
+    "qwen2_moe_a2_7b",
+)
+
+# CLI-friendly aliases (the assignment uses dashed ids).
+ALIASES = {
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "musicgen-large": "musicgen_large",
+    "granite-20b": "granite_20b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "mamba2-130m": "mamba2_130m",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+}
+
+
+def canonical(name: str) -> str:
+    return ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.smoke()
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

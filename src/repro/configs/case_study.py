@@ -1,0 +1,104 @@
+"""The paper's own case-study model zoo (§Case Study, Fig. 3).
+
+Receiver: Qwen3-0.6B. Transmitters: Qwen2.5-0.5B, Qwen2.5-0.5B-code (Qwen2.5-Coder),
+Qwen2.5-1.5B, Llama-3.2-1B. Published dims from the respective model cards.
+
+``tiny_zoo()`` returns CPU-trainable reductions of the same five *heterogeneous*
+families — distinct (num_layers, d_model, kv_heads) per member, which is exactly what
+exercises the heterogeneous fuser alignment — used by the simulated case study
+(DESIGN.md §1: repro band 2 — pretrained checkpoints unavailable offline).
+"""
+from repro.configs.base import ModelConfig
+
+QWEN3_0_6B = ModelConfig(
+    name="qwen3-0.6b",
+    family="dense",
+    num_layers=28,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=3072,
+    vocab_size=151_936,
+    qk_norm=True,
+    tie_embeddings=True,
+    source="hf:Qwen/Qwen3-0.6B",
+)
+
+QWEN2_5_0_5B = ModelConfig(
+    name="qwen2.5-0.5b",
+    family="dense",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab_size=151_936,
+    qkv_bias=True,
+    tie_embeddings=True,
+    source="hf:Qwen/Qwen2.5-0.5B",
+)
+
+QWEN2_5_0_5B_CODE = QWEN2_5_0_5B.with_overrides(
+    name="qwen2.5-0.5b-code", source="hf:Qwen/Qwen2.5-Coder-0.5B"
+)
+
+QWEN2_5_1_5B = ModelConfig(
+    name="qwen2.5-1.5b",
+    family="dense",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab_size=151_936,
+    qkv_bias=True,
+    tie_embeddings=True,
+    source="hf:Qwen/Qwen2.5-1.5B",
+)
+
+LLAMA_3_2_1B = ModelConfig(
+    name="llama-3.2-1b",
+    family="dense",
+    num_layers=16,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=128_256,
+    rope_theta=500_000.0,
+    tie_embeddings=True,
+    source="hf:meta-llama/Llama-3.2-1B",
+)
+
+ZOO = {
+    "receiver": QWEN3_0_6B,
+    "transmitters": [QWEN2_5_0_5B, QWEN2_5_0_5B_CODE, QWEN2_5_1_5B, LLAMA_3_2_1B],
+}
+
+
+def tiny_zoo(vocab_size: int = 512) -> dict:
+    """Heterogeneous CPU-scale reductions of the same five families.
+
+    Deliberately *different* depth / width / kv layout per member so the
+    LayerAlignment + fuser dimension handling is genuinely exercised.
+    """
+    rx = QWEN3_0_6B.with_overrides(
+        name="tiny-qwen3-rx", num_layers=4, d_model=128, num_heads=4,
+        num_kv_heads=2, head_dim=32, d_ff=256, vocab_size=vocab_size)
+    t1 = QWEN2_5_0_5B.with_overrides(
+        name="tiny-qwen25-t1", num_layers=3, d_model=96, num_heads=4,
+        num_kv_heads=2, head_dim=24, d_ff=192, vocab_size=vocab_size)
+    t2 = QWEN2_5_0_5B_CODE.with_overrides(
+        name="tiny-qwen25code-t2", num_layers=3, d_model=96, num_heads=4,
+        num_kv_heads=2, head_dim=24, d_ff=192, vocab_size=vocab_size)
+    t3 = QWEN2_5_1_5B.with_overrides(
+        name="tiny-qwen25-t3", num_layers=5, d_model=160, num_heads=4,
+        num_kv_heads=1, head_dim=40, d_ff=320, vocab_size=vocab_size)
+    t4 = LLAMA_3_2_1B.with_overrides(
+        name="tiny-llama-t4", num_layers=2, d_model=192, num_heads=6,
+        num_kv_heads=3, head_dim=32, d_ff=384, vocab_size=vocab_size)
+    return {"receiver": rx, "transmitters": [t1, t2, t3, t4]}

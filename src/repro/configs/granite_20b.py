@@ -1,0 +1,32 @@
+"""Granite-20B code model backbone [arXiv:2405.04324].
+
+52L d_model=6144 48H (MQA kv=1) d_ff=24576 vocab=49152; llama-style blocks.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-20b",
+    family="dense",
+    num_layers=52,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,
+    head_dim=128,
+    d_ff=24_576,
+    vocab_size=49_152,
+    rope_theta=10_000.0,
+    source="arXiv:2405.04324",
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_overrides(
+        name="granite-20b-smoke",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=1,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=256,
+    )

@@ -1,0 +1,32 @@
+"""InternLM2-1.8B [arXiv:2403.17297].
+
+24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92544.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-1.8b",
+    family="dense",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=92_544,
+    rope_theta=1_000_000.0,
+    source="arXiv:2403.17297",
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_overrides(
+        name="internlm2-1.8b-smoke",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=256,
+    )

@@ -1,0 +1,41 @@
+"""Mamba2-130M (SSD, state-space duality) [arXiv:2405.21060].
+
+24L d_model=768, attention-free, ssm_state=128, expand=2 (d_inner=1536),
+ssd head_dim=64 (24 ssd heads), vocab=50280.
+
+C2C applicability: the paper's KV-cache medium does not exist here — see
+DESIGN.md §Arch-applicability. The arch runs WITHOUT the paper's technique;
+a clearly-marked beyond-paper state-to-state fuser is available separately.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    num_layers=24,
+    d_model=768,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50_280,
+    block_pattern=("ssd",),
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_ngroups=1,
+    conv_kernel=4,
+    tie_embeddings=True,
+    source="arXiv:2405.21060",
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_overrides(
+        name="mamba2-130m-smoke",
+        num_layers=2,
+        d_model=128,
+        ssm_state=32,
+        ssm_head_dim=32,
+        vocab_size=256,
+    )

@@ -1,0 +1,35 @@
+"""MusicGen-large decoder backbone [arXiv:2306.05284].
+
+48L d_model=2048 32H (kv=32, i.e. MHA) d_ff=8192, vocab=2048 EnCodec codebook.
+Decoder-only transformer over EnCodec tokens; the EnCodec conv codec frontend is a
+stub per the brief — ``input_specs`` provides precomputed frame embeddings.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    family="audio",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=2048,
+    rope_theta=10_000.0,
+    frontend="audio",
+    source="arXiv:2306.05284",
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_overrides(
+        name="musicgen-large-smoke",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=256,
+    )

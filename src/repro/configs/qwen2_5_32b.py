@@ -1,0 +1,33 @@
+"""Qwen2.5-32B [hf:Qwen/Qwen2.5-0.5B family card].
+
+64L d_model=5120 40H (GQA kv=8) d_ff=27648 vocab=152064; QKV bias (Qwen2 family).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=27_648,
+    vocab_size=152_064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    source="hf:Qwen/Qwen2.5-0.5B",
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_overrides(
+        name="qwen2.5-32b-smoke",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=256,
+    )

@@ -1,0 +1,41 @@
+"""Qwen2(1.5)-MoE-A2.7B [hf:Qwen/Qwen1.5-MoE-A2.7B].
+
+24L d_model=2048 16H (GQA kv=16, i.e. MHA) expert d_ff=1408 vocab=151936,
+60 routed experts top-4 plus 4 shared experts.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=0,
+    moe_d_ff=1408,
+    num_experts=60,
+    num_experts_per_tok=4,
+    num_shared_experts=4,
+    vocab_size=151_936,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_overrides(
+        name="qwen2-moe-a2.7b-smoke",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=32,
+        moe_d_ff=64,
+        num_experts=4,
+        num_experts_per_tok=2,
+        num_shared_experts=1,
+        vocab_size=256,
+    )

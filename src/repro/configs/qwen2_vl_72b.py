@@ -1,0 +1,38 @@
+"""Qwen2-VL-72B language backbone [arXiv:2409.12191].
+
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064, M-RoPE (sections 16/24/24),
+dynamic-resolution vision frontend stubbed per the brief (patch embeddings provided
+by ``input_specs``).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=29_568,
+    vocab_size=152_064,
+    qkv_bias=True,
+    mrope_sections=(16, 24, 24),
+    rope_theta=1_000_000.0,
+    frontend="vision",
+    source="arXiv:2409.12191",
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_overrides(
+        name="qwen2-vl-72b-smoke",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=256,
+        mrope_sections=(4, 6, 6),
+    )

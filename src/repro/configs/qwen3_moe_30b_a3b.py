@@ -1,0 +1,39 @@
+"""Qwen3-MoE-30B-A3B [hf:Qwen/Qwen3-30B-A3B].
+
+48L d_model=2048 32H (GQA kv=4) expert d_ff=768, vocab 151936, 128 experts top-8,
+qk_norm (Qwen3 family), explicit head_dim=128.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=0,
+    moe_d_ff=768,
+    num_experts=128,
+    num_experts_per_tok=8,
+    vocab_size=151_936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    source="hf:Qwen/Qwen3-30B-A3B",
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_overrides(
+        name="qwen3-moe-30b-a3b-smoke",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=32,
+        moe_d_ff=64,
+        num_experts=4,
+        num_experts_per_tok=2,
+        vocab_size=256,
+    )

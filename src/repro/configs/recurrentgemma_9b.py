@@ -1,0 +1,41 @@
+"""RecurrentGemma-9B (Griffin) [arXiv:2402.19427].
+
+38L d_model=4096 16H (MQA kv=1 for local attention) d_ff=12288 vocab=256000.
+Pattern: two RG-LRU recurrent blocks then one local-attention block (1:2),
+sliding window 2048, head_dim 256, recurrence width 4096.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=12_288,
+    vocab_size=256_000,
+    block_pattern=("rec", "rec", "swa"),
+    sliding_window=2048,
+    rglru_width=4096,
+    conv_kernel=4,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    source="arXiv:2402.19427",
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.with_overrides(
+        name="recurrentgemma-9b-smoke",
+        num_layers=3,  # one full (rec, rec, swa) period
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=1,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=256,
+        sliding_window=32,
+        rglru_width=128,
+    )

@@ -1,0 +1,109 @@
+"""Cache-to-Cache decode (Eqs. 1–2): unidirectional and bidirectional C2C.
+
+The receiver decodes conditioned on C(F_ij, M_i) ∘ C(M_j): the transmitter's KV
+cache, projected through the fuser, prepended sequence-wise to the receiver's own
+cache. Because the fused cache arrives *as a cache* (not as tokens), the receiver
+skips the prefill that T2T would need — the paper's central latency claim, which
+benchmarks/fig3c_latency.py quantifies.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import fuser as F
+from repro.models import transformer as T
+from repro.models.cache import attn_kv_stack, extra_kv_layers
+
+
+def fused_prefix(
+    fusers: List[dict],
+    cfg_txs: List[ModelConfig],
+    cfg_rx: ModelConfig,
+    tx_stacks: List[dict],
+    *,
+    gating: Optional[dict] = None,
+    use_kernel: bool = False,
+) -> dict:
+    """Project every transmitter stack into receiver space and concatenate
+    sequence-wise (Eq. 4's C(F_{j1 i}) ∘ … ∘ C(F_{js i}))."""
+    from repro.core.gating import apply_gates
+
+    projected = [
+        F.project_cache(fz, ct, cfg_rx, st, use_kernel=use_kernel)
+        for fz, ct, st in zip(fusers, cfg_txs, tx_stacks)
+    ]
+    if gating is not None:
+        projected = apply_gates(gating, projected)
+    return {
+        "k": jnp.concatenate([p["k"] for p in projected], axis=-2),
+        "v": jnp.concatenate([p["v"] for p in projected], axis=-2),
+        "bias": jnp.concatenate([p["bias"] for p in projected], axis=-1),
+    }
+
+
+def c2c_forward(
+    cfg_rx: ModelConfig,
+    params_rx: dict,
+    tokens: jax.Array,
+    fused: dict,  # fused prefix stack (n_rx, B, Hkv, Sf, hd)
+) -> Tuple[jax.Array, jax.Array]:
+    """Teacher-forced receiver forward with a fused-cache prefix (fuser training
+    and accuracy eval both use this). Returns (logits, aux)."""
+    return T.forward(cfg_rx, params_rx, tokens,
+                     extra_kv=extra_kv_layers(cfg_rx, fused))
+
+
+def c2c_decode_step(
+    cfg_rx: ModelConfig,
+    params_rx: dict,
+    cache: dict,
+    token: jax.Array,
+    fused: dict,
+) -> Tuple[jax.Array, dict]:
+    """Eq. 1: one receiver decode step attending over fused ∘ own caches."""
+    return T.decode_step(cfg_rx, params_rx, cache, token,
+                         extra_kv=extra_kv_layers(cfg_rx, fused))
+
+
+def generate(
+    cfg: ModelConfig,
+    params: dict,
+    prompt: jax.Array,  # (B, S) int32
+    steps: int,
+    *,
+    fused: Optional[dict] = None,
+    max_seq: Optional[int] = None,
+) -> jax.Array:
+    """Greedy generation, optionally C2C-refined. Returns (B, steps) tokens."""
+    B, S = prompt.shape
+    max_seq = max_seq or S + steps
+    ek = extra_kv_layers(cfg, fused) if fused is not None else None
+    logits, cache = T.prefill(cfg, params, prompt, max_seq=max_seq, extra_kv=ek)
+    tok = jnp.argmax(logits[:, -1], axis=-1)
+    out = [tok]
+    for _ in range(steps - 1):
+        lg, cache = T.decode_step(cfg, params, cache, tok, extra_kv=ek)
+        tok = jnp.argmax(lg, axis=-1)
+        out.append(tok)
+    return jnp.stack(out, axis=1)
+
+
+def bidirectional_step(
+    cfg_i: ModelConfig, params_i: dict, cache_i: dict, tok_i: jax.Array,
+    cfg_j: ModelConfig, params_j: dict, cache_j: dict, tok_j: jax.Array,
+    fuser_ij: dict, fuser_ji: dict,
+) -> Tuple[Tuple[jax.Array, dict], Tuple[jax.Array, dict]]:
+    """Co-C2C (Eq. 2/3): both models decode one token, each refined by the
+    other's *current* cache — the dual-role transmitter/receiver step."""
+    stack_i = attn_kv_stack(cfg_i, cache_i)
+    stack_j = attn_kv_stack(cfg_j, cache_j)
+    fused_for_j = F.project_cache(fuser_ij, cfg_i, cfg_j, stack_i)
+    fused_for_i = F.project_cache(fuser_ji, cfg_j, cfg_i, stack_j)
+    out_j = c2c_decode_step(cfg_j, params_j, cache_j, tok_j, fused_for_j)
+    out_i = c2c_decode_step(cfg_i, params_i, cache_i, tok_i, fused_for_i)
+    return out_i, out_j

@@ -1,0 +1,44 @@
+"""Communication-load accounting (paper §Case Study: "transmitting the KV cache
+for a single token requires 88 KB, whereas T2T requires only 16 bytes").
+
+These are the byte counts the opportunistic protocol (protocol.py) trades against
+latency, and the quantities the ICI roofline term measures when federation
+participants are mapped onto mesh slices (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.configs.base import ModelConfig
+from repro.models.cache import cache_bytes_per_token
+
+
+def c2c_bytes_per_token(cfg_tx: ModelConfig, dtype_bytes: int = 2) -> int:
+    """KV bytes one transmitter ships per cached token (k + v, all attn layers)."""
+    return cache_bytes_per_token(cfg_tx, dtype_bytes)
+
+
+def c2c_bytes_total(cfg_txs: List[ModelConfig], seq_len: int,
+                    dtype_bytes: int = 2) -> int:
+    return sum(c2c_bytes_per_token(c, dtype_bytes) for c in cfg_txs) * seq_len
+
+
+def t2t_bytes_per_token(token_bytes: int = 4) -> int:
+    """A token id on the wire (the paper counts 4 B/token/model; 4 models = 16 B)."""
+    return token_bytes
+
+
+def t2t_bytes_total(n_tx: int, tokens_per_tx: int, token_bytes: int = 4) -> int:
+    return n_tx * tokens_per_tx * token_bytes
+
+
+def paper_case_study_bytes(dtype_bytes: int = 2) -> dict:
+    """Reproduces the paper's 88 KB-vs-16 B comparison from the published dims."""
+    from repro.configs.case_study import ZOO
+
+    per_tx = {c.name: c2c_bytes_per_token(c, dtype_bytes) for c in ZOO["transmitters"]}
+    return {
+        "per_transmitter_bytes": per_tx,
+        "c2c_total_per_token": sum(per_tx.values()),
+        "t2t_total_per_token": t2t_bytes_per_token() * len(per_tx),
+    }

@@ -1,0 +1,165 @@
+"""FedRefine — the paper's federated-inference orchestrator (Fig. 2, Eq. 4).
+
+A ``FedRefineSystem`` holds N heterogeneous participants, the server-side fuser
+registry, per-receiver gating networks, and a task-affinity scheduler ("the
+receiver model selects different model combinations according to the different
+tasks", §Case Study). One refined inference:
+
+  1. privacy: every participant receives its own rephrased prompt,
+  2. transmitters prefill locally and export their KV stacks,
+  3. the server (here: receiver-side) projects each stack through F_{j,i},
+  4. gating weighs each fused cache,
+  5. the receiver decodes per Eq. 4 over [fused_1 ∘ … ∘ fused_s ∘ own].
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import c2c
+from repro.core.privacy import ParaphraseChannel, identity_channel
+from repro.core.registry import FuserRegistry
+from repro.models import transformer as T
+from repro.models.cache import attn_kv_stack, extra_kv_layers
+
+
+@dataclass
+class Participant:
+    name: str
+    cfg: ModelConfig
+    params: dict
+
+
+@dataclass
+class FedRefineSystem:
+    participants: Dict[str, Participant]
+    registry: FuserRegistry
+    channel: Optional[ParaphraseChannel] = None
+    # task -> preferred transmitter names, best first (the case-study prior)
+    task_affinity: Dict[str, List[str]] = field(default_factory=dict)
+
+    # ------------------------------------------------------------- setup
+    @classmethod
+    def build(cls, members: Sequence[Participant],
+              channel: Optional[ParaphraseChannel] = None) -> "FedRefineSystem":
+        reg = FuserRegistry({m.name: m.cfg for m in members})
+        reg.ensure_all_pairs()
+        return cls({m.name: m for m in members}, reg, channel)
+
+    # ------------------------------------------------------------- scheduling
+    def schedule(self, task: str, receiver: str, n_tx: int) -> List[str]:
+        """Pick transmitters for ``task`` (affinity order, else registry order)."""
+        prefs = self.task_affinity.get(task, [])
+        cands = [n for n in prefs if n != receiver and n in self.participants]
+        cands += [n for n in self.participants
+                  if n != receiver and n not in cands
+                  and (n, receiver) in self.registry.fusers]
+        return [n for n in cands if (n, receiver) in self.registry.fusers][:n_tx]
+
+    # ------------------------------------------------------------- inference
+    def rephrase(self, tokens: jax.Array, key) -> jax.Array:
+        if self.channel is None:
+            return tokens
+        return self.channel.rephrase(tokens, key)
+
+    def transmit_stacks(self, tx_names: List[str], prompts: Dict[str, jax.Array]):
+        """Step 2: local prefill at each transmitter; export KV stacks."""
+        stacks = []
+        for n in tx_names:
+            p = self.participants[n]
+            S = prompts[n].shape[1]
+            _, cache = T.prefill(p.cfg, p.params, prompts[n], max_seq=S)
+            stacks.append(attn_kv_stack(p.cfg, cache, length=S))
+        return stacks
+
+    def fused_prefix(self, receiver: str, tx_names: List[str],
+                     stacks: List[dict], *, gated: bool = True,
+                     use_kernel: bool = False) -> dict:
+        rxp = self.participants[receiver]
+        fusers = [self.registry.get(n, receiver) for n in tx_names]
+        cfg_txs = [self.participants[n].cfg for n in tx_names]
+        gating = self.registry.ensure_gating(receiver) if gated else None
+        return c2c.fused_prefix(fusers, cfg_txs, rxp.cfg, stacks,
+                                gating=gating, use_kernel=use_kernel)
+
+    def refine_generate(
+        self,
+        receiver: str,
+        prompt: jax.Array,  # receiver-side (already rephrased) prompt (B, S)
+        steps: int,
+        *,
+        task: str = "default",
+        n_tx: int = 1,
+        tx_prompts: Optional[Dict[str, jax.Array]] = None,
+        key: Optional[jax.Array] = None,
+        gated: bool = True,
+    ) -> dict:
+        """Full FedRefine inference (Eq. 4). Returns tokens + diagnostics."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        tx_names = self.schedule(task, receiver, n_tx)
+        if tx_prompts is None:
+            tx_prompts = {
+                n: self.rephrase(prompt, jax.random.fold_in(key, i))
+                for i, n in enumerate(tx_names)
+            }
+        stacks = self.transmit_stacks(tx_names, tx_prompts)
+        rxp = self.participants[receiver]
+        if tx_names:
+            fused = self.fused_prefix(receiver, tx_names, stacks, gated=gated)
+            toks = c2c.generate(rxp.cfg, rxp.params, prompt, steps, fused=fused)
+        else:
+            toks = c2c.generate(rxp.cfg, rxp.params, prompt, steps)
+        from repro.core import commload
+        return {
+            "tokens": toks,
+            "transmitters": tx_names,
+            "c2c_bytes": sum(
+                commload.c2c_bytes_per_token(self.participants[n].cfg)
+                for n in tx_names),
+        }
+
+    # ---------------------------------------------------- opportunistic serve
+    def serve_opportunistic(
+        self,
+        receiver: str,
+        prompt: jax.Array,
+        steps: int,
+        *,
+        link,  # core.protocol.LinkModel
+        qos,  # core.protocol.QoS
+        task: str = "default",
+        n_tx: int = 1,
+        key: Optional[jax.Array] = None,
+    ) -> dict:
+        """Paper §Possible Variants: pick C2C vs T2T vs standalone per the
+        current link + QoS, then execute that protocol end to end."""
+        from repro.core import protocol, t2t
+
+        key = key if key is not None else jax.random.PRNGKey(0)
+        tx_names = self.schedule(task, receiver, n_tx)
+        rxp = self.participants[receiver]
+        cfg_txs = [self.participants[n].cfg for n in tx_names]
+        decision = protocol.choose_protocol(
+            cfg_txs, rxp.cfg, seq=int(prompt.shape[1]), gen_steps=steps,
+            link=link, qos=qos)
+        proto = decision["protocol"] if tx_names else "standalone"
+
+        if proto == "c2c":
+            out = self.refine_generate(receiver, prompt, steps, task=task,
+                                       n_tx=n_tx, key=key)
+            toks = out["tokens"]
+        elif proto == "t2t":
+            shared = []
+            for i, n in enumerate(tx_names):
+                p = self.participants[n]
+                tp = self.rephrase(prompt, jax.random.fold_in(key, i))
+                shared.append(t2t.t2t_exchange(p.cfg, p.params, tp, steps))
+            toks = t2t.t2t_generate(rxp.cfg, rxp.params, prompt, shared, steps)
+        else:
+            toks = c2c.generate(rxp.cfg, rxp.params, prompt, steps)
+        return {"tokens": toks, "protocol": proto, "decision": decision,
+                "transmitters": tx_names if proto != "standalone" else []}

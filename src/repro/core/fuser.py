@@ -1,0 +1,182 @@
+"""Per-layer KV-cache fusers F_ij — the paper's central mechanism.
+
+A fuser projects the transmitter's KV cache into the receiver's KV space,
+layer-by-layer "from the bottom up" (paper §Case Study): receiver attention layer
+r is paired with a transmitter attention layer via a ``LayerAlignment``; a
+three-layer MLP (per receiver layer) maps each cached token's concatenated
+(k, v) vector from transmitter dims (2·Hkv_t·hd_t) to receiver dims
+(2·Hkv_r·hd_r). All receiver layers share one stacked parameter pytree and are
+applied with vmap — on TPU the projection runs through the fused Pallas kernel
+(kernels/fuser_mlp.py); this module is the reference/jnp path and the owner of
+parameter/alignment logic.
+
+Heterogeneity handling (the paper's "model-agnostic" claim):
+  * different layer counts  -> alignment map (bottom-up clip or proportional)
+  * different kv dims/heads -> MLP input/output dims differ per model pair
+  * attention-free models   -> ``InapplicableError`` (DESIGN.md §Arch-applicability)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Literal, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+class InapplicableError(TypeError):
+    """The paper's KV medium does not exist for this architecture family."""
+
+
+# ------------------------------------------------------------------ alignment
+
+
+@dataclass(frozen=True)
+class LayerAlignment:
+    """Map receiver attention-layer rank -> transmitter attention-layer rank."""
+
+    rx_layers: int
+    tx_layers: int
+    mode: Literal["bottom_up", "proportional"] = "bottom_up"
+
+    @property
+    def table(self) -> Tuple[int, ...]:
+        if self.mode == "bottom_up":
+            # paper: align layer-by-layer from the bottom; clip at tx depth
+            return tuple(min(r, self.tx_layers - 1) for r in range(self.rx_layers))
+        return tuple(
+            min(r * self.tx_layers // self.rx_layers, self.tx_layers - 1)
+            for r in range(self.rx_layers)
+        )
+
+
+def make_alignment(cfg_tx: ModelConfig, cfg_rx: ModelConfig,
+                   mode: str = "bottom_up") -> LayerAlignment:
+    n_tx, n_rx = len(cfg_tx.attention_layers), len(cfg_rx.attention_layers)
+    if n_tx == 0:
+        raise InapplicableError(
+            f"{cfg_tx.name} is attention-free ({cfg_tx.family}); it has no KV cache "
+            "to transmit — the paper's C2C medium is inapplicable "
+            "(DESIGN.md §Arch-applicability).")
+    if n_rx == 0:
+        raise InapplicableError(
+            f"{cfg_rx.name} is attention-free ({cfg_rx.family}); it cannot consume "
+            "a fused KV cache.")
+    return LayerAlignment(n_rx, n_tx, mode)  # type: ignore[arg-type]
+
+
+# ------------------------------------------------------------------ params
+
+
+def fuser_dims(cfg_tx: ModelConfig, cfg_rx: ModelConfig,
+               hidden: int = 0) -> Tuple[int, int, int]:
+    d_in = 2 * cfg_tx.kv_dim
+    d_out = 2 * cfg_rx.kv_dim
+    d_h = hidden or max(d_in, d_out)
+    return d_in, d_h, d_out
+
+
+def init_fuser(cfg_tx: ModelConfig, cfg_rx: ModelConfig, key, *,
+               hidden: int = 0, alignment: str = "bottom_up",
+               dtype=jnp.float32) -> dict:
+    """Stacked 3-layer MLPs: one per receiver attention layer, + per-layer gates."""
+    align = make_alignment(cfg_tx, cfg_rx, alignment)
+    d_in, d_h, d_out = fuser_dims(cfg_tx, cfg_rx, hidden)
+    n = align.rx_layers
+
+    def one(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "w1": L.init_linear(k1, d_in, d_h, bias=True, dtype=dtype),
+            "w2": L.init_linear(k2, d_h, d_h, bias=True, dtype=dtype),
+            "w3": L.init_linear(k3, d_h, d_out, bias=True, dtype=dtype),
+        }
+
+    mlps = jax.vmap(one)(jax.random.split(key, n))
+    return {
+        "mlp": mlps,  # stacked over rx attention layers
+        # per-layer scalar gate, pre-sigmoid; init -1 => gate ≈ 0.27 (gentle start)
+        "gate": jnp.full((n,), -1.0, jnp.float32),
+        # alignment table as an int32 leaf so the whole fuser is one jit-able pytree
+        "align": jnp.asarray(align.table, jnp.int32),
+    }
+
+
+# ------------------------------------------------------------------ apply
+
+
+def _mlp(p, x):
+    h = jax.nn.silu(L.linear(p["w1"], x))
+    h = jax.nn.silu(L.linear(p["w2"], h))
+    return L.linear(p["w3"], h)
+
+
+def project_cache(
+    fuser: dict,
+    cfg_tx: ModelConfig,
+    cfg_rx: ModelConfig,
+    tx_stack: dict,  # {"k","v"}: (n_tx, B, Hkv_t, S, hd_t)
+    *,
+    use_kernel: bool = False,
+) -> dict:
+    """Project a transmitter KV stack into receiver space: Eq. 1's C(F_ij, M_i).
+
+    Returns {"k","v","bias"}: k/v (n_rx, B, Hkv_r, S, hd_r) plus a per-layer,
+    per-position attention-logit bias (n_rx, B, S) = log σ(gate). The gate acts
+    multiplicatively on the *attention mass* of fused tokens: gate→0 recovers
+    standalone inference exactly (a property tests pin down), gate→1 recovers the
+    paper's plain concatenation.
+    """
+    n_tx, B, Ht, S, hdt = tx_stack["k"].shape
+    align = fuser["align"]  # (n_rx,)
+    # gather transmitter layers for each receiver layer
+    k_sel = tx_stack["k"][align]  # (n_rx, B, Ht, S, hdt)
+    v_sel = tx_stack["v"][align]
+    x = jnp.concatenate(
+        [
+            k_sel.transpose(0, 1, 3, 2, 4).reshape(len(align), B, S, Ht * hdt),
+            v_sel.transpose(0, 1, 3, 2, 4).reshape(len(align), B, S, Ht * hdt),
+        ],
+        axis=-1,
+    )  # (n_rx, B, S, 2*kv_t)
+
+    if use_kernel:
+        from repro.kernels.ops import fuser_mlp
+        y = jax.vmap(fuser_mlp)(fuser["mlp"], x)
+    else:
+        y = jax.vmap(_mlp)(fuser["mlp"], x)  # (n_rx, B, S, 2*kv_r)
+
+    Hr, hdr = cfg_rx.num_kv_heads, cfg_rx.resolved_head_dim
+    k_hat, v_hat = jnp.split(y, 2, axis=-1)
+    k_hat = k_hat.reshape(len(align), B, S, Hr, hdr).transpose(0, 1, 3, 2, 4)
+    v_hat = v_hat.reshape(len(align), B, S, Hr, hdr).transpose(0, 1, 3, 2, 4)
+    # log σ(gate) = -softplus(-gate): numerically safe even for very closed gates
+    log_g = -jax.nn.softplus(-fuser["gate"].astype(jnp.float32))
+    bias = jnp.broadcast_to(log_g[:, None, None], (len(align), B, S))
+    return {"k": k_hat, "v": v_hat, "bias": bias}
+
+
+def mix_cache(
+    fuser: dict,
+    cfg_tx: ModelConfig,
+    cfg_rx: ModelConfig,
+    tx_stack: dict,
+    rx_stack: dict,  # receiver's own stack, same S
+    *,
+    use_kernel: bool = False,
+) -> dict:
+    """Per-position gated mixing (the case-study variant: "the receiver mixes the
+    projected KV cache with its own"). Requires equal cached lengths.
+
+    k' = (1-g)·k_own + g·k̂ ; v' likewise. Returns receiver-shaped stack.
+    """
+    proj = project_cache(fuser, cfg_tx, cfg_rx, tx_stack, use_kernel=use_kernel)
+    g = jax.nn.sigmoid(fuser["gate"].astype(jnp.float32))[:, None, None, None, None]
+    g = g.astype(rx_stack["k"].dtype)
+    return {
+        "k": (1 - g) * rx_stack["k"] + g * proj["k"],
+        "v": (1 - g) * rx_stack["v"] + g * proj["v"],
+    }

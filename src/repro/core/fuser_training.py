@@ -1,0 +1,113 @@
+"""Fuser (+ gating) pre-training — "the pre-training of each fuser is conducted
+separately for each pair of LLM collaboration" (paper §FedRefine, ref. Fu et al.).
+
+Both endpoint models are FROZEN; only the fuser MLPs, per-layer gates and the
+receiver's gating network train. The objective is teacher-forced LM loss of the
+*receiver* decoding with the fused prefix visible:
+
+    L(F_ij) = CE( P_j( y | C(F_ij, M_i) ∘ C(M_j) ), y* )
+
+computed on a general corpus (paper: OpenHermes-2.5; here the synthetic
+knowledge-partitioned stream). Because the transmitter prefill is loss-free, the
+tx KV stack is computed under ``stop_gradient`` once per batch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import c2c
+from repro.core import fuser as F
+from repro.models import transformer as T
+from repro.models.cache import attn_kv_stack, extra_kv_layers
+from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state
+
+
+def fused_loss(
+    fuser: dict,
+    cfg_tx: ModelConfig,
+    cfg_rx: ModelConfig,
+    params_rx: dict,
+    tx_stack: dict,
+    tokens: jax.Array,
+    labels: jax.Array,
+    gating: Optional[dict] = None,
+) -> jax.Array:
+    """CE of the receiver with the fused prefix (models frozen)."""
+    fused = F.project_cache(fuser, cfg_tx, cfg_rx, tx_stack)
+    if gating is not None:
+        from repro.core.gating import apply_gates
+        fused = apply_gates(gating, [fused])[0]
+    logits, _ = c2c.c2c_forward(cfg_rx, jax.lax.stop_gradient(params_rx),
+                                tokens, fused)
+    logits = logits.astype(jnp.float32)
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1)
+
+
+def make_fuser_train_step(cfg_tx: ModelConfig, cfg_rx: ModelConfig,
+                          params_tx: dict, params_rx: dict,
+                          opt_cfg: AdamWConfig, *, train_gating: bool = False):
+    """Returns jit-ed ``step((fuser, gating), opt_state, batch) -> (..., loss)``.
+
+    ``batch`` = {"tx_tokens", "rx_tokens", "labels"} — tx/rx see *different
+    rephrasings* of the same example (the privacy-preserving regime)."""
+
+    def loss_fn(trainable, batch):
+        fuser, gating = trainable
+        S = batch["tx_tokens"].shape[1]
+        _, tx_cache = T.prefill(cfg_tx, jax.lax.stop_gradient(params_tx),
+                                batch["tx_tokens"], max_seq=S)
+        tx_stack = jax.lax.stop_gradient(attn_kv_stack(cfg_tx, tx_cache, length=S))
+        return fused_loss(fuser, cfg_tx, cfg_rx, params_rx, tx_stack,
+                          batch["rx_tokens"], batch["labels"],
+                          gating if train_gating else None)
+
+    @jax.jit
+    def step(trainable, opt_state, batch):
+        # allow_int: the fuser carries an int32 alignment table (non-trainable;
+        # the optimizer skips non-float leaves)
+        loss, grads = jax.value_and_grad(loss_fn, allow_int=True)(trainable, batch)
+        new_t, new_s = apply_updates(opt_cfg, trainable, grads, opt_state)
+        return new_t, new_s, loss
+
+    return step
+
+
+def train_fuser(
+    cfg_tx: ModelConfig,
+    cfg_rx: ModelConfig,
+    params_tx: dict,
+    params_rx: dict,
+    batches: Iterator[dict],
+    steps: int,
+    *,
+    key=None,
+    lr: float = 3e-4,
+    gating: Optional[dict] = None,
+    log_every: int = 50,
+    verbose: bool = False,
+) -> Tuple[dict, Optional[dict], list]:
+    """Convenience driver. Returns (fuser, gating, loss history)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    fuser = F.init_fuser(cfg_tx, cfg_rx, key)
+    opt_cfg = AdamWConfig(lr=lr, schedule="cosine", total_steps=steps)
+    trainable = (fuser, gating)
+    opt_state = init_opt_state(trainable)
+    step_fn = make_fuser_train_step(cfg_tx, cfg_rx, params_tx, params_rx,
+                                    opt_cfg, train_gating=gating is not None)
+    hist = []
+    for i in range(steps):
+        batch = next(batches)
+        trainable, opt_state, loss = step_fn(trainable, opt_state, batch)
+        hist.append(float(loss))
+        if verbose and (i % log_every == 0 or i == steps - 1):
+            print(f"  fuser[{cfg_tx.name}->{cfg_rx.name}] step {i:4d} loss {loss:.4f}")
+    return trainable[0], trainable[1], hist

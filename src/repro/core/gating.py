@@ -1,0 +1,54 @@
+"""Receiver-side gating network (paper: "a gating network is required for each LLM
+to select the data from its own model or other fusers").
+
+The gate scores each candidate fused cache from pooled (k̂, v̂) features and emits a
+per-transmitter sigmoid weight in [0, 1]; weights scale the fused *value* pathway,
+so a closed gate (w→0) reduces exactly to standalone inference — a property the
+tests pin down. The receiver's own cache is the implicit unit-weight reference.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def init_gating(cfg_rx: ModelConfig, key, hidden: int = 128,
+                dtype=jnp.float32) -> dict:
+    d_feat = 2 * cfg_rx.kv_dim  # pooled k̂‖v̂ in receiver space
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": L.init_linear(k1, d_feat, hidden, bias=True, dtype=dtype),
+        "w2": L.init_linear(k2, hidden, 1, bias=True, dtype=dtype),
+    }
+
+
+def gate_weight(params: dict, fused_stack: dict) -> jax.Array:
+    """Score one fused stack {"k","v"}: (n_rx, B, Hkv, S, hd) -> weight (B,)."""
+    n, B, H, S, hd = fused_stack["k"].shape
+    feat = jnp.concatenate(
+        [
+            fused_stack["k"].transpose(1, 0, 3, 2, 4).reshape(B, n, S, H * hd),
+            fused_stack["v"].transpose(1, 0, 3, 2, 4).reshape(B, n, S, H * hd),
+        ],
+        axis=-1,
+    ).mean(axis=(1, 2))  # (B, 2*kv_dim) pooled over layers and positions
+    h = jax.nn.tanh(L.linear(params["w1"], feat.astype(jnp.float32)))
+    return jax.nn.sigmoid(L.linear(params["w2"], h))[:, 0]  # (B,)
+
+
+def apply_gates(params: dict, fused_stacks: List[dict]) -> List[dict]:
+    """Fold each transmitter's gate into its attention-logit bias: the fused
+    tokens' attention mass is scaled by w (log-additive with the per-layer
+    fuser gate); w→0 removes the transmitter exactly."""
+    out = []
+    for st in fused_stacks:
+        w = gate_weight(params, st)  # (B,)
+        log_w = jnp.log(jnp.maximum(w, 1e-30))[None, :, None]  # (1, B, 1)
+        bias = st.get("bias", 0.0) + log_w
+        out.append({"k": st["k"], "v": st["v"], "bias": bias})
+    return out

@@ -1,0 +1,105 @@
+"""Opportunistic protocol selection (paper §Possible Variants: "the decision to
+use cache or token communication could be dynamically determined based on both
+the current network status and the specific QoS requirements").
+
+An analytic latency/accuracy model per link decides C2C vs T2T vs standalone:
+
+  latency_c2c = kv_bytes(seq)/bw + rtt + fuser_time + decode_time
+  latency_t2t = tx_gen_time + text_bytes/bw + rtt + rx_prefill_time + decode_time
+
+Compute-time terms come from the same TPU-v5e roofline constants the dry-run
+analysis uses (roofline.py), so the protocol's decisions are consistent with the
+§Roofline tables. Properties pinned by tests: decisions are monotone in bandwidth
+(more bandwidth never flips C2C→T2T) and respect QoS feasibility.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Literal
+
+from repro.configs.base import ModelConfig
+from repro.core import commload
+
+# TPU-v5e-class compute constants (shared with roofline.py)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+
+
+@dataclass(frozen=True)
+class LinkModel:
+    bandwidth_bps: float  # bytes/s on the federation link
+    rtt_s: float = 0.0
+
+
+@dataclass(frozen=True)
+class QoS:
+    max_latency_s: float = float("inf")
+    min_quality: Literal["standalone", "t2t", "c2c"] = "standalone"
+
+
+def _prefill_time(cfg: ModelConfig, seq: int, mfu: float = 0.4) -> float:
+    return 2.0 * cfg.active_param_count() * seq / (PEAK_FLOPS * mfu)
+
+
+def _decode_time(cfg: ModelConfig, steps: int, hbm_frac: float = 0.6) -> float:
+    # decode is memory-bound: one full weight read per token
+    return steps * 2.0 * cfg.active_param_count() / (HBM_BW * hbm_frac)
+
+
+def _fuser_time(cfg_tx: ModelConfig, cfg_rx: ModelConfig, seq: int,
+                mfu: float = 0.4) -> float:
+    d_in = 2 * cfg_tx.kv_dim
+    d_out = 2 * cfg_rx.kv_dim
+    d_h = max(d_in, d_out)
+    n = len(cfg_rx.attention_layers)
+    flops = 2.0 * seq * n * (d_in * d_h + d_h * d_h + d_h * d_out)
+    return flops / (PEAK_FLOPS * mfu)
+
+
+def latency_c2c(cfg_txs: List[ModelConfig], cfg_rx: ModelConfig, seq: int,
+                gen_steps: int, link: LinkModel) -> float:
+    xfer = commload.c2c_bytes_total(cfg_txs, seq) / link.bandwidth_bps
+    fuse = sum(_fuser_time(t, cfg_rx, seq) for t in cfg_txs)
+    return xfer + link.rtt_s + fuse + _decode_time(cfg_rx, gen_steps)
+
+
+def latency_t2t(cfg_txs: List[ModelConfig], cfg_rx: ModelConfig, seq: int,
+                gen_steps: int, link: LinkModel, shared_tokens: int) -> float:
+    tx_gen = max(_decode_time(t, shared_tokens) for t in cfg_txs) if cfg_txs else 0.0
+    xfer = commload.t2t_bytes_total(len(cfg_txs), shared_tokens) / link.bandwidth_bps
+    rx_prefill = _prefill_time(cfg_rx, seq + shared_tokens * len(cfg_txs))
+    return tx_gen + xfer + link.rtt_s + rx_prefill + _decode_time(cfg_rx, gen_steps)
+
+
+def latency_standalone(cfg_rx: ModelConfig, seq: int, gen_steps: int) -> float:
+    return _prefill_time(cfg_rx, seq) + _decode_time(cfg_rx, gen_steps)
+
+
+def choose_protocol(
+    cfg_txs: List[ModelConfig],
+    cfg_rx: ModelConfig,
+    seq: int,
+    gen_steps: int,
+    link: LinkModel,
+    qos: QoS,
+    *,
+    shared_tokens: int = 64,
+) -> dict:
+    """Pick the highest-quality protocol that satisfies the QoS latency budget.
+
+    Quality order (paper Fig. 3a): c2c > t2t > standalone.
+    """
+    cands = {
+        "c2c": latency_c2c(cfg_txs, cfg_rx, seq, gen_steps, link),
+        "t2t": latency_t2t(cfg_txs, cfg_rx, seq, gen_steps, link, shared_tokens),
+        "standalone": latency_standalone(cfg_rx, seq, gen_steps),
+    }
+    order = ["c2c", "t2t", "standalone"]  # best -> worst quality
+    floor = order.index(qos.min_quality)
+    # best quality, down to (and including) the QoS quality floor, that fits
+    for name in order[: floor + 1]:
+        if cands[name] <= qos.max_latency_s:
+            return {"protocol": name, "latencies": cands, "qos_met": True}
+    # infeasible QoS: degrade to the fastest candidate and flag it
+    fastest = min(cands, key=cands.get)
+    return {"protocol": fastest, "latencies": cands, "qos_met": False}

@@ -1,0 +1,70 @@
+"""BEYOND-PAPER EXTENSION — int8-quantised cache communication.
+
+The paper's central cost asymmetry is 88 KB/token (C2C) vs 16 B/token (T2T).
+Symmetric per-(layer, head, dim)-channel int8 quantisation of the transmitted
+KV stack halves the wire bytes (bf16 → int8 + amortised fp32 scales) AND halves
+the receiver-side HBM reads of the fused prefix during decode — the dominant
+roofline term after the C1/C2 optimisations (EXPERIMENTS.md §Perf pair C).
+
+Scales are computed over the sequence axis (the only axis that grows), so the
+per-token overhead is O(1/S) and the asymptotic compression is exactly 2×.
+Accuracy impact is measured in the case study (tests/test_quant.py pins the
+round-trip error; benchmarks report the end-task delta).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def quantize_stack(stack: dict) -> dict:
+    """Quantise a KV stack {"k","v": (n, B, H, S, hd)} to int8 + fp32 scales.
+
+    Returns {"k_q","v_q": int8, "k_scale","v_scale": (n,B,H,1,hd) fp32}.
+    """
+    out = {}
+    for name in ("k", "v"):
+        x = stack[name].astype(jnp.float32)
+        scale = jnp.max(jnp.abs(x), axis=-2, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-8)
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        out[f"{name}_q"] = q
+        out[f"{name}_scale"] = scale
+    return out
+
+
+def dequantize_stack(qstack: dict, dtype=jnp.bfloat16) -> dict:
+    return {
+        "k": (qstack["k_q"].astype(jnp.float32) * qstack["k_scale"]).astype(dtype),
+        "v": (qstack["v_q"].astype(jnp.float32) * qstack["v_scale"]).astype(dtype),
+    }
+
+
+def quantized_bytes(stack: dict) -> int:
+    """Wire bytes of the quantised stack (int8 payload + fp32 scales)."""
+    n, B, H, S, hd = stack["k"].shape
+    payload = 2 * n * B * H * S * hd  # k+v int8
+    scales = 2 * n * B * H * hd * 4
+    return payload + scales
+
+
+def c2c_bytes_per_token_quantized(cfg: ModelConfig) -> float:
+    """Asymptotic (S→∞) per-token wire bytes with int8 C2C."""
+    hd = cfg.resolved_head_dim
+    n_attn = len(cfg.attention_layers)
+    return 2.0 * n_attn * cfg.num_kv_heads * hd  # 1 byte per element
+
+
+def roundtrip_error(stack: dict) -> float:
+    """Max relative L2 error of the quantisation round trip (diagnostics)."""
+    dq = dequantize_stack(quantize_stack(stack), jnp.float32)
+    num = den = 0.0
+    for name in ("k", "v"):
+        a = stack[name].astype(jnp.float32)
+        num += float(jnp.sum((a - dq[name]) ** 2))
+        den += float(jnp.sum(a ** 2))
+    return (num / max(den, 1e-30)) ** 0.5

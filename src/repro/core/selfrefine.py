@@ -1,0 +1,38 @@
+"""Self-Refine baseline (Madaan et al. 2023): a single model iteratively
+re-conditions on its own previous output.
+
+The paper positions FedRefine as the *collaborative* generalisation of this
+("iterative local refinement" is limited by the model's internal knowledge);
+this module provides the standalone baseline the case study compares against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.c2c import generate
+
+
+def self_refine(
+    cfg: ModelConfig,
+    params: dict,
+    prompt: jax.Array,  # (B, S)
+    steps: int,
+    *,
+    rounds: int = 2,
+    sep_token: int = 0,
+) -> jax.Array:
+    """Iterative refinement: each round re-prefixes the previous answer.
+
+    prompt_r = [prompt ‖ sep ‖ answer_{r-1}] ; answer_r = generate(prompt_r).
+    Returns the final round's (B, steps) tokens.
+    """
+    B = prompt.shape[0]
+    sep = jnp.full((B, 1), sep_token, prompt.dtype)
+    ctx = prompt
+    ans = generate(cfg, params, ctx, steps)
+    for _ in range(rounds - 1):
+        ctx = jnp.concatenate([prompt, sep, ans], axis=1)
+        ans = generate(cfg, params, ctx, steps)
+    return ans

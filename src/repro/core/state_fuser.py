@@ -1,0 +1,128 @@
+"""BEYOND-PAPER EXTENSION — state-to-state fusers for attention-free models.
+
+The paper's C2C medium is the KV cache, which SSM/recurrent architectures
+(mamba2-130m; RecurrentGemma's RG-LRU layers) do not have — DESIGN.md
+§Arch-applicability documents the inapplicability and core/fuser.py raises
+``InapplicableError``. This module is the natural extension the paper's
+"Future Trends" invites: the analogous *compressed-state* medium. A
+transmitter's recurrent state (Mamba-2: (nh, hd, ns) per layer; RG-LRU: (W,)
+per layer) is projected by a per-layer MLP into the receiver's state space and
+gate-mixed into the receiver's initial decode state:
+
+    h0' = (1 − σ(g)) · h0_rx + σ(g) · F_state(h_tx)
+
+Unlike KV C2C the message size is CONSTANT in sequence length — for
+mamba2-130m it is 24·24·64·128·4 B ≈ 18.9 MB total (vs ~3 GB for a 32k-token
+KV cache of a comparable dense model), the state-space analogue of the paper's
+88 KB-vs-16 B trade.
+
+This is clearly marked as ours, not the paper's; benchmarks report it
+separately.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.fuser import LayerAlignment
+from repro.models import layers as L
+
+
+class StateInapplicableError(TypeError):
+    pass
+
+
+def _state_layers(cfg: ModelConfig) -> Tuple[int, ...]:
+    return tuple(i for i, t in enumerate(cfg.layer_types) if t in ("ssd", "rec"))
+
+
+def state_dim(cfg: ModelConfig) -> int:
+    """Flattened per-layer recurrent state width."""
+    kinds = set(cfg.layer_types)
+    if "ssd" in kinds:
+        return cfg.ssm_nheads * cfg.ssm_head_dim * cfg.ssm_state
+    if "rec" in kinds:
+        return cfg.rglru_width or cfg.d_model
+    raise StateInapplicableError(
+        f"{cfg.name} has no recurrent state (family {cfg.family})")
+
+
+def make_state_alignment(cfg_tx: ModelConfig, cfg_rx: ModelConfig) -> LayerAlignment:
+    n_tx, n_rx = len(_state_layers(cfg_tx)), len(_state_layers(cfg_rx))
+    if n_tx == 0 or n_rx == 0:
+        raise StateInapplicableError(
+            f"state fuser needs recurrent layers on both ends "
+            f"({cfg_tx.name}: {n_tx}, {cfg_rx.name}: {n_rx})")
+    return LayerAlignment(n_rx, n_tx, "bottom_up")
+
+
+def init_state_fuser(cfg_tx: ModelConfig, cfg_rx: ModelConfig, key, *,
+                     hidden: int = 0, dtype=jnp.float32) -> dict:
+    align = make_state_alignment(cfg_tx, cfg_rx)
+    d_in, d_out = state_dim(cfg_tx), state_dim(cfg_rx)
+    d_h = hidden or min(max(d_in, d_out), 4096)
+    n = align.rx_layers
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "w1": L.init_linear(k1, d_in, d_h, bias=True, dtype=dtype),
+            "w2": L.init_linear(k2, d_h, d_out, bias=True, dtype=dtype),
+        }
+
+    return {
+        "mlp": jax.vmap(one)(jax.random.split(key, n)),
+        "gate": jnp.full((n,), -1.0, jnp.float32),
+        "align": jnp.asarray(align.table, jnp.int32),
+    }
+
+
+def _states_stack(cfg: ModelConfig, cache: dict) -> jax.Array:
+    """Flatten all recurrent-layer states to (n_state_layers, B, state_dim)."""
+    from repro.models.transformer import layer_grouping
+    cycles, pattern, tail = layer_grouping(cfg)
+    outs = []
+    for i, kind in enumerate(pattern + tail):
+        if kind in ("ssd", "rec"):
+            h = cache["layers"][i]["h"]  # (C, B, ...) fp32
+            outs.append(h.reshape(h.shape[0], h.shape[1], -1))
+    return jnp.concatenate(outs, axis=0)
+
+
+def fuse_states(fuser: dict, cfg_tx: ModelConfig, cfg_rx: ModelConfig,
+                tx_cache: dict, rx_cache: dict) -> dict:
+    """Gate-mix projected transmitter states into the receiver's decode cache."""
+    from repro.models.transformer import layer_grouping
+
+    tx_states = _states_stack(cfg_tx, tx_cache)  # (n_tx, B, d_in)
+    sel = tx_states[fuser["align"]]  # (n_rx, B, d_in)
+
+    def mlp(p, x):
+        h = jax.nn.silu(L.linear(p["w1"], x))
+        return L.linear(p["w2"], h)
+
+    proj = jax.vmap(mlp)(fuser["mlp"], sel)  # (n_rx, B, d_out)
+    g = jax.nn.sigmoid(fuser["gate"])[:, None, None]
+
+    cycles, pattern, tail = layer_grouping(cfg_rx)
+    new_layers = list(rx_cache["layers"])
+    off = 0
+    for i, kind in enumerate(pattern + tail):
+        if kind in ("ssd", "rec"):
+            e = dict(new_layers[i])
+            h = e["h"]
+            n = h.shape[0]
+            p_i = proj[off : off + n].reshape(h.shape).astype(h.dtype)
+            g_i = g[off : off + n].reshape((n,) + (1,) * (h.ndim - 1))
+            e["h"] = (1 - g_i) * h + g_i * p_i
+            new_layers[i] = e
+            off += n
+    return {"pos": rx_cache["pos"], "layers": new_layers}
+
+
+def state_bytes(cfg: ModelConfig, dtype_bytes: int = 4) -> int:
+    """Communication load of state-to-state federation (constant in seq len)."""
+    return len(_state_layers(cfg)) * state_dim(cfg) * dtype_bytes

@@ -1,0 +1,57 @@
+"""Text-to-text (T2T) collaboration baseline.
+
+The transmitter *generates tokens* from its (rephrased) prompt; those tokens are
+shipped as text and the receiver must re-prefill them — rebuilding a KV cache from
+scratch, which is exactly the latency the paper's C2C avoids. Accuracy-wise T2T
+loses the transmitter's internal (cache-level) semantics; the case study measures
+both effects.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.c2c import generate
+from repro.models import transformer as T
+
+
+def t2t_exchange(
+    cfg_tx: ModelConfig,
+    params_tx: dict,
+    tx_prompt: jax.Array,  # (B, S_t) transmitter-side (rephrased) prompt
+    gen_steps: int,
+) -> jax.Array:
+    """Transmitter produces its contribution as tokens. Returns (B, gen_steps)."""
+    return generate(cfg_tx, params_tx, tx_prompt, gen_steps)
+
+
+def t2t_forward(
+    cfg_rx: ModelConfig,
+    params_rx: dict,
+    rx_prompt: jax.Array,  # (B, S_r)
+    shared_tokens: List[jax.Array],  # per transmitter: (B, S_shared)
+) -> Tuple[jax.Array, jax.Array]:
+    """Receiver re-prefills [tx outputs ‖ own prompt] — the full-prefill cost is
+    incurred here. Returns (logits over combined seq, combined tokens)."""
+    combined = jnp.concatenate([*shared_tokens, rx_prompt], axis=1)
+    logits, _ = T.forward(cfg_rx, params_rx, combined)
+    return logits, combined
+
+
+def t2t_generate(
+    cfg_rx: ModelConfig,
+    params_rx: dict,
+    rx_prompt: jax.Array,
+    shared_tokens: List[jax.Array],
+    steps: int,
+) -> jax.Array:
+    combined = jnp.concatenate([*shared_tokens, rx_prompt], axis=1)
+    return generate(cfg_rx, params_rx, combined, steps)
+
+
+def t2t_prefill_tokens(rx_prompt_len: int, shared_lens: List[int]) -> int:
+    """Receiver-side prefill length (the latency term C2C skips)."""
+    return rx_prompt_len + sum(shared_lens)

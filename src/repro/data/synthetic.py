@@ -1,0 +1,213 @@
+"""Knowledge-partitioned synthetic QA corpus — the offline stand-in for the
+paper's OpenHermes-2.5 (fuser training) + OpenBookQA (evaluation) pair.
+
+World model
+-----------
+Facts are (subject-class, relation-class) -> object triples, partitioned into
+``n_domains`` disjoint knowledge domains (one per transmitter, mirroring the
+case study's "different models exhibit varying performance across different
+tasks"). Every subject/relation class has ``syn_width`` interchangeable surface
+tokens — the synonym structure that makes privacy rephrasing (privacy.py)
+semantically lossless but surface-destructive.
+
+A QA example is the token sequence  [Q, s, r, A, o]  with loss only on ``o``.
+Transmitter t trains on domain t; the receiver trains on a small mixed sample
+(weak generalist) — so standalone receiver accuracy is low and collaboration
+has headroom, which is the regime Fig. 3(a) probes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import numpy as np
+
+Q_TOK, A_TOK, SEP_TOK, PAD_TOK = 1, 2, 3, 0
+
+
+@dataclass(frozen=True)
+class WorldSpec:
+    n_domains: int = 4
+    subj_classes_per_domain: int = 6
+    rel_classes: int = 8
+    n_objects: int = 64
+    syn_width: int = 3
+    vocab_size: int = 512
+    seed: int = 0
+    # Fraction of facts the RECEIVER trains on: it masters the task format and
+    # a subset of knowledge; the held-out facts are what federation must supply
+    # (the paper's "limited by the model's internal knowledge" regime).
+    receiver_known_frac: float = 0.3
+
+    @property
+    def n_subj_classes(self) -> int:
+        return self.n_domains * self.subj_classes_per_domain
+
+    # --- token id layout ------------------------------------------------
+    @property
+    def subj_base(self) -> int:
+        return 8
+
+    @property
+    def rel_base(self) -> int:
+        return self.subj_base + self.n_subj_classes * self.syn_width
+
+    @property
+    def obj_base(self) -> int:
+        return self.rel_base + self.rel_classes * self.syn_width
+
+    def check(self) -> None:
+        assert self.obj_base + self.n_objects <= self.vocab_size, "vocab too small"
+
+
+class World:
+    """Materialised fact table + encode/decode helpers."""
+
+    def __init__(self, spec: WorldSpec):
+        spec.check()
+        self.spec = spec
+        rng = np.random.default_rng(spec.seed)
+        # fact table: (subj_class, rel_class) -> object id
+        self.facts = rng.integers(
+            0, spec.n_objects, size=(spec.n_subj_classes, spec.rel_classes))
+        # receiver-known mask over facts (see WorldSpec.receiver_known_frac)
+        self.known = (np.random.default_rng(spec.seed + 1)
+                      .random((spec.n_subj_classes, spec.rel_classes))
+                      < spec.receiver_known_frac)
+
+    # ---------------------------------------------------------------- ids
+    def subj_token(self, cls: int, syn: int) -> int:
+        return self.spec.subj_base + cls * self.spec.syn_width + syn
+
+    def rel_token(self, cls: int, syn: int) -> int:
+        return self.spec.rel_base + cls * self.spec.syn_width + syn
+
+    def obj_token(self, obj: int) -> int:
+        return self.spec.obj_base + obj
+
+    def domain_of_subj(self, cls: int) -> int:
+        return cls // self.spec.subj_classes_per_domain
+
+    # ------------------------------------------------------------ examples
+    def qa_example(self, rng, domain: Optional[int] = None,
+                   known: Optional[bool] = None) -> Tuple[np.ndarray, np.ndarray]:
+        """One [Q, s, r, A, o] example; labels −100 except the answer slot.
+
+        ``known`` filters on the receiver-known mask (True: receiver-trained
+        facts; False: held-out facts that only the domain transmitter knows)."""
+        sp = self.spec
+        for _ in range(64):  # rejection-sample the known filter
+            if domain is None:
+                s_cls = rng.integers(0, sp.n_subj_classes)
+            else:
+                s_cls = rng.integers(0, sp.subj_classes_per_domain) \
+                    + domain * sp.subj_classes_per_domain
+            r_cls = rng.integers(0, sp.rel_classes)
+            if known is None or bool(self.known[s_cls, r_cls]) == known:
+                break
+        obj = self.facts[s_cls, r_cls]
+        toks = np.array([
+            Q_TOK,
+            self.subj_token(s_cls, rng.integers(0, sp.syn_width)),
+            self.rel_token(r_cls, rng.integers(0, sp.syn_width)),
+            A_TOK,
+            self.obj_token(obj),
+        ], np.int32)
+        labels = np.full_like(toks, -100)
+        labels[-1] = toks[-1]
+        return toks, labels
+
+    def qa_batch(self, rng, batch: int, seq: int,
+                 domain: Optional[int] = None,
+                 known: Optional[bool] = None) -> dict:
+        """Pack multiple QA examples per row (SEP-separated); next-token labels."""
+        toks = np.full((batch, seq), PAD_TOK, np.int32)
+        labels = np.full((batch, seq), -100, np.int32)
+        for b in range(batch):
+            i = 0
+            while i + 6 <= seq:
+                t, l = self.qa_example(rng, domain, known)
+                toks[b, i : i + 5] = t
+                labels[b, i : i + 5] = l
+                toks[b, i + 5] = SEP_TOK
+                i += 6
+        # shift: predict token t+1 from t
+        shifted = np.full_like(labels, -100)
+        shifted[:, :-1] = labels[:, 1:]
+        return {"tokens": toks, "labels": shifted}
+
+    def question_batch(self, rng, batch: int, seq: int,
+                       domain: Optional[int] = None,
+                       known: Optional[bool] = None) -> dict:
+        """Packed QUESTION-ONLY rows for fuser training: [Q s r A SEP]* with the
+        answer as a (shifted) label at each 'A' position but NEVER in the token
+        stream — so a transmitter cache of these rows contains the answer only
+        through the transmitter's weights (its upper-layer features at the 'A'
+        position), exactly the eval condition. Without this, fuser training can
+        cheat by copying answer tokens out of packed QA caches (a failure mode
+        we hit and fixed — see benchmarks/common.py)."""
+        toks = np.full((batch, seq), PAD_TOK, np.int32)
+        labels = np.full((batch, seq), -100, np.int32)
+        for b in range(batch):
+            i = 0
+            while i + 4 <= seq:
+                t, _ = self.qa_example(rng, domain, known)
+                toks[b, i : i + 4] = t[:4]  # Q s r A — no answer token
+                labels[b, i + 3] = t[4]  # predict o right after 'A'
+                if i + 4 < seq:
+                    toks[b, i + 4] = SEP_TOK
+                i += 5
+        return {"tokens": toks, "labels": labels}
+
+    def eval_batch(self, rng, batch: int, domain: Optional[int] = None,
+                   known: Optional[bool] = None) -> dict:
+        """Single question per row: prompt [Q, s, r, A], answer object id."""
+        prompts = np.zeros((batch, 4), np.int32)
+        answers = np.zeros((batch,), np.int32)
+        for b in range(batch):
+            t, _ = self.qa_example(rng, domain, known)
+            prompts[b] = t[:4]
+            answers[b] = t[4]
+        return {"prompt": prompts, "answer": answers}
+
+    # ------------------------------------------------------------- privacy
+    def synonym_channel(self):
+        """ParaphraseChannel over this world's synonym classes (objects and
+        specials map to themselves)."""
+        import jax.numpy as jnp
+        from repro.core.privacy import ParaphraseChannel
+
+        sp = self.spec
+        V = sp.vocab_size
+        width = sp.syn_width
+        class_of = np.arange(V, dtype=np.int64)  # default: singleton class per token
+        members = np.arange(V, dtype=np.int64)[:, None].repeat(width, 1)
+        next_cls = V  # class ids beyond V for synonym groups, remapped below
+        groups = []
+        for base, n_cls in ((sp.subj_base, sp.n_subj_classes),
+                            (sp.rel_base, sp.rel_classes)):
+            for c in range(n_cls):
+                ids = base + c * width + np.arange(width)
+                groups.append(ids)
+        # compact class ids: singletons keep their token id, groups get fresh ids
+        all_ids = np.concatenate(groups)
+        for g_i, ids in enumerate(groups):
+            class_of[ids] = V + g_i
+        # remap class ids to dense [0, n)
+        uniq, dense = np.unique(class_of, return_inverse=True)
+        table = np.zeros((len(uniq), width), np.int64)
+        for d_i, u in enumerate(uniq):
+            if u < V:  # singleton
+                table[d_i] = u
+            else:
+                table[d_i] = groups[u - V]
+        return ParaphraseChannel(class_of=jnp.asarray(dense, jnp.int32),
+                                 members=jnp.asarray(table, jnp.int32))
+
+
+def lm_stream(world: World, seed: int, batch: int, seq: int,
+              domain: Optional[int] = None, known: Optional[bool] = None):
+    """Infinite batch generator (the data-pipeline hot loop)."""
+    rng = np.random.default_rng(seed)
+    while True:
+        yield world.qa_batch(rng, batch, seq, domain, known)

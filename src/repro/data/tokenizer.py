@@ -1,0 +1,37 @@
+"""Offline-safe tokenizer: byte-level with a few reserved specials.
+
+Real deployments would plug a SentencePiece model here; the framework only needs
+encode/decode + vocab_size, so a byte tokenizer keeps everything runnable offline
+(and the synthetic corpus uses its own structured vocabulary anyway).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+PAD, BOS, EOS, SEP = 0, 1, 2, 3
+N_SPECIAL = 8
+
+
+@dataclass(frozen=True)
+class ByteTokenizer:
+    vocab_size: int = 256 + N_SPECIAL
+
+    def encode(self, text: str, *, bos: bool = True, eos: bool = False) -> np.ndarray:
+        ids = [b + N_SPECIAL for b in text.encode("utf-8")]
+        if bos:
+            ids = [BOS] + ids
+        if eos:
+            ids = ids + [EOS]
+        return np.asarray(ids, np.int32)
+
+    def decode(self, ids) -> str:
+        bs = bytes(int(i) - N_SPECIAL for i in ids
+                   if int(i) >= N_SPECIAL)
+        return bs.decode("utf-8", errors="replace")
+
+    def pad_to(self, ids: np.ndarray, length: int) -> np.ndarray:
+        out = np.full((length,), PAD, np.int32)
+        out[: min(len(ids), length)] = ids[:length]
+        return out

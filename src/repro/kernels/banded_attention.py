@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: banded (sliding-window) prefill attention.
+
+The jnp flash path computes every (q-chunk × kv) block and masks — at
+long_500k-style shapes with window ≪ S that wastes S/window × the useful work
+(EXPERIMENTS.md §Perf notes). This kernel exploits the band structure
+STRUCTURALLY: the grid's kv dimension only spans the diagonal band
+(ceil(window/block)+1 blocks per q block), and the kv BlockSpec index_map
+selects the diagonal-relative block — fully-masked blocks are never launched.
+
+    FLOPs: O(S · window)   instead of   O(S²)
+
+Online-softmax accumulation across the band (same scratch discipline as
+decode_attention.py). Causality + window masking applied per element inside
+the band's edge blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(w_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, block: int, nband: int):
+    b_idx = pl.program_id(2)  # position within the band (sequential)
+    n_b = pl.num_programs(2)
+    qi = pl.program_id(1)  # q block row
+
+    @pl.when(b_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    window = w_ref[0]
+    q = q_ref[0].astype(jnp.float32)  # (G*block? no: (bq, hd)) — see specs
+    k = k_ref[0].astype(jnp.float32)  # (block, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    # absolute positions of this q block and this band kv block
+    q_pos = qi * block + jax.lax.broadcasted_iota(jnp.int32, (block, 1), 0)
+    kv_block_idx = qi - (nband - 1) + b_idx  # diagonal-relative
+    k_pos = kv_block_idx * block + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block), 1)
+
+    s = q @ k.T * (q.shape[-1] ** -0.5)  # (block, block)
+    valid = (k_pos >= 0) & (k_pos <= q_pos) & (k_pos > q_pos - window)
+    s = jnp.where(valid, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(b_idx == n_b - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block", "interpret"))
+def banded_attention_pallas(
+    q: jax.Array,  # (BH, S, hd) — batch×heads flattened (MHA rows)
+    k: jax.Array,  # (BH, S, hd)
+    v: jax.Array,
+    *,
+    window: int,
+    block: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, S, hd = q.shape
+    blk = min(block, S)
+    assert S % blk == 0, (S, blk)
+    nq = S // blk
+    # band width in blocks: the diagonal block + enough to cover the window
+    nband = min(-(-window // blk) + 1, nq)
+    grid = (BH, nq, nband)
+
+    def kv_index(r, qi, b):
+        # diagonal-relative kv block, clamped into range (clamped duplicates
+        # are fully masked by the position test inside the kernel)
+        idx = qi - (nband - 1) + b
+        return (r, jnp.clip(idx, 0, nq - 1), 0)
+
+    w_arr = jnp.full((1,), window, jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_kernel, block=blk, nband=nband),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda r, qi, b: (0,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, blk, hd), lambda r, qi, b: (r, qi, 0)),
+            pl.BlockSpec((1, blk, hd), kv_index),
+            pl.BlockSpec((1, blk, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, blk, hd), lambda r, qi, b: (r, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk, 1), jnp.float32),
+            pltpu.VMEM((blk, 1), jnp.float32),
+            pltpu.VMEM((blk, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(w_arr, q, k, v)

@@ -1,0 +1,165 @@
+"""Pallas TPU kernel: GQA flash-decode attention over (possibly concatenated)
+KV caches — the FedRefine serve-side hot loop.
+
+Eq. 4 decode attends over [fused_1 ∘ … ∘ fused_s ∘ own] caches. Rather than
+materialising (G, S_total) attention matrices in HBM, the kernel walks the cache
+in ``block_s`` VMEM tiles with the online-softmax recurrence (running max m,
+normaliser l, accumulator acc persist in VMEM scratch across the sequential
+innermost grid dim). All validity/window/ring/prefix-gate logic is folded into a
+single additive fp32 ``bias`` operand built by the caller (ops.decode_attention):
+-inf ⇒ masked, log σ(gate) on fused-prefix positions — so one kernel serves full
+caches, sliding-window rings and C2C prefixes alike.
+
+Grid: (batch, kv_heads, S // block_s); q rows are the G = H/Hkv grouped query
+heads for that kv head, padded to the fp32 sublane (8) when G < 8.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30  # python scalar: jnp constants would be captured as kernel consts
+
+
+def _kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref, acc_ref):
+    s_idx = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bs, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    bias = bias_ref[0].astype(jnp.float32)  # (bs,)
+
+    scores = q @ k.T * (q.shape[-1] ** -0.5) + bias[None, :]  # (G, bs)
+    m_prev = m_ref[...]  # (G, 1)
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)  # (G, bs)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+def _kernel_q8(q_ref, k_ref, v_ref, ks_ref, vs_ref, bias_ref, o_ref,
+               m_ref, l_ref, acc_ref):
+    """int8-KV variant: k/v arrive as int8 blocks and are dequantised in VMEM
+    with per-(head, dim) fp32 scales — HBM traffic for the cache halves
+    (the quantised-C2C serving path; core/quant.py)."""
+    s_idx = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0].astype(jnp.float32)
+    bias = bias_ref[0].astype(jnp.float32)
+
+    scores = q @ k.T * (q.shape[-1] ** -0.5) + bias[None, :]
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention_q8_pallas(
+    q: jax.Array,  # (B, Hkv, G, hd)
+    k_q: jax.Array,  # (B, Hkv, S, hd) int8
+    v_q: jax.Array,  # int8
+    k_scale: jax.Array,  # (B, Hkv, 1, hd) fp32
+    v_scale: jax.Array,
+    bias: jax.Array,  # (B, S) fp32
+    *,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hkv, G, hd = q.shape
+    S = k_q.shape[2]
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+    grid = (B, Hkv, S // bs)
+
+    return pl.pallas_call(
+        _kernel_q8,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, 1, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs), lambda b, h, s: (b, s)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_q, v_q, k_scale, v_scale, bias)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention_pallas(
+    q: jax.Array,  # (B, Hkv, G, hd) — grouped query heads
+    k: jax.Array,  # (B, Hkv, S, hd)
+    v: jax.Array,  # (B, Hkv, S, hd)
+    bias: jax.Array,  # (B, S) fp32 additive (−inf = masked)
+    *,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Hkv, G, hd = q.shape
+    S = k.shape[2]
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+    grid = (B, Hkv, S // bs)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, bs), lambda b, h, s: (b, s)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),   # running max m
+            pltpu.VMEM((G, 1), jnp.float32),   # normaliser l
+            pltpu.VMEM((G, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v, bias)

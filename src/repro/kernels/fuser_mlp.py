@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: fused 3-layer fuser MLP (the C2C projection hot spot).
+
+Projecting a 32k-token KV cache through F_ij is the dominant *new* compute C2C
+adds (paper §Case Study: one MLP per receiver layer over every cached token).
+A naive composition launches three matmuls with two HBM round-trips of the
+(tokens, d_h) activations; this kernel keeps the whole 3-matmul + SiLU chain
+resident in VMEM per token tile:
+
+    HBM -> VMEM:  x tile (block_t, d_in), all three weight mats (once per grid col)
+    MXU:          h1 = silu(x@W1+b1); h2 = silu(h1@W2+b2); y = h2@W3+b3
+    VMEM -> HBM:  y tile (block_t, d_out)
+
+Tiling: token dim in ``block_t`` rows (multiple of 8 for fp32 / 16 for bf16
+sublane packing; we use 128 to align the MXU systolic dim), feature dims are kept
+whole (fuser dims are ≤ a few K — weights fit VMEM comfortably; asserted).
+Accumulation is fp32 via ``preferred_element_type``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget sanity (v5e ≈ 128 MiB; stay well under half for double buffering)
+_VMEM_BYTES = 64 * 1024 * 1024
+
+
+def _kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref, o_ref):
+    x = x_ref[...]
+    h = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    h = jax.nn.silu(h + b1_ref[...].astype(jnp.float32))
+    h = h.astype(x.dtype)
+    h = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+    h = jax.nn.silu(h + b2_ref[...].astype(jnp.float32))
+    h = h.astype(x.dtype)
+    y = jnp.dot(h, w3_ref[...], preferred_element_type=jnp.float32)
+    y = y + b3_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def fuser_mlp_pallas(
+    x: jax.Array,  # (T, d_in) — flattened tokens
+    w1: jax.Array, b1: jax.Array,
+    w2: jax.Array, b2: jax.Array,
+    w3: jax.Array, b3: jax.Array,
+    *,
+    block_t: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    T, d_in = x.shape
+    d_h = w1.shape[1]
+    d_out = w3.shape[1]
+    bt = min(block_t, T)
+    assert T % bt == 0, (T, bt)
+    wbytes = (w1.size + w2.size + w3.size) * x.dtype.itemsize
+    abytes = bt * (d_in + 2 * d_h + d_out) * 4
+    assert wbytes + abytes < _VMEM_BYTES, "fuser dims exceed VMEM tiling budget"
+
+    grid = (T // bt,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((d_in, d_h), lambda i: (0, 0)),
+            pl.BlockSpec((d_h,), lambda i: (0,)),
+            pl.BlockSpec((d_h, d_h), lambda i: (0, 0)),
+            pl.BlockSpec((d_h,), lambda i: (0,)),
+            pl.BlockSpec((d_h, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((d_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, d_out), x.dtype),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2, w3, b3)

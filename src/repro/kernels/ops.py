@@ -1,0 +1,107 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode — the
+kernel body runs in Python with real BlockSpec tiling semantics — so the same
+call sites work on TPU unchanged. ``interpret`` auto-detects the backend unless
+forced via REPRO_PALLAS_INTERPRET=0/1.
+"""
+from __future__ import annotations
+
+import functools
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.fuser_mlp import fuser_mlp_pallas
+from repro.kernels.gated_fusion import gated_fusion_pallas
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false")
+    return jax.default_backend() != "tpu"
+
+
+def fuser_mlp(mlp_params: dict, x: jax.Array, *, block_t: int = 128) -> jax.Array:
+    """Apply one fuser MLP {wN: {w, b}} to x (..., d_in) -> (..., d_out)."""
+    lead = x.shape[:-1]
+    d_in = x.shape[-1]
+    T = math.prod(lead) if lead else 1
+    xf = x.reshape(T, d_in)
+    # pad T to a block multiple
+    bt = min(block_t, max(8, T))
+    pad = (-T) % bt
+    if pad:
+        xf = jnp.concatenate([xf, jnp.zeros((pad, d_in), x.dtype)], 0)
+    y = fuser_mlp_pallas(
+        xf,
+        mlp_params["w1"]["w"], mlp_params["w1"]["b"],
+        mlp_params["w2"]["w"], mlp_params["w2"]["b"],
+        mlp_params["w3"]["w"], mlp_params["w3"]["b"],
+        block_t=bt, interpret=_interpret())
+    if pad:
+        y = y[:T]
+    return y.reshape(*lead, y.shape[-1])
+
+
+def gated_fusion(k_own, v_own, k_proj, v_proj, gate, *, block_s: int = 256):
+    """Gated mix over stacked caches (n, B, Hkv, S, hd) + gate (n,)."""
+    n, B, H, S, hd = k_own.shape
+    rs = lambda a: a.reshape(n, B * H, S, hd)
+    bs = min(block_s, S)
+    while S % bs:
+        bs //= 2
+    k, v = gated_fusion_pallas(rs(k_own), rs(v_own), rs(k_proj), rs(v_proj),
+                               gate, block_s=bs, interpret=_interpret())
+    return k.reshape(k_own.shape), v.reshape(v_own.shape)
+
+
+def decode_attention(q, k, v, bias, *, block_s: int = 512):
+    """Flash decode. q (B,H,hd) with GQA heads, k/v (B,Hkv,S,hd), bias (B,S)."""
+    B, H, hd = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, hd)
+    S = k.shape[2]
+    bs = min(block_s, S)
+    while S % bs:
+        bs //= 2
+    out = decode_attention_pallas(qg, k, v, bias.astype(jnp.float32),
+                                  block_s=bs, interpret=_interpret())
+    return out.reshape(B, H, hd)
+
+
+def banded_attention(q, k, v, *, window: int, block: int = 256):
+    """Sliding-window prefill attention, O(S·window). q/k/v (B, H, S, hd)."""
+    from repro.kernels.banded_attention import banded_attention_pallas
+    B, H, S, hd = q.shape
+    rs = lambda a: a.reshape(B * H, S, hd)
+    blk = min(block, S)
+    while S % blk:
+        blk //= 2
+    out = banded_attention_pallas(rs(q), rs(k), rs(v), window=window,
+                                  block=blk, interpret=_interpret())
+    return out.reshape(B, H, S, hd)
+
+
+def decode_attention_q8(q, qstack, bias, *, block_s: int = 512):
+    """Flash decode over an int8-quantised cache (core/quant.py layout):
+    q (B,H,hd); qstack {"k_q","v_q" int8 (B,Hkv,S,hd), "k_scale","v_scale"}."""
+    from repro.kernels.decode_attention import decode_attention_q8_pallas
+    B, H, hd = q.shape
+    Hkv = qstack["k_q"].shape[1]
+    G = H // Hkv
+    S = qstack["k_q"].shape[2]
+    bs = min(block_s, S)
+    while S % bs:
+        bs //= 2
+    out = decode_attention_q8_pallas(
+        q.reshape(B, Hkv, G, hd), qstack["k_q"], qstack["v_q"],
+        qstack["k_scale"].astype(jnp.float32),
+        qstack["v_scale"].astype(jnp.float32),
+        bias.astype(jnp.float32), block_s=bs, interpret=_interpret())
+    return out.reshape(B, H, hd)

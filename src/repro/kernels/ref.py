@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fuser_mlp_ref(x, w1, b1, w2, b2, w3, b3):
+    """3-layer SiLU MLP, fp32 accumulation to match the kernel."""
+    h = jnp.dot(x, w1, preferred_element_type=jnp.float32) + b1.astype(jnp.float32)
+    h = jax.nn.silu(h).astype(x.dtype)
+    h = jnp.dot(h, w2, preferred_element_type=jnp.float32) + b2.astype(jnp.float32)
+    h = jax.nn.silu(h).astype(x.dtype)
+    y = jnp.dot(h, w3, preferred_element_type=jnp.float32) + b3.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def gated_fusion_ref(k_own, v_own, k_proj, v_proj, gate):
+    g = jax.nn.sigmoid(gate.astype(jnp.float32))[:, None, None, None, None]
+    k = (1 - g) * k_own.astype(jnp.float32) + g * k_proj.astype(jnp.float32)
+    v = (1 - g) * v_own.astype(jnp.float32) + g * v_proj.astype(jnp.float32)
+    return k.astype(k_own.dtype), v.astype(v_own.dtype)
+
+
+def decode_attention_ref(q, k, v, bias):
+    """q (B,Hkv,G,hd), k/v (B,Hkv,S,hd), bias (B,S) additive fp32."""
+    scores = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (q.shape[-1] ** -0.5)
+    scores = scores + bias[:, None, None, :].astype(jnp.float32)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def banded_attention_ref(q, k, v, *, window: int):
+    """q/k/v (BH, S, hd); causal sliding-window attention, fp32 softmax."""
+    BH, S, hd = q.shape
+    s = jnp.einsum("rsd,rtd->rst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = (kpos <= qpos) & (kpos > qpos - window)
+    s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("rst,rtd->rsd", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,472 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) against
+the production mesh, with NO real allocation (ShapeDtypeStruct inputs only).
+
+For each pair this proves the sharding config is coherent (SPMD partitioning
+succeeds, no unsupported collectives), prints memory_analysis (fits 16 GB/chip)
+and cost_analysis (FLOPs/bytes), and derives the three roofline terms
+(repro.roofline). Results are cached as JSON under experiments/dryrun/ so the
+full 40-pair sweep is resumable.
+
+NOTE the two lines above MUST precede any jax import: jax locks the device count
+at first init. This is the ONLY entry point that forces 512 host devices —
+tests/benches see the real device list.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import roofline as RL
+from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, ModelConfig, canonical,
+                                get_config)
+from repro.launch import sharding as SH
+from repro.launch.mesh import make_production_mesh
+from repro.launch.serve import make_serve_prefill, make_serve_step
+from repro.launch.train import make_train_step
+from repro.models import transformer as T
+from repro.models.cache import init_cache
+from repro.optim.adamw import AdamWConfig, init_opt_state
+
+OUTDIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                      "experiments", "dryrun")
+
+
+# ------------------------------------------------------------------ variants
+
+
+def variant_config(cfg: ModelConfig, shape_name: str) -> ModelConfig:
+    """long_500k on full-attention archs runs the sliding-window variant
+    (DESIGN.md §Arch-applicability); SSM/hybrid run natively."""
+    if shape_name != "long_500k":
+        return cfg
+    if cfg.family in ("ssm", "hybrid"):
+        return cfg
+    pattern = tuple("swa" if t == "attn" else t for t in cfg.block_pattern)
+    return cfg.with_overrides(block_pattern=pattern,
+                              sliding_window=cfg.long_context_window)
+
+
+# ------------------------------------------------------------------ specs
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape's step."""
+    shp = INPUT_SHAPES[shape_name]
+    B, S = shp.global_batch, shp.seq_len
+    out: dict = {}
+    if shp.kind in ("train", "prefill"):
+        if cfg.frontend == "vision":
+            out["embeds"] = _struct((B, S, cfg.d_model), dtype)
+            out["positions_3d"] = _struct((3, B, S), jnp.int32)
+        else:
+            out["tokens"] = _struct((B, S), jnp.int32)
+        if shp.kind == "train":
+            out["labels"] = _struct((B, S), jnp.int32)
+    else:  # decode: one token against a seq_len cache
+        out["token"] = _struct((B,), jnp.int32)
+        cache = jax.eval_shape(
+            functools.partial(init_cache, cfg, B, S, dtype))
+        out["cache"] = cache
+    return out
+
+
+def params_specs(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda k: T.init_params(cfg, k, dtype), jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# ------------------------------------------------------------------ build
+
+
+def build_lowered(arch: str, shape_name: str, mesh, *, dtype=jnp.bfloat16,
+                  layer_override: int = 0, unroll: bool = False):
+    """Lower the right step for (arch, shape) against ``mesh``.
+
+    ``layer_override`` + ``unroll`` build a reduced-depth twin with the layer
+    loop unrolled, so XLA cost analysis (which counts while bodies once) sees
+    every layer — the two-point per-cycle delta is then exact for everything
+    outside the flash-attention chunk scans (see EXPERIMENTS.md §Dry-run notes)."""
+    cfg = variant_config(get_config(arch), shape_name)
+    if layer_override:
+        cfg = cfg.with_overrides(num_layers=layer_override)
+    shp = INPUT_SHAPES[shape_name]
+    B, S = shp.global_batch, shp.seq_len
+
+    p_struct = params_specs(cfg, dtype)
+    # FSDP param storage for training; replicated-over-data weights for serving
+    p_specs = SH.param_pspecs(cfg, p_struct, mesh, fsdp=(shp.kind == "train"))
+    p_shard = SH.to_sharding(mesh, p_specs)
+    ins = input_specs(cfg, shape_name, dtype)
+
+    if shp.kind == "train":
+        opt_cfg = AdamWConfig(lr=1e-4, schedule="cosine", total_steps=10_000)
+        opt_struct = jax.eval_shape(init_opt_state, p_struct)
+        opt_specs = SH.opt_pspecs(p_specs, opt_struct, mesh)
+        opt_shard = SH.to_sharding(mesh, opt_specs)
+        batch_keys = sorted(ins.keys())
+        batch_shard = {
+            k: SH.to_sharding(mesh, SH.batch_pspec(
+                mesh, B, ins[k].ndim - (2 if k == "positions_3d" else 1)))
+            for k in batch_keys
+        }
+        if "positions_3d" in batch_shard:  # (3, B, S): batch is dim 1
+            from jax.sharding import PartitionSpec as P
+            from repro.launch.mesh import batch_axes
+            bspec = SH.batch_pspec(mesh, B, 1)
+            batch_shard["positions_3d"] = SH.to_sharding(
+                mesh, P(None, bspec[0], None))
+        step = make_train_step(cfg, opt_cfg, remat=True, unroll=unroll)
+        fn = jax.jit(step,
+                     in_shardings=(p_shard, opt_shard, batch_shard),
+                     donate_argnums=(0, 1))
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import axis_size, batch_axes
+        act = NamedSharding(mesh, P(batch_axes(mesh), "model", None))
+        with T.activation_sharding(act, axis_size(mesh, "model")):
+            return fn.lower(p_struct, opt_struct, ins), cfg
+
+    if shp.kind == "prefill":
+        prefill = make_serve_prefill(cfg, max_seq=S, cache_dtype=dtype,
+                                     unroll=unroll)
+        kwargs_shard = {}
+        args = [p_struct]
+        in_shards = [p_shard]
+        if cfg.frontend == "vision":
+            from jax.sharding import PartitionSpec as P
+            bspec = SH.batch_pspec(mesh, B, 1)
+            fn = jax.jit(lambda p, e, pos3: prefill(p, embeds=e, positions_3d=pos3),
+                         in_shardings=(p_shard,
+                                       SH.to_sharding(mesh, SH.batch_pspec(mesh, B, 2)),
+                                       SH.to_sharding(mesh, P(None, bspec[0], None))))
+            return fn.lower(p_struct, ins["embeds"], ins["positions_3d"]), cfg
+        fn = jax.jit(lambda p, t: prefill(p, tokens=t),
+                     in_shardings=(p_shard,
+                                   SH.to_sharding(mesh, SH.batch_pspec(mesh, B, 1))))
+        return fn.lower(p_struct, ins["tokens"]), cfg
+
+    # decode
+    serve_step = make_serve_step(cfg, unroll=unroll)
+    cache_struct = ins["cache"]
+    cache_specs = SH.cache_pspecs(cfg, cache_struct, mesh, B)
+    cache_shard = SH.to_sharding(mesh, cache_specs)
+    tok_shard = SH.to_sharding(mesh, SH.batch_pspec(mesh, B, 0))
+    fn = jax.jit(serve_step,
+                 in_shardings=(p_shard, cache_shard, tok_shard),
+                 donate_argnums=(1,))
+    return fn.lower(p_struct, cache_struct, ins["token"]), cfg
+
+
+def _with_expert_sharding(fn):
+    """Trace-time MoE expert-parallel constraints (models/moe.py) for every
+    lowering in this module."""
+    @functools.wraps(fn)
+    def wrapped(*a, **kw):
+        from jax.sharding import Mesh
+        from repro.models.moe import expert_sharding
+        mesh = next((x for x in a if isinstance(x, Mesh)), kw.get("mesh"))
+        with expert_sharding(mesh):
+            return fn(*a, **kw)
+    return wrapped
+
+
+build_lowered = _with_expert_sharding(build_lowered)
+
+
+# --------------------------------------------------------------- federated
+
+
+def build_federated_lowered(rx_arch: str, tx_arch: str, shape_name: str, mesh,
+                            *, dtype=jnp.bfloat16, pre_projected: bool = False,
+                            extra_kv_mode: str = "concat",
+                            unroll: bool = False, layer_override: int = 0):
+    """Lower the FedRefine serving step (Eq. 1/4) at production scale: receiver
+    decode over [fused transmitter cache ∘ own cache].
+
+    baseline (pre_projected=False): the fuser projection of the transmitter's
+    full cache runs INSIDE the decode step — the literal reading of Eq. 1 where
+    C(F_ij, M_i) is formed at decode time.
+    optimized (pre_projected=True): the projection is amortised out of the
+    token loop (computed once per task at cache-receipt time); the step
+    consumes the already-projected stack. §Perf iteration 1 for pair C.
+    """
+    from repro.core import fuser as F
+    from repro.models.cache import extra_kv_layers
+
+    cfg_rx = get_config(rx_arch)
+    cfg_tx = get_config(tx_arch)
+    if layer_override:
+        cfg_rx = cfg_rx.with_overrides(num_layers=layer_override)
+    shp = INPUT_SHAPES[shape_name]
+    B, S = shp.global_batch, shp.seq_len
+    assert shp.kind == "decode"
+    n_rx = len(cfg_rx.attention_layers)
+    n_tx = len(cfg_tx.attention_layers)
+    hd_t, hkv_t = cfg_tx.resolved_head_dim, cfg_tx.num_kv_heads
+    hd_r, hkv_r = cfg_rx.resolved_head_dim, cfg_rx.num_kv_heads
+
+    p_struct = params_specs(cfg_rx, dtype)
+    p_shard = SH.to_sharding(mesh, SH.param_pspecs(cfg_rx, p_struct, mesh))
+    cache_struct = jax.eval_shape(
+        functools.partial(init_cache, cfg_rx, B, S, dtype))
+    cache_shard = SH.to_sharding(
+        mesh, SH.cache_pspecs(cfg_rx, cache_struct, mesh, B))
+    tok_shard = SH.to_sharding(mesh, SH.batch_pspec(mesh, B, 0))
+
+    fuser_struct = jax.eval_shape(
+        lambda k: F.init_fuser(cfg_tx, cfg_rx, k, dtype=dtype),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import batch_axes
+    baxes = batch_axes(mesh)
+    bspec = baxes if B % (16 * (2 if "pod" in mesh.axis_names else 1)) == 0 \
+        else None
+
+    if pre_projected:
+        fused_struct = {
+            "k": _struct((n_rx, B, hkv_r, S, hd_r), dtype),
+            "v": _struct((n_rx, B, hkv_r, S, hd_r), dtype),
+            "bias": _struct((n_rx, B, S), jnp.float32),
+        }
+        fused_shard = SH.to_sharding(mesh, {
+            "k": P(None, bspec, None, "model", None),
+            "v": P(None, bspec, None, "model", None),
+            "bias": P(None, bspec, None),
+        })
+
+        def step(params, cache, token, fused):
+            return T.decode_step(cfg_rx, params, cache, token,
+                                 extra_kv=extra_kv_layers(cfg_rx, fused),
+                                 extra_kv_mode=extra_kv_mode, unroll=unroll)
+
+        fn = jax.jit(step, in_shardings=(p_shard, cache_shard, tok_shard,
+                                         fused_shard), donate_argnums=(1,))
+        return fn.lower(p_struct, cache_struct,
+                        _struct((B,), jnp.int32), fused_struct), cfg_rx
+
+    tx_stack_struct = {
+        "k": _struct((n_tx, B, hkv_t, S, hd_t), dtype),
+        "v": _struct((n_tx, B, hkv_t, S, hd_t), dtype),
+    }
+    tx_shard = SH.to_sharding(mesh, {
+        "k": P(None, bspec, None, "model", None),
+        "v": P(None, bspec, None, "model", None),
+    })
+    fuser_shard = SH.to_sharding(
+        mesh, jax.tree.map(lambda _: P(), fuser_struct))
+
+    def step(params, cache, token, tx_stack, fuser):
+        fused = F.project_cache(fuser, cfg_tx, cfg_rx, tx_stack)
+        return T.decode_step(cfg_rx, params, cache, token,
+                             extra_kv=extra_kv_layers(cfg_rx, fused),
+                             extra_kv_mode=extra_kv_mode, unroll=unroll)
+
+    fn = jax.jit(step, in_shardings=(p_shard, cache_shard, tok_shard,
+                                     tx_shard, fuser_shard),
+                 donate_argnums=(1,))
+    return fn.lower(p_struct, cache_struct, _struct((B,), jnp.int32),
+                    tx_stack_struct, fuser_struct), cfg_rx
+
+
+build_federated_lowered = _with_expert_sharding(build_federated_lowered)
+
+
+# ------------------------------------------------------------------ run
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+             force: bool = False, dtype=jnp.bfloat16, save: bool = True,
+             tag: str = "") -> dict:
+    mesh_name = ("pod2x16x16" if multi_pod else "pod1x16x16") + tag
+    os.makedirs(OUTDIR, exist_ok=True)
+    outfile = os.path.join(OUTDIR, f"{canonical(arch)}__{shape_name}__{mesh_name}.json")
+    if os.path.exists(outfile) and not force:
+        with open(outfile) as f:
+            return json.load(f)
+
+    t0 = time.time()
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = 512 if multi_pod else 256
+        lowered, cfg = build_lowered(arch, shape_name, mesh, dtype=dtype)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        shp = INPUT_SHAPES[shape_name]
+
+        # --- two-point cycle extrapolation for bytes/collectives -----------
+        # XLA cost analysis counts while (scan) bodies once; the layer scan is
+        # the dominant loop, so we measure per-cycle deltas by compiling the
+        # same step at 1 and 2 pattern cycles and extrapolate linearly to the
+        # real depth. (Verified: flops(8L) == flops(16L) raw — EXPERIMENTS.md.)
+        p = len(cfg.block_pattern)
+        cycles = cfg.num_layers // p
+        tail = cfg.num_layers % p
+        bytes_corr = coll_corr = None
+        if cycles > 2:
+            costs = []
+            for c in (1, 2):
+                small, _ = build_lowered(
+                    arch, shape_name, mesh, dtype=dtype,
+                    layer_override=c * p + tail, unroll=True)
+                costs.append(RL.cost_of(small.compile()))
+            d_bytes = costs[1]["bytes"] - costs[0]["bytes"]
+            d_coll = costs[1]["coll_bytes"] - costs[0]["coll_bytes"]
+            bytes_corr = costs[0]["bytes"] + d_bytes * (cycles - 1)
+            coll_corr = costs[0]["coll_bytes"] + d_coll * (cycles - 1)
+
+        vcfg = variant_config(get_config(arch), shape_name)
+        rl = RL.analyze(
+            arch=arch, shape_name=shape_name, mesh_name=mesh_name, chips=chips,
+            compiled=compiled,
+            model_flops=RL.model_flops_for(cfg, shp, shp.kind),
+            analytic_flops=RL.flops_analytic(
+                vcfg, shp, shp.kind, remat=(shp.kind == "train")),
+            bytes_corrected=bytes_corr, coll_corrected=coll_corr)
+        rec.update(rl.to_json())
+        rec["ok"] = True
+        rec["lower_s"] = round(t1 - t0, 2)
+        rec["compile_s"] = round(t2 - t1, 2)
+        rec["params"] = cfg.param_count()
+        rec["active_params"] = cfg.active_param_count()
+    except Exception as e:  # noqa: BLE001 - dry-run failures are data
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    if save:
+        with open(outfile, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def run_federated(rx_arch: str, tx_arch: str, shape_name: str = "decode_32k",
+                  *, multi_pod: bool = False, pre_projected: bool = False,
+                  extra_kv_mode: str = "concat",
+                  force: bool = False, dtype=jnp.bfloat16) -> dict:
+    """Dry-run the FedRefine serving step; cached like run_pair."""
+    from repro.core.fuser import fuser_dims
+
+    mode = ("preproj" if pre_projected else "inline") + \
+        ("_split" if extra_kv_mode == "split" else "")
+    mesh_name = "pod2x16x16" if multi_pod else "pod1x16x16"
+    os.makedirs(OUTDIR, exist_ok=True)
+    outfile = os.path.join(
+        OUTDIR, f"FED_{canonical(rx_arch)}__from_{canonical(tx_arch)}"
+                f"__{shape_name}__{mesh_name}__{mode}.json")
+    if os.path.exists(outfile) and not force:
+        with open(outfile) as f:
+            return json.load(f)
+
+    rec: dict = {"arch": f"FED:{rx_arch}<-{tx_arch}:{mode}",
+                 "shape": shape_name, "mesh": mesh_name}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = 512 if multi_pod else 256
+        lowered, cfg_rx = build_federated_lowered(
+            rx_arch, tx_arch, shape_name, mesh, dtype=dtype,
+            pre_projected=pre_projected, extra_kv_mode=extra_kv_mode)
+        compiled = lowered.compile()
+        shp = INPUT_SHAPES[shape_name]
+        B, S = shp.global_batch, shp.seq_len
+
+        # analytic flops: receiver decode attending over 2S (prefix + own)
+        cfg_tx = get_config(tx_arch)
+        base = RL.flops_analytic(cfg_rx, shp, "decode")
+        hd, H = cfg_rx.resolved_head_dim, cfg_rx.num_heads
+        extra_attn = 2 * 2 * H * hd * S * len(cfg_rx.attention_layers) * B
+        fuser_fl = 0.0
+        if not pre_projected:
+            d_in, d_h, d_out = fuser_dims(cfg_tx, cfg_rx)
+            n_rx = len(cfg_rx.attention_layers)
+            fuser_fl = 2.0 * B * S * n_rx * (d_in * d_h + d_h * d_h + d_h * d_out)
+        analytic = base + extra_attn + fuser_fl
+
+        rl = RL.analyze(
+            arch=rec["arch"], shape_name=shape_name, mesh_name=mesh_name,
+            chips=chips, compiled=compiled,
+            model_flops=RL.model_flops_for(cfg_rx, shp, "decode"),
+            analytic_flops=analytic)
+        rec.update(rl.to_json())
+        rec["fuser_flops"] = fuser_fl
+        rec["ok"] = True
+        rec["compile_s"] = round(time.time() - t0, 2)
+    except Exception as e:  # noqa: BLE001
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    with open(outfile, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def summarize(rec: dict) -> str:
+    if not rec.get("ok"):
+        return (f"{rec['arch']:20s} {rec['shape']:12s} {rec['mesh']:12s} "
+                f"FAIL {rec['error'][:90]}")
+    mem = rec.get("memory_per_device") or {}
+    peak = mem.get("temp_bytes") or 0
+    return (f"{rec['arch']:20s} {rec['shape']:12s} {rec['mesh']:12s} OK "
+            f"comp={rec['compute_s']*1e3:8.2f}ms mem={rec['memory_s']*1e3:8.2f}ms "
+            f"coll={rec['collective_s']*1e3:8.2f}ms dom={rec['bottleneck']:10s} "
+            f"useful={rec['useful_ratio']:5.2f} temp={peak/2**30:6.2f}GiB "
+            f"compile={rec.get('compile_s', 0):.0f}s")
+
+
+def main() -> None:  # pragma: no cover - CLI
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--federated-from", default=None,
+                    help="transmitter arch: dry-run the FedRefine serve step "
+                         "(receiver = --arch)")
+    ap.add_argument("--pre-projected", action="store_true",
+                    help="federated: amortise fuser projection out of the step")
+    ap.add_argument("--split-prefix", action="store_true",
+                    help="federated: LSE-merged split attention (no concat)")
+    args = ap.parse_args()
+
+    if args.federated_from:
+        rec = run_federated(args.arch, args.federated_from,
+                            args.shape or "decode_32k",
+                            multi_pod=args.multi_pod,
+                            pre_projected=args.pre_projected,
+                            extra_kv_mode="split" if args.split_prefix else "concat",
+                            force=args.force)
+        print(summarize(rec), flush=True)
+        return
+
+    pairs = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                pairs.append((a, s, mp))
+
+    for a, s, mp in pairs:
+        rec = run_pair(a, s, multi_pod=mp, force=args.force)
+        print(summarize(rec), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the "pod" axis carries
+data-parallel replication across pods AND is the federation axis FedRefine maps
+participants onto (DESIGN.md §2).
+
+Defined as functions — importing this module must never touch jax device state
+(the dry-run sets XLA_FLAGS before any jax import; see dryrun.py).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    import jax.sharding as shd
+    return jax.make_mesh(shape, axes,
+                         axis_types=(shd.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU tests of the sharded code paths."""
+    return _mk((1, 1), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1

@@ -1,0 +1,128 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the cached
+dry-run JSONs (experiments/dryrun/*.json).
+
+Usage: PYTHONPATH=src python -m repro.launch.report [--write]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, canonical
+
+DRYRUN_DIR = os.path.join("experiments", "dryrun")
+SHAPE_ORDER = list(INPUT_SHAPES)
+
+
+def load_all(tag: str = "") -> dict:
+    recs = {}
+    for path in glob.glob(os.path.join(DRYRUN_DIR, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        key = (canonical(r["arch"]), r["shape"], r["mesh"])
+        recs[key] = r
+    return recs
+
+
+def _ms(x) -> str:
+    return f"{x*1e3:.2f}" if x is not None else "—"
+
+
+def roofline_table(recs: dict, mesh: str = "pod1x16x16") -> str:
+    lines = [
+        "| arch | shape | compute ms | memory ms | collective ms | bottleneck "
+        "| MODEL/analytic | temp GiB | peak arg GiB | ok |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_IDS:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s, mesh))
+            if r is None:
+                lines.append(f"| {a} | {s} | — | — | — | — | — | — | — | MISSING |")
+                continue
+            if not r.get("ok"):
+                err = r.get("error", "?")[:60]
+                lines.append(f"| {a} | {s} | — | — | — | — | — | — | — | FAIL: {err} |")
+                continue
+            mem = r.get("memory_per_device") or {}
+            temp = (mem.get("temp_bytes") or 0) / 2**30
+            args = (mem.get("argument_bytes") or 0) / 2**30
+            lines.append(
+                f"| {a} | {s} | {_ms(r['compute_s'])} | {_ms(r['memory_s'])} "
+                f"| {_ms(r['collective_s'])} | **{r['bottleneck']}** "
+                f"| {r['useful_ratio']:.2f} | {temp:.1f} | {args:.1f} | ok |")
+    return "\n".join(lines)
+
+
+def multipod_table(recs: dict) -> str:
+    lines = [
+        "| arch | shape | 1-pod ok | 2-pod ok | 2-pod collective ms | 2-pod temp GiB |",
+        "|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_IDS:
+        for s in SHAPE_ORDER:
+            r1 = recs.get((a, s, "pod1x16x16"))
+            r2 = recs.get((a, s, "pod2x16x16"))
+            ok1 = "ok" if (r1 and r1.get("ok")) else "FAIL"
+            ok2 = "ok" if (r2 and r2.get("ok")) else "FAIL"
+            coll = _ms(r2["collective_s"]) if r2 and r2.get("ok") else "—"
+            mem = ((r2.get("memory_per_device") or {}).get("temp_bytes") or 0) \
+                / 2**30 if r2 and r2.get("ok") else 0
+            lines.append(f"| {a} | {s} | {ok1} | {ok2} | {coll} | {mem:.1f} |")
+    return "\n".join(lines)
+
+
+def summary(recs: dict) -> str:
+    total = ok = 0
+    doms: dict = {}
+    for a in ARCH_IDS:
+        for s in SHAPE_ORDER:
+            for m in ("pod1x16x16", "pod2x16x16"):
+                r = recs.get((a, s, m))
+                total += 1
+                if r and r.get("ok"):
+                    ok += 1
+                    if m == "pod1x16x16":
+                        doms[r["bottleneck"]] = doms.get(r["bottleneck"], 0) + 1
+    return (f"{ok}/{total} (arch × shape × mesh) combinations lower+compile. "
+            f"Single-pod bottleneck split: {doms}.")
+
+
+def federated_table() -> str:
+    lines = [
+        "| federated serve step | mesh | compute ms | memory ms | collective ms "
+        "| bottleneck |",
+        "|---|---|---|---|---|---|",
+    ]
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "FED_*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['mesh']} | — | — | — | FAIL |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['mesh']} | {_ms(r['compute_s'])} "
+            f"| {_ms(r['memory_s'])} | {_ms(r['collective_s'])} "
+            f"| {r['bottleneck']} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod1x16x16")
+    args = ap.parse_args()
+    recs = load_all()
+    print("## Summary\n")
+    print(summary(recs))
+    print("\n## §Roofline (single-pod 16×16 = 256 chips)\n")
+    print(roofline_table(recs, args.mesh))
+    print("\n## §Dry-run multi-pod proof (2×16×16 = 512 chips)\n")
+    print(multipod_table(recs))
+    print("\n## Federated (FedRefine) serve-step dry-runs\n")
+    print(federated_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Serving entry points: the ``serve_step`` the decode shapes lower, plus a
+batched-request federated serving driver (examples/serve_federated.py).
+
+serve_step(params, cache, token) is one decode step; serve_prefill builds the
+cache. The federated variants thread the C2C fused prefix through (Eq. 4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.models.cache import extra_kv_layers
+
+
+def make_serve_step(cfg: ModelConfig, *, window_override: int = 0,
+                    unroll: bool = False):
+    def serve_step(params, cache, token):
+        return T.decode_step(cfg, params, cache, token,
+                             window_override=window_override, unroll=unroll)
+    return serve_step
+
+
+def make_serve_prefill(cfg: ModelConfig, max_seq: int, *,
+                       window_override: int = 0, cache_dtype=jnp.bfloat16,
+                       unroll: bool = False):
+    def serve_prefill(params, tokens=None, embeds=None, positions_3d=None):
+        return T.prefill(cfg, params, tokens, embeds, positions_3d,
+                         max_seq=max_seq, cache_dtype=cache_dtype,
+                         window_override=window_override, unroll=unroll)
+    return serve_prefill
+
+
+def make_fedrefine_serve_step(cfg_rx: ModelConfig):
+    """Decode step with a fused transmitter prefix (the C2C serving hot path)."""
+    def serve_step(params, cache, token, fused):
+        return T.decode_step(cfg_rx, params, cache, token,
+                             extra_kv=extra_kv_layers(cfg_rx, fused))
+    return serve_step
+
+
+class BatchedServer:
+    """Minimal batched-request server: collects requests up to ``max_batch``,
+    prefills once, then decodes in lockstep. CPU-scale driver for examples."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 max_seq: int = 256):
+        self.cfg, self.params = cfg, params
+        self.max_batch, self.max_seq = max_batch, max_seq
+        self._prefill = jax.jit(make_serve_prefill(cfg, max_seq,
+                                                   cache_dtype=jnp.float32))
+        self._step = jax.jit(make_serve_step(cfg))
+
+    def serve(self, prompts: jax.Array, gen_steps: int,
+              fused: Optional[dict] = None) -> jax.Array:
+        B, S = prompts.shape
+        assert B <= self.max_batch and S + gen_steps <= self.max_seq
+        if fused is not None:
+            step = jax.jit(make_fedrefine_serve_step(self.cfg))
+            ek = extra_kv_layers(self.cfg, fused)
+            logits, cache = T.prefill(self.cfg, self.params, prompts,
+                                      max_seq=self.max_seq,
+                                      cache_dtype=jnp.float32, extra_kv=ek)
+        else:
+            logits, cache = self._prefill(self.params, prompts)
+        tok = jnp.argmax(logits[:, S - 1], axis=-1)
+        out = [tok]
+        for _ in range(gen_steps - 1):
+            if fused is not None:
+                lg, cache = step(self.params, cache, tok, fused)
+            else:
+                lg, cache = self._step(self.params, cache, tok)
+            tok = jnp.argmax(lg, axis=-1)
+            out.append(tok)
+        return jnp.stack(out, axis=1)

@@ -1,0 +1,265 @@
+"""Logical→mesh sharding rules for every parameter/cache/input tree.
+
+Strategy (baseline; §Perf iterates on it):
+  * batch dims        -> ("pod","data") when divisible, else replicated
+  * attention heads   -> "model" via the projection output dims
+  * FFN hidden        -> "model" (Megatron-style column/row split)
+  * MoE experts       -> "model" (expert parallelism)
+  * vocab/embedding   -> "model"
+  * RG-LRU width      -> "model"
+  * SSD (mamba2-130m) -> replicated weights (130 M params; data-parallel only —
+                         documented in DESIGN.md; the state dims don't divide 16)
+  * KV caches         -> batch on data, kv_heads on "model" when divisible,
+                         else head_dim on "model" (MQA archs), else replicated
+
+Specs are derived from the *path names* of the pytree produced by
+transformer.init_params, with divisibility checks against the actual mesh, so
+any architecture config lowers without hand-tuning.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import axis_size, batch_axes
+
+
+def _div(n: int, m: int) -> bool:
+    return m > 0 and n % m == 0
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# --------------------------------------------------------------------- params
+
+
+def _leaf_spec(name: str, shape: tuple, msize: int, fsdp: bool = False) -> P:
+    """Spec for an UNSTACKED param leaf (cycle stacking handled by caller)."""
+    dims: list = [None] * len(shape)
+
+    def shard_last_if_div():
+        if shape and _div(shape[-1], msize):
+            dims[-1] = "model"
+
+    def shard_first_if_div():
+        if shape and _div(shape[0], msize):
+            dims[0] = "model"
+
+    if re.search(r"embed/table$", name):
+        # vocab-sharded. (A d-sharded serving variant was tried and REFUTED:
+        # the d-sharded lookup output fixes the layer-scan carry sharding to
+        # d-sharded, flipping every layer's comm pattern for the worse —
+        # EXPERIMENTS.md §Perf iteration B3.)
+        if _div(shape[0], msize):
+            dims[0] = "model"  # vocab-sharded embedding
+    elif re.search(r"lm_head/w$", name):
+        shard_last_if_div()
+    elif re.search(r"(wq|wk|wv)/(w|b)$", name):
+        shard_last_if_div()
+    elif re.search(r"wo/w$", name):
+        shard_first_if_div()
+    elif re.search(r"ffn/(gate|up)/w$", name) or re.search(r"shared/(gate|up)/w$", name):
+        shard_last_if_div()
+    elif re.search(r"ffn/down/w$", name) or re.search(r"shared/down/w$", name):
+        shard_first_if_div()
+    elif re.search(r"ffn/(w_gate|w_up)$", name):
+        if _div(shape[0], msize):
+            dims[0] = "model"  # expert parallelism
+        elif _div(shape[-1], msize):
+            # experts ∤ mesh (qwen2-moe: 60 on a 16-way axis): TP WITHIN each
+            # expert on the hidden dim — otherwise ~25 GiB of expert weights
+            # replicate on every chip (EXPERIMENTS.md §Dry-run notes)
+            dims[-1] = "model"
+    elif re.search(r"ffn/w_down$", name):
+        if _div(shape[0], msize):
+            dims[0] = "model"
+        elif _div(shape[1], msize):
+            dims[1] = "model"  # contraction dim: partial-sum AR, Megatron row
+    elif re.search(r"rec/(in_main|in_gate)/w$", name):
+        shard_last_if_div()
+    elif re.search(r"rec/out/w$", name):
+        shard_first_if_div()
+    elif re.search(r"rec/conv_[wb]$", name):
+        shard_last_if_div()
+    elif re.search(r"rec/(w_r|w_i)$", name):
+        if _div(shape[0], msize):
+            dims[0] = "model"  # block-diagonal heads
+    elif re.search(r"rec/(b_r|b_i|lam)$", name):
+        shard_first_if_div()
+    # ssd/* and norms: replicated (see module docstring)
+    return P(*dims)
+
+
+def param_pspecs(cfg: ModelConfig, params, mesh: Mesh, *, fsdp: bool = False):
+    """PartitionSpec tree matching ``params``.
+
+    ``fsdp=True`` (training): additionally shards param STORAGE over the batch
+    axes (first remaining divisible dim, never the stacked cycle dim) — GSPMD
+    all-gathers each layer's weights inside the scan and reduce-scatters its
+    grads, i.e. classic FSDP. Without it, params+optimizer of the 30B+ archs
+    exceed 16 GB/chip on a 16-way model axis. Serving keeps weights replicated
+    over data for latency (fsdp=False)."""
+    msize = axis_size(mesh, "model")
+    baxes = batch_axes(mesh)
+    bsize = 1
+    for a in baxes:
+        bsize *= axis_size(mesh, a)
+    baxis = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+
+    def add_data(spec: P, shape: tuple) -> P:
+        if not fsdp or baxis is None or bsize <= 1:
+            return spec
+        dims = list(spec) + [None] * (len(shape) - len(spec))
+        for i, (d, n) in enumerate(zip(dims, shape)):
+            if d is None and _div(n, bsize):
+                dims[i] = baxis
+                break
+        return P(*dims)
+
+    def spec(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        stacked = name.startswith("cycle/")
+        if stacked:
+            inner = add_data(_leaf_spec(name, shape[1:], msize, fsdp), shape[1:])
+            return P(None, *inner)
+        return add_data(_leaf_spec(name, shape, msize, fsdp), shape)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+# --------------------------------------------------------------------- opt
+
+
+def opt_pspecs(param_specs, opt_state, mesh: Optional[Mesh] = None):
+    """Optimizer state (m, v, master): the param spec PLUS ZeRO-1-style sharding
+    of the first remaining divisible dim over the batch axes. fp32 moments are
+    3× the bf16 params — without this, 30B+ archs exceed 16 GB/chip before a
+    single activation is allocated (EXPERIMENTS.md §Dry-run)."""
+    baxes = batch_axes(mesh) if mesh is not None else ()
+    bsize = 1
+    for a in baxes:
+        bsize *= axis_size(mesh, a)
+
+    def _uses_batch_axes(dims) -> bool:
+        for d in dims:
+            names = d if isinstance(d, tuple) else (d,)
+            if any(n in baxes for n in names if n):
+                return True
+        return False
+
+    def zero1(spec: P, shape: tuple) -> P:
+        if not baxes or bsize <= 1:
+            return spec
+        dims = list(spec) + [None] * (len(shape) - len(spec))
+        if _uses_batch_axes(dims):  # FSDP already shards storage over data
+            return P(*dims)
+        for i, (d, n) in enumerate(zip(dims, shape)):
+            if d is None and _div(n, bsize):
+                dims[i] = baxes if len(baxes) > 1 else baxes[0]
+                break
+        return P(*dims)
+
+    def mirror(tree):
+        def pick(path, leaf):
+            if leaf is None:
+                return None
+            node = param_specs
+            for p in path:
+                key = p.key if hasattr(p, "key") else p.idx
+                node = node[key]
+            return zero1(node, leaf.shape)
+
+        return jax.tree_util.tree_map_with_path(pick, tree,
+                                                is_leaf=lambda x: x is None)
+
+    return {
+        "step": P(),
+        "m": mirror(opt_state["m"]),
+        "v": mirror(opt_state["v"]),
+        "master": mirror(opt_state["master"]),
+    }
+
+
+# --------------------------------------------------------------------- cache
+
+
+def cache_pspecs(cfg: ModelConfig, cache, mesh: Mesh, batch: int):
+    """Specs for a decode cache pytree (init_cache structure)."""
+    msize = axis_size(mesh, "model")
+    baxes = batch_axes(mesh)
+    bsz = 1
+    for a in baxes:
+        bsz *= axis_size(mesh, a)
+    bspec = baxes if _div(batch, bsz) else None
+    hkv = cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+
+    def kv_spec(leaf_name: str, shape: tuple) -> P:
+        # (cycles, B, Hkv, S, hd)
+        if leaf_name.endswith("slot_pos"):
+            return P(None, bspec, None)
+        if _div(hkv, msize):
+            return P(None, bspec, "model", None, None)
+        # kv_heads not divisible (GQA 8 on a 16-way axis / MQA): shard the cache
+        # SEQUENCE dim instead — decode attention contracts over seq, so GSPMD
+        # lowers it to per-shard partial attention + two small all-reduces
+        # (flash-decode-style sequence parallelism) rather than resharding the
+        # whole cache every step.
+        seq = shape[3]
+        if _div(seq, msize):
+            return P(None, bspec, None, "model", None)
+        if _div(hd, msize):
+            return P(None, bspec, None, None, "model")
+        return P(None, bspec, None, None, None)
+
+    def spec(path, leaf):
+        name = _path_str(path)
+        if name == "pos":
+            return P()
+        if name.endswith("/k") or name.endswith("/v"):
+            return kv_spec(name, leaf.shape)
+        if name.endswith("slot_pos"):
+            return P(None, bspec, None)
+        if name.endswith("/h"):  # recurrent states
+            if leaf.ndim == 3:  # rglru (C, B, W)
+                w = leaf.shape[-1]
+                return P(None, bspec, "model" if _div(w, msize) else None)
+            return P(None, bspec, None, None, None)  # ssd (C,B,nh,hd,ns)
+        if name.endswith("/conv"):
+            return P(None, bspec, None, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def batch_pspec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
+    baxes = batch_axes(mesh)
+    bsz = 1
+    for a in baxes:
+        bsz *= axis_size(mesh, a)
+    lead = baxes if _div(batch, bsz) else None
+    return P(lead, *([None] * extra_dims))
+
+
+def to_sharding(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )

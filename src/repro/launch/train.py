@@ -1,0 +1,93 @@
+"""Training drivers: backbone LM pre-training step (what train_4k lowers) and a
+host loop for CPU-scale runs (examples/ and the case-study transmitters).
+
+``--arch`` selects any assigned architecture (repro.configs); the same step
+function is what launch/dryrun.py lowers against the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, get_config, get_smoke_config
+from repro.models import transformer as T
+from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *, remat: bool = True,
+                    unroll: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, loss).
+
+    ``batch``: {"tokens" (B,S) | "embeds" (B,S,d)}, "labels" (B,S),
+    optional "positions_3d" (3,B,S) for M-RoPE archs.
+    """
+
+    def train_step(params, opt_state, batch):
+        def loss(p):
+            return T.loss_fn(
+                cfg, p,
+                tokens=batch.get("tokens"),
+                labels=batch["labels"],
+                embeds=batch.get("embeds"),
+                positions_3d=batch.get("positions_3d"),
+                remat=remat,
+                unroll=unroll,
+            )
+
+        loss_val, grads = jax.value_and_grad(loss)(params)
+        new_p, new_s = apply_updates(opt_cfg, params, grads, opt_state)
+        return new_p, new_s, loss_val
+
+    return train_step
+
+
+def train_loop(cfg: ModelConfig, batches, steps: int, *, lr: float = 3e-4,
+               seed: int = 0, dtype=jnp.float32, params=None,
+               log_every: int = 50, verbose: bool = True):
+    """Host training loop (CPU scale). Returns (params, losses)."""
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = T.init_params(cfg, key, dtype)
+    opt_cfg = AdamWConfig(lr=lr, schedule="linear_warmup_cosine",
+                          warmup_steps=min(100, steps // 10 + 1),
+                          total_steps=steps)
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat=False))
+    losses = []
+    for i in range(steps):
+        batch = next(batches)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        losses.append(float(loss))
+        if verbose and (i % log_every == 0 or i == steps - 1):
+            print(f"  [{cfg.name}] step {i:5d}  loss {float(loss):.4f}")
+    return params, losses
+
+
+def main() -> None:  # pragma: no cover - CLI
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+
+    from repro.data.synthetic import World, WorldSpec, lm_stream
+    world = World(WorldSpec(vocab_size=min(cfg.vocab_size, 512)))
+    stream = lm_stream(world, 0, args.batch, args.seq)
+    t0 = time.time()
+    _, losses = train_loop(cfg, stream, args.steps, lr=args.lr)
+    print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"({time.time()-t0:.1f}s, {args.steps} steps)")
+
+
+if __name__ == "__main__":
+    main()

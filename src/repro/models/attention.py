@@ -1,0 +1,351 @@
+"""GQA attention with RoPE / M-RoPE, qk-norm, QKV bias and sliding-window support.
+
+One implementation serves every assigned family:
+  - dense / moe / vlm / audio: full causal attention (``attn``)
+  - recurrentgemma local layers + long-context variant of dense archs: ``swa``
+  - decode paths attend over a cache, optionally the *concatenation* of the
+    receiver's own cache with fused transmitter caches (the paper's Eq. 1/4) —
+    ``attend`` is deliberately cache-layout agnostic so core/c2c.py can reuse it.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+# ------------------------------------------------------------------ params
+
+
+def init_attention(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> dict:
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko, kn = jax.random.split(key, 5)
+    p = {
+        "wq": L.init_linear(kq, cfg.d_model, cfg.num_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": L.init_linear(kk, cfg.d_model, cfg.num_kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": L.init_linear(kv, cfg.d_model, cfg.num_kv_heads * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": L.init_linear(ko, cfg.num_heads * hd, cfg.d_model, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+# ------------------------------------------------------------------ projection
+
+
+def project_qkv(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,  # (B, S, d)
+    cos: jax.Array,  # (B, S, hd//2) or (S, hd//2)
+    sin: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns q (B, H, S, hd), k/v (B, Hkv, S, hd) with RoPE + qk-norm applied."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = L.linear(params["wq"], x).reshape(B, S, cfg.num_heads, hd)
+    k = L.linear(params["wk"], x).reshape(B, S, cfg.num_kv_heads, hd)
+    v = L.linear(params["wv"], x).reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm_nohead(q, params["q_norm"], cfg.norm_eps)
+        k = L.rmsnorm_nohead(k, params["k_norm"], cfg.norm_eps)
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch
+        cos, sin = cos[None], sin[None]
+    q = L.apply_rope(q.transpose(0, 2, 1, 3), cos[:, None], sin[:, None])
+    k = L.apply_rope(k.transpose(0, 2, 1, 3), cos[:, None], sin[:, None])
+    v = v.transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+# ------------------------------------------------------------------ core attend
+
+
+def attend(
+    q: jax.Array,  # (B, H, Sq, hd)
+    k: jax.Array,  # (B, Hkv, Sk, hd)
+    v: jax.Array,  # (B, Hkv, Sk, hd)
+    mask: Optional[jax.Array],  # broadcastable to (B, 1|H, Sq, Sk); True = attend
+    extra_bias: Optional[jax.Array] = None,  # additive (B|1, 1, Sq|1, Sk) fp32
+) -> jax.Array:
+    """Grouped-query scaled-dot-product attention; softmax in fp32.
+
+    ``extra_bias`` implements the fuser/gating attention-mass gates (logit bias on
+    fused-prefix keys). Returns (B, Sq, H*hd).
+    """
+    B, H, Sq, hd = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, Sq, hd)
+    # NOTE: the dot runs in the operand dtype (bf16 on TPU MXU with native fp32
+    # accumulation); forcing preferred_element_type=f32 here makes XLA
+    # materialise an fp32 copy of the WHOLE cache operand (2× cache HBM —
+    # EXPERIMENTS.md §Dry-run notes). Softmax is fp32 regardless.
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    if extra_bias is not None:
+        assert extra_bias.ndim == 4 and extra_bias.shape[1] == 1, extra_bias.shape
+        scores = scores + extra_bias[:, :, None].astype(jnp.float32)
+    if mask is not None:
+        # (B|1, 1, Sq, Sk) -> (B|1, 1, 1, Sq, Sk), broadcast over (Hkv, G)
+        assert mask.ndim == 4 and mask.shape[1] == 1, mask.shape
+        scores = jnp.where(mask[:, :, None], scores, jnp.float32(-1e30))
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", w.astype(v.dtype), v)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3).reshape(B, Sq, H * hd)
+
+
+def attend_stats(
+    q: jax.Array,  # (B, H, Sq, hd)
+    k: jax.Array,  # (B, Hkv, Sk, hd)
+    v: jax.Array,
+    mask: Optional[jax.Array],
+    extra_bias: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Attention with ONLINE-SOFTMAX STATISTICS exposed: returns
+    (o_unnormalised (B,H,Sq,hd) fp32, m (B,H,Sq), l (B,H,Sq)) so two attention
+    segments (e.g. fused prefix ∘ own cache) can be LSE-merged WITHOUT
+    concatenating their k/v — each segment keeps its own sharding."""
+    B, H, Sq, hd = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, Sq, hd)
+    # operand-dtype dot (see attend): avoids an fp32 cache materialisation
+    s = (jnp.einsum("bkgsd,bktd->bkgst", qg, k).astype(jnp.float32)
+         * (hd ** -0.5))
+    if extra_bias is not None:
+        s = s + extra_bias[:, :, None].astype(jnp.float32)
+    if mask is not None:
+        s = jnp.where(mask[:, :, None], s, jnp.float32(-1e30))
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p.astype(v.dtype), v).astype(jnp.float32)
+    return (o.reshape(B, H, Sq, hd), m.reshape(B, H, Sq), l.reshape(B, H, Sq))
+
+
+def merge_attention(parts) -> jax.Array:
+    """Merge [(o, m, l), ...] online-softmax segments -> (B, Sq, H*hd)."""
+    m_star = parts[0][1]
+    for _, m, _ in parts[1:]:
+        m_star = jnp.maximum(m_star, m)
+    o_sum = 0.0
+    l_sum = 0.0
+    for o, m, l in parts:
+        alpha = jnp.exp(m - m_star)
+        o_sum = o_sum + o * alpha[..., None]
+        l_sum = l_sum + l * alpha
+    out = o_sum / jnp.maximum(l_sum[..., None], 1e-30)
+    B, H, Sq, hd = out.shape
+    return out.transpose(0, 2, 1, 3).reshape(B, Sq, H * hd).astype(jnp.float32)
+
+
+def causal_mask(Sq: int, Sk: int, *, window: int = 0) -> jax.Array:
+    """(1, 1, Sq, Sk) boolean; assumes queries are the last Sq of the Sk keys."""
+    qpos = jnp.arange(Sq) + (Sk - Sq)
+    kpos = jnp.arange(Sk)
+    m = kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        m &= kpos[None, :] > qpos[:, None] - window
+    return m[None, None]
+
+
+# ------------------------------------------------------------------ flash fwd
+
+
+def _flash_attend(
+    q: jax.Array,  # (B, H, S, hd)
+    k: jax.Array,  # (B, Hkv, Sk, hd) — may include a fused prefix
+    v: jax.Array,
+    key_pos: jax.Array,  # (Sk,) int32; -1 = always-visible prefix key
+    key_bias: Optional[jax.Array],  # (B, Sk) fp32 additive, or None
+    *,
+    window: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Memory-efficient causal attention: q-chunked map with a REMATTED body.
+
+    This is the jnp twin of the Pallas flash kernels. Each q chunk attends over
+    the full key set with fp32 softmax; the body is jax.checkpoint'ed, so the
+    backward pass recomputes each chunk's scores instead of storing them (the
+    same recompute strategy real flash-attention backward uses). Live score
+    memory is O(q_chunk × Sk) — bounded by an adaptive q_chunk — instead of
+    O(S²); an online-softmax kv-scan variant was rejected because scan carries
+    (m, l, acc) must be saved per step for backward, which at 32k keys costs
+    more HBM than it saves (EXPERIMENTS.md §Perf, iteration log).
+
+    FLOP count equals the dense einsum (masked blocks are computed then
+    discarded — §Perf notes the banded-skip optimisation for SWA).
+    """
+    B, H, S, hd = q.shape
+    Hkv = k.shape[1]
+    Sk = k.shape[2]
+    G = H // Hkv
+    # adaptive q chunk: bound the GLOBAL fp32 score block ≈ 64 GiB (≤ 256 MiB
+    # per chip on the production mesh)
+    budget = 64 * 2**30
+    qc = min(q_chunk, S)
+    while qc > 16 and B * H * qc * Sk * 4 > budget:
+        qc //= 2
+    pad_q = (-S) % qc
+    qp = jnp.arange(S, dtype=jnp.int32)
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        qp = jnp.concatenate([qp, jnp.zeros((pad_q,), jnp.int32)])
+    Sq_p = S + pad_q
+    nq = Sq_p // qc
+    qg = q.reshape(B, Hkv, G, Sq_p, hd)
+    scale = hd ** -0.5
+
+    @jax.checkpoint
+    def q_block(qi):
+        qblk = jax.lax.dynamic_slice_in_dim(qg, qi * qc, qc, axis=3)
+        qpos = jax.lax.dynamic_slice_in_dim(qp, qi * qc, qc)
+        s = jnp.einsum("bkgqd,bktd->bkgqt", qblk, k,
+                       preferred_element_type=jnp.float32) * scale
+        if key_bias is not None:
+            s = s + key_bias[:, None, None, None, :].astype(jnp.float32)
+        mask = key_pos[None, :] <= qpos[:, None]
+        if window > 0:
+            mask &= (key_pos[None, :] < 0) | (key_pos[None, :] > qpos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, jnp.float32(-1e30))
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgqt,bktd->bkgqd", p.astype(v.dtype), v)
+        return out.astype(q.dtype)
+
+    outs = jax.lax.map(q_block, jnp.arange(nq))
+    # outs: (nq, B, Hkv, G, qc, hd) -> (B, S, H*hd)
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hkv, G, Sq_p, hd)
+    out = out[:, :, :, :S]
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+
+
+# ------------------------------------------------------------------ block fwd
+
+
+def full_forward(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,
+    cos: jax.Array,
+    sin: jax.Array,
+    *,
+    window: int = 0,
+    extra_kv: Optional[dict] = None,  # fused transmitter cache (C2C): k/v (B,Hkv,Sf,hd)
+    flash_threshold: int = 2048,  # above this S, use the chunked flash path
+) -> Tuple[jax.Array, dict]:
+    """Training/prefill attention over the whole sequence.
+
+    Returns (out (B,S,d), kv dict with k/v (B,Hkv,S,hd)) — the kv dict is what
+    prefill stores into the cache and what C2C projects. ``extra_kv`` (the paper's
+    C(F_ij, M_i) term) is prepended sequence-wise and visible to every query.
+    """
+    S = x.shape[1]
+    B = x.shape[0]
+    q, k, v = project_qkv(cfg, params, x, cos, sin)
+
+    if S > flash_threshold:  # memory-efficient path (train_4k / prefill_32k)
+        k_all, v_all = k, v
+        key_pos = jnp.arange(S, dtype=jnp.int32)
+        key_bias = None
+        if extra_kv is not None:
+            Sf = extra_kv["k"].shape[-2]
+            k_all = jnp.concatenate([extra_kv["k"].astype(k.dtype), k], axis=-2)
+            v_all = jnp.concatenate([extra_kv["v"].astype(v.dtype), v], axis=-2)
+            key_pos = jnp.concatenate(
+                [jnp.full((Sf,), -1, jnp.int32), key_pos])  # prefix: always visible
+            if "bias" in extra_kv:
+                key_bias = jnp.concatenate(
+                    [extra_kv["bias"].astype(jnp.float32),
+                     jnp.zeros((B, S), jnp.float32)], axis=-1)
+        out = _flash_attend(q, k_all, v_all, key_pos, key_bias, window=window)
+        return L.linear(params["wo"], out), {"k": k, "v": v}
+
+    mask = causal_mask(S, S, window=window)
+    extra_bias = None
+    if extra_kv is not None:
+        Sf = extra_kv["k"].shape[-2]
+        k = jnp.concatenate([extra_kv["k"].astype(k.dtype), k], axis=-2)
+        v = jnp.concatenate([extra_kv["v"].astype(v.dtype), v], axis=-2)
+        pre = jnp.ones((1, 1, S, Sf), bool)
+        mask = jnp.concatenate([pre, jnp.broadcast_to(mask, (1, 1, S, S))], axis=-1)
+        if "bias" in extra_kv:  # per-position gate bias on the fused prefix
+            eb = jnp.broadcast_to(extra_kv["bias"][:, None, None, :], (B, 1, 1, Sf))
+            extra_bias = jnp.concatenate(
+                [eb, jnp.zeros((B, 1, 1, S), jnp.float32)], axis=-1)
+    out = attend(q, k, v, mask, extra_bias)
+    return L.linear(params["wo"], out), {"k": k[..., -S:, :], "v": v[..., -S:, :]}
+
+
+def decode_forward(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,  # (B, 1, d)
+    cos: jax.Array,  # (B, 1, hd//2)
+    sin: jax.Array,
+    kv: dict,  # full: k/v (B,Hkv,S,hd); swa ring: + slot_pos (B,W)
+    pos: jax.Array,  # scalar int32 — current absolute position
+    *,
+    window: int = 0,
+    extra_kv: Optional[dict] = None,  # fused transmitter cache (C2C), always visible
+    extra_kv_mode: str = "concat",  # "concat" (Eq. 1 literal) | "split" (LSE merge)
+) -> Tuple[jax.Array, dict]:
+    """Single-token decode against a cache; returns (out (B,1,d), updated kv)."""
+    B = x.shape[0]
+    q, k_new, v_new = project_qkv(cfg, params, x, cos, sin)
+    k_new = k_new.astype(kv["k"].dtype)
+    v_new = v_new.astype(kv["v"].dtype)
+
+    if "slot_pos" in kv:  # sliding-window ring buffer
+        W = kv["k"].shape[-2]
+        slot = pos % W
+        k = jax.lax.dynamic_update_slice(kv["k"], k_new, (0, 0, slot, 0))
+        v = jax.lax.dynamic_update_slice(kv["v"], v_new, (0, 0, slot, 0))
+        slot_pos = jax.lax.dynamic_update_slice(
+            kv["slot_pos"], jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32), (0, slot)
+        )
+        valid = (slot_pos >= 0) & (slot_pos > pos - (window or W)) & (slot_pos <= pos)
+        mask = valid[:, None, None, :]  # (B,1,1,W)
+        new_kv = {"k": k, "v": v, "slot_pos": slot_pos}
+    else:  # full cache
+        S = kv["k"].shape[-2]
+        k = jax.lax.dynamic_update_slice(kv["k"], k_new, (0, 0, pos, 0))
+        v = jax.lax.dynamic_update_slice(kv["v"], v_new, (0, 0, pos, 0))
+        kpos = jnp.arange(S)
+        mask = (kpos <= pos)[None, None, None, :]
+        new_kv = {"k": k, "v": v}
+
+    if extra_kv is not None and extra_kv_mode == "split":
+        # LSE-merged split attention: own cache and fused prefix attend
+        # separately (each under its own sharding), merged by online-softmax
+        # statistics — no concatenated 2S cache is ever formed (§Perf, pair C).
+        own = attend_stats(q, k, v, mask)
+        pb = (extra_kv["bias"][:, None, None, :]
+              if "bias" in extra_kv else None)
+        pre = attend_stats(q, extra_kv["k"].astype(k.dtype),
+                           extra_kv["v"].astype(v.dtype), None, pb)
+        out = merge_attention([own, pre]).astype(x.dtype)
+        return L.linear(params["wo"], out), new_kv
+
+    extra_bias = None
+    if extra_kv is not None:
+        Sf = extra_kv["k"].shape[-2]
+        k = jnp.concatenate([extra_kv["k"].astype(k.dtype), k], axis=-2)
+        v = jnp.concatenate([extra_kv["v"].astype(v.dtype), v], axis=-2)
+        fmask = jnp.ones((1, 1, 1, Sf), bool)
+        mask = jnp.concatenate([jnp.broadcast_to(fmask, (*mask.shape[:3], Sf)), mask],
+                               axis=-1)
+        if "bias" in extra_kv:
+            Sk = new_kv["k"].shape[-2]
+            eb = jnp.broadcast_to(extra_kv["bias"][:, None, None, :], (B, 1, 1, Sf))
+            extra_bias = jnp.concatenate(
+                [eb, jnp.zeros((B, 1, 1, Sk), jnp.float32)], axis=-1)
+
+    out = attend(q, k, v, mask, extra_bias)
+    return L.linear(params["wo"], out), new_kv

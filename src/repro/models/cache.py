@@ -1,0 +1,183 @@
+"""Decode-state pytrees: KV caches (full + sliding-window ring) and recurrent states.
+
+The cache is the *medium of federation* in this paper (C2C communicates KV caches),
+so its layout is a first-class design object:
+
+- ``full`` attention layers: k/v of shape (batch, kv_heads, max_seq, head_dim);
+  valid entries are positions [0, pos).
+- ``swa`` layers: ring buffer of length ``window`` — slot = position % window, plus a
+  per-slot ``slot_pos`` array so masking survives wrap-around. This is what makes
+  long_500k (524 288-token decode) memory-feasible for windowed layers.
+- ``rec`` layers (RG-LRU): hidden state (batch, width) + conv tail (batch, K-1, width).
+- ``ssd`` layers (Mamba-2): state (batch, nheads, head_dim, d_state) + conv tail.
+
+A model cache is ``{"pos": int32[], "layers": [per-pattern-position stacked pytrees]}``
+— stacked along a leading cycle axis to match the scan-over-layers execution
+(see transformer.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# -------------------------------------------------------------------- builders
+
+
+def init_attn_kv(
+    cycles: int, batch: int, kv_heads: int, max_seq: int, head_dim: int, dtype
+) -> dict:
+    return {
+        "k": jnp.zeros((cycles, batch, kv_heads, max_seq, head_dim), dtype),
+        "v": jnp.zeros((cycles, batch, kv_heads, max_seq, head_dim), dtype),
+    }
+
+
+def init_swa_kv(
+    cycles: int, batch: int, kv_heads: int, window: int, head_dim: int, dtype
+) -> dict:
+    return {
+        "k": jnp.zeros((cycles, batch, kv_heads, window, head_dim), dtype),
+        "v": jnp.zeros((cycles, batch, kv_heads, window, head_dim), dtype),
+        # absolute position held by each ring slot; -1 = empty
+        "slot_pos": jnp.full((cycles, batch, window), -1, jnp.int32),
+    }
+
+
+def init_rec_state(cycles: int, batch: int, width: int, conv_k: int, dtype) -> dict:
+    return {
+        "h": jnp.zeros((cycles, batch, width), jnp.float32),  # recurrence kept fp32
+        "conv": jnp.zeros((cycles, batch, conv_k - 1, width), dtype),
+    }
+
+
+def init_ssd_state(
+    cycles: int, batch: int, nheads: int, head_dim: int, d_state: int,
+    conv_dim: int, conv_k: int, dtype
+) -> dict:
+    return {
+        "h": jnp.zeros((cycles, batch, nheads, head_dim, d_state), jnp.float32),
+        "conv": jnp.zeros((cycles, batch, conv_k - 1, conv_dim), dtype),
+    }
+
+
+def init_cache(
+    cfg: ModelConfig,
+    batch: int,
+    max_seq: int,
+    dtype=jnp.bfloat16,
+    *,
+    window_override: Optional[int] = None,
+) -> dict:
+    """Build the full decode cache for ``cfg`` (see transformer.py layer grouping)."""
+    from repro.models.transformer import layer_grouping  # cycle structure
+
+    cycles, pattern, tail = layer_grouping(cfg)
+    hd = cfg.resolved_head_dim
+    layers = []
+    for pos, kind in enumerate(pattern + tail):
+        n = cycles if pos < len(pattern) else 1
+        if kind == "attn":
+            layers.append(init_attn_kv(n, batch, cfg.num_kv_heads, max_seq, hd, dtype))
+        elif kind == "swa":
+            w = min(window_override or cfg.sliding_window or cfg.long_context_window,
+                    max_seq)
+            layers.append(init_swa_kv(n, batch, cfg.num_kv_heads, w, hd, dtype))
+        elif kind == "rec":
+            width = cfg.rglru_width or cfg.d_model
+            layers.append(init_rec_state(n, batch, width, cfg.conv_kernel, dtype))
+        elif kind == "ssd":
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+            layers.append(
+                init_ssd_state(n, batch, cfg.ssm_nheads, cfg.ssm_head_dim,
+                               cfg.ssm_state, conv_dim, cfg.conv_kernel, dtype)
+            )
+        else:
+            raise ValueError(f"unknown layer kind {kind!r}")
+    return {"pos": jnp.zeros((), jnp.int32), "layers": layers}
+
+
+# ----------------------------------------------------------------- concat (C2C)
+
+
+def concat_kv(own: dict, fused: dict) -> dict:
+    """Sequence-wise concatenation ``C(F_ij, M_i) ∘ C(M_j)`` of Eq. 1/4.
+
+    Both operands are per-layer full-attention KV dicts with k/v of shape
+    (..., kv_heads, seq, head_dim); the fused (projected transmitter) cache is
+    *prepended*, matching the paper's decode equation where the receiver's own
+    running cache stays contiguous at the tail.
+    """
+    return {
+        "k": jnp.concatenate([fused["k"], own["k"]], axis=-2),
+        "v": jnp.concatenate([fused["v"], own["v"]], axis=-2),
+    }
+
+
+def attn_kv_stack(cfg: ModelConfig, cache: dict, length: int | None = None) -> dict:
+    """Collect all attention-layer k/v into one stack (n_attn, B, Hkv, S, hd).
+
+    This is the tensor C2C communicates: the transmitter exports it, the fuser
+    projects it, the receiver prepends it. Pattern positions + tail are
+    concatenated in layer order along the leading axis.
+    """
+    from repro.models.transformer import layer_grouping
+
+    cycles, pattern, tail = layer_grouping(cfg)
+    ks, vs = [], []
+    for i, kind in enumerate(pattern + tail):
+        if kind in ("attn", "swa"):
+            e = cache["layers"][i]
+            ks.append(e["k"])
+            vs.append(e["v"])
+    k = jnp.concatenate(ks, axis=0)
+    v = jnp.concatenate(vs, axis=0)
+    if length is not None:
+        k, v = k[..., :length, :], v[..., :length, :]
+    return {"k": k, "v": v}
+
+
+def extra_kv_layers(cfg: ModelConfig, fused_stack: dict) -> list:
+    """Turn a fused stack (n_attn, B, Hkv, Sf, hd) into the per-position
+    ``extra_kv`` list that transformer.forward / decode_step consume."""
+    from repro.models.transformer import layer_grouping
+
+    cycles, pattern, tail = layer_grouping(cfg)
+    out = []
+    off = 0
+
+    def slice_at(o, n):
+        e = {"k": fused_stack["k"][o : o + n], "v": fused_stack["v"][o : o + n]}
+        if "bias" in fused_stack:
+            e["bias"] = fused_stack["bias"][o : o + n]
+        return e
+
+    for i, kind in enumerate(pattern):
+        if kind in ("attn", "swa"):
+            out.append(slice_at(off, cycles))
+            off += cycles
+        else:
+            out.append(None)
+    for kind in tail:
+        if kind in ("attn", "swa"):
+            out.append(slice_at(off, 1))
+            off += 1
+        else:
+            out.append(None)
+    return out
+
+
+def n_attn_layers(cfg: ModelConfig) -> int:
+    return len(cfg.attention_layers)
+
+
+def cache_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    """Communication load of C2C per generated/cached token (paper: 88 KB/token
+    for the 4-transmitter case-study zoo). Counts k+v over all attention layers."""
+    hd = cfg.resolved_head_dim
+    n_attn = len(cfg.attention_layers)
+    return 2 * n_attn * cfg.num_kv_heads * hd * dtype_bytes

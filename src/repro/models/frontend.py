@@ -1,0 +1,58 @@
+"""Modality frontend stubs (the brief's single permitted carve-out).
+
+For [audio] (MusicGen: EnCodec conv codec) and [vlm] (Qwen2-VL: ViT + projector)
+architectures we do NOT implement the encoder; ``input_specs`` supplies precomputed
+frame/patch embeddings of the right shape. This module provides (a) the spec
+builders and (b) deterministic synthetic embedding generators so smoke tests and
+examples can run end-to-end on CPU.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def embed_spec(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct for precomputed frontend embeddings."""
+    return jax.ShapeDtypeStruct((batch, seq, cfg.d_model), dtype)
+
+
+def mrope_position_spec(batch: int, seq: int):
+    """(3, B, S) temporal/height/width position ids for M-RoPE."""
+    return jax.ShapeDtypeStruct((3, batch, seq), jnp.int32)
+
+
+def synth_embeddings(cfg: ModelConfig, key, batch: int, seq: int,
+                     dtype=jnp.bfloat16) -> jax.Array:
+    """Deterministic stand-in embeddings (unit-variance gaussian)."""
+    return jax.random.normal(key, (batch, seq, cfg.d_model), jnp.float32).astype(dtype)
+
+
+def synth_mrope_positions(batch: int, seq: int, *, image_patches: int = 0,
+                          grid: Optional[tuple] = None) -> jax.Array:
+    """3-D M-RoPE ids: an optional leading vision block laid out on a (t,h,w)
+    grid, followed by text positions advancing all three streams together
+    (Qwen2-VL §3.1)."""
+    if image_patches and grid is None:
+        side = max(int(image_patches ** 0.5), 1)
+        grid = (1, side, max(image_patches // side, 1))
+        image_patches = grid[0] * grid[1] * grid[2]
+    t_ids, h_ids, w_ids = [], [], []
+    if image_patches:
+        tt, hh, ww = jnp.meshgrid(
+            jnp.arange(grid[0]), jnp.arange(grid[1]), jnp.arange(grid[2]),
+            indexing="ij")
+        t_ids.append(tt.reshape(-1))
+        h_ids.append(hh.reshape(-1))
+        w_ids.append(ww.reshape(-1))
+    n_text = seq - image_patches
+    start = (max(grid) if image_patches else 0)
+    text = jnp.arange(start, start + n_text)
+    t_ids.append(text), h_ids.append(text), w_ids.append(text)
+    ids = jnp.stack([jnp.concatenate(t_ids), jnp.concatenate(h_ids),
+                     jnp.concatenate(w_ids)])  # (3, S)
+    return jnp.broadcast_to(ids[:, None, :], (3, batch, seq)).astype(jnp.int32)

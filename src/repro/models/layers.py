@@ -1,0 +1,150 @@
+"""Shared primitive layers: norms, rotary embeddings (RoPE / M-RoPE), SwiGLU MLP.
+
+Everything is functional: ``init_*`` builds a param pytree, ``apply_*`` consumes it.
+Params live in ``param_dtype`` (bf16 at production scale); norm statistics and rotary
+tables are computed in fp32 for stability, matching standard practice.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def rmsnorm_nohead(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """qk-norm over the trailing head_dim with a learned per-dim scale."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings.
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,), fp32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_table(positions: jax.Array, head_dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for integer ``positions`` (any shape) -> (*pos, head_dim//2)."""
+    inv = rope_freqs(head_dim, theta)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (*pos, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate ``x`` (..., seq, head_dim) by tables (..., seq, head_dim//2).
+
+    Uses the half-split convention (x1 = first half, x2 = second half), matching
+    Llama/Qwen reference implementations.
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f = x1.astype(jnp.float32)
+    x2f = x2.astype(jnp.float32)
+    out1 = x1f * cos - x2f * sin
+    out2 = x2f * cos + x1f * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+def mrope_table(
+    positions_3d: jax.Array,  # (3, batch, seq) — temporal / height / width ids
+    head_dim: int,
+    theta: float,
+    sections: Tuple[int, int, int],
+) -> Tuple[jax.Array, jax.Array]:
+    """Multimodal RoPE (Qwen2-VL, arXiv:2409.12191).
+
+    The head_dim//2 frequency slots are partitioned into three contiguous sections
+    (temporal, height, width); each section takes its angle from the matching
+    position-id stream. Returns (batch, seq, head_dim//2) cos/sin.
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(head_dim, theta)  # (half,)
+    ang_all = positions_3d.astype(jnp.float32)[..., None] * inv  # (3, B, S, half)
+    sel = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=half
+    )  # (half,) -> which stream each slot uses
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_all, 0, -1),  # (B, S, half, 3)
+        sel[None, None, :, None],
+        axis=-1,
+    )[..., 0]  # (B, S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+# ---------------------------------------------------------------------------
+# Dense / SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False, dtype=jnp.bfloat16) -> dict:
+    p = {"w": _dense_init(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(params: dict, x: jax.Array) -> jax.Array:
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(k1, d_model, d_ff, dtype=dtype),
+        "up": init_linear(k2, d_model, d_ff, dtype=dtype),
+        "down": init_linear(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def swiglu(params: dict, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(linear(params["gate"], x))
+    u = linear(params["up"], x)
+    return linear(params["down"], g * u)
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.bfloat16) -> dict:
+    return {"table": _dense_init(key, (vocab, d_model), dtype, scale=1.0)}
+
+
+def embed(params: dict, tokens: jax.Array) -> jax.Array:
+    return params["table"][tokens]
+
+
+def unembed(params: dict, x: jax.Array) -> jax.Array:
+    """Logits in the model dtype; the loss upcasts to fp32 shard-locally."""
+    return x @ params["table"].T

@@ -1,0 +1,152 @@
+"""Mixture-of-Experts FFN: routed top-k experts + optional always-on shared experts.
+
+Baseline implementation is the classic capacity-bounded one-hot dispatch einsum
+(Switch/GShard style) — fully GSPMD-shardable: token dims follow the ``data`` axis,
+the expert dim shards over ``model`` (expert parallelism). The §Perf hillclimb
+replaces the dispatch einsum with an explicit shard_map all-to-all (see
+EXPERIMENTS.md); this module is the paper-faithful-era baseline.
+
+Router follows Qwen-MoE: softmax over all experts, take top-k, renormalise the
+top-k probabilities. Load-balance auxiliary loss is the standard Switch form
+``E · Σ_e f_e · P_e``.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+# Optional expert-parallel sharding constraints (set by the launcher): without
+# them GSPMD all-reduces the (G,E,C,d) expert buffers across the model axis —
+# ~1.5 GiB/layer at prefill_32k (EXPERIMENTS.md §Perf, pair B). With them the
+# dispatch/expert compute stays (G→data, E→model)-sharded and only the combine
+# output needs one activation-sized all-reduce.
+_MOE_MESH: list = [None]
+
+
+@contextlib.contextmanager
+def expert_sharding(mesh):
+    _MOE_MESH[0] = mesh
+    try:
+        yield
+    finally:
+        _MOE_MESH[0] = None
+
+
+def _constrain_ep(x, spec_dims):
+    mesh = _MOE_MESH[0]
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import batch_axes
+    baxes = batch_axes(mesh)
+    dims = [baxes if d == "B" else ("model" if d == "M" else None)
+            for d in spec_dims]
+    # divisibility guard: skip constraint when a dim doesn't divide
+    for dim, d in zip(x.shape, dims):
+        size = 1
+        names = d if isinstance(d, tuple) else ((d,) if d else ())
+        for nm in names:
+            size *= mesh.shape[nm]
+        if size > 1 and dim % size:
+            return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*dims)))
+
+
+def init_moe(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> dict:
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    kr, kg, ku, kd, ks, ksg = jax.random.split(key, 6)
+
+    def expert_stack(k, shape):
+        return (jax.random.normal(k, shape, jnp.float32) * (shape[1] ** -0.5)).astype(dtype)
+
+    p = {
+        "router": (jax.random.normal(kr, (d, E), jnp.float32) * d**-0.5),  # fp32 router
+        "w_gate": expert_stack(kg, (E, d, f)),
+        "w_up": expert_stack(ku, (E, d, f)),
+        "w_down": expert_stack(kd, (E, f, d)),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        p["shared"] = L.init_swiglu(ks, d, fs, dtype=dtype)
+        p["shared_gate"] = L.init_linear(ksg, d, 1, dtype=dtype)
+    return p
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def moe_ffn(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,  # (B, S, d)
+    *,
+    group_size: int = 0,
+    capacity_factor: float = 0.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,d), aux_loss scalar fp32)."""
+    group_size = group_size or cfg.moe_group_size
+    capacity_factor = capacity_factor or cfg.moe_capacity_factor
+    Bq, S, d = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    T = Bq * S
+    g = min(group_size, T)
+    G = T // g
+    assert G * g == T, f"token count {T} not divisible by group {g}"
+    xg = x.reshape(G, g, d)
+
+    logits = (xg.astype(jnp.float32)) @ params["router"]  # (G, g, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, K)  # (G, g, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalise (Qwen)
+
+    C = _round_up(max(int(g * K / E * capacity_factor), 4), 4)
+    C = min(C, g)
+
+    # Position of each (token, slot) within its expert's capacity buffer.
+    # Token-major priority: earlier tokens (and earlier top-k slots) win capacity.
+    onehot = jax.nn.one_hot(top_i, E, dtype=jnp.float32)  # (G, g, K, E)
+    flat = onehot.reshape(G, g * K, E)
+    pos_in_e = (jnp.cumsum(flat, axis=1) - flat).reshape(G, g, K, E)  # (G,g,K,E)
+
+    # Build dispatch/combine by accumulating over the K (small, static) slots —
+    # never materialising the (G,g,K,E,C) 5-D tensor.
+    dispatch = jnp.zeros((G, g, E, C), jnp.float32)
+    combine = jnp.zeros((G, g, E, C), jnp.float32)
+    for k in range(K):
+        e_k = top_i[:, :, k]  # (G, g)
+        p_k = jnp.take_along_axis(pos_in_e[:, :, k], e_k[..., None], axis=-1)[..., 0]
+        keep_k = (p_k < C).astype(jnp.float32)
+        eh = jax.nn.one_hot(e_k, E, dtype=jnp.float32) * keep_k[..., None]
+        ph = jax.nn.one_hot(p_k.astype(jnp.int32), C, dtype=jnp.float32)
+        d_k = jnp.einsum("gse,gsc->gsec", eh, ph)
+        dispatch = dispatch + d_k
+        combine = combine + d_k * top_p[:, :, k][..., None, None]
+
+    # Expert compute on capacity buffers (E sharded over `model`,
+    # token-groups over `data`; see expert_sharding above).
+    dispatch = _constrain_ep(dispatch, ("B", None, "M", None))
+    combine = _constrain_ep(combine, ("B", None, "M", None))
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xg)  # (G,E,C,d)
+    xe = _constrain_ep(xe, ("B", "M", None, None))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, params["w_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"])  # (G,E,C,d)
+    ye = _constrain_ep(ye, ("B", "M", None, None))
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye).reshape(Bq, S, d)
+
+    # Switch load-balance aux loss.
+    frac_tokens = jnp.mean(onehot.sum(2), axis=(0, 1))  # (E,) fraction routed (pre-drop)
+    frac_probs = jnp.mean(probs, axis=(0, 1))  # (E,)
+    aux = E * jnp.sum(frac_tokens / K * frac_probs)
+
+    if cfg.num_shared_experts:
+        gate = jax.nn.sigmoid(L.linear(params["shared_gate"], x))
+        y = y + gate * L.swiglu(params["shared"], x)
+    return y, aux

@@ -1,0 +1,152 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block layout (the "recurrent block" of Griffin):
+    x ── linear ──> u ── causal conv1d ──> RG-LRU ──┐
+    x ── linear ──> y = GeLU(·) ────────────────────⊙──> linear ──> out
+
+RG-LRU cell (fp32 recurrence):
+    r_t = σ(W_r x_t + b_r)            (recurrence gate, block-diagonal proj)
+    i_t = σ(W_i x_t + b_i)            (input gate, block-diagonal proj)
+    log a_t = -c · softplus(Λ) ⊙ r_t  (c = 8)
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training uses ``jax.lax.associative_scan`` over the sequence (log-depth, TPU
+friendly); decode is a single fused step against a (batch, width) carried state.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+_C = 8.0
+
+
+def init_rglru_block(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    nh = max(cfg.num_heads, 1)
+    bh = w // nh  # block size of the block-diagonal gate projections
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 7)
+    return {
+        "in_main": L.init_linear(k1, d, w, dtype=dtype),
+        "in_gate": L.init_linear(k2, d, w, dtype=dtype),
+        "conv_w": (jax.random.normal(k3, (cfg.conv_kernel, w), jnp.float32)
+                   * (cfg.conv_kernel ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        # block-diagonal gate projections: (nh, bh, bh)
+        "w_r": (jax.random.normal(k4, (nh, bh, bh), jnp.float32) * bh**-0.5).astype(dtype),
+        "b_r": jnp.zeros((w,), jnp.float32),
+        "w_i": (jax.random.normal(k5, (nh, bh, bh), jnp.float32) * bh**-0.5).astype(dtype),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        # Λ init so that a = σ(Λ)^c is spread in [0.9, 0.999] (Griffin App. A)
+        "lam": jnp.log(jnp.expm1(  # softplus^-1
+            -jnp.log(jax.random.uniform(k6, (w,), jnp.float32, 0.9, 0.999)) / _C
+        )),
+        "out": L.init_linear(k7, w, d, dtype=dtype),
+    }
+
+
+def _block_diag(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x (..., W) @ block-diagonal w (nh, bh, bh) -> (..., W)."""
+    nh, bh, _ = w.shape
+    xs = x.reshape(*x.shape[:-1], nh, bh)
+    return jnp.einsum("...hi,hij->...hj", xs, w).reshape(*x.shape)
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: jax.Array | None = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv along seq. u (B,S,W), w (K,W). Returns (out, new_tail)."""
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((u.shape[0], K - 1, u.shape[-1]), u.dtype)
+    ext = jnp.concatenate([tail, u], axis=1)  # (B, S+K-1, W)
+    out = sum(ext[:, i : i + u.shape[1]] * w[i] for i in range(K)) + b
+    return out, ext[:, -(K - 1):] if K > 1 else tail
+
+
+def _rglru_coeffs(params: dict, u: jax.Array):
+    """Gate computation -> (a fp32, b fp32) of h_t = a·h + b."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(_block_diag(u, params["w_r"]).astype(jnp.float32)
+                       + params["b_r"])
+    i = jax.nn.sigmoid(_block_diag(u, params["w_i"]).astype(jnp.float32)
+                       + params["b_i"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    return a, b
+
+
+def _assoc_scan(a: jax.Array, b: jax.Array, h0: jax.Array | None):
+    if h0 is not None:
+        # fold the carried state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def comb(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return h
+
+
+def rglru_scan(params: dict, u: jax.Array, h0: jax.Array | None = None,
+               chunk: int = 1024) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence RG-LRU. u (B,S,W) -> (h (B,S,W) fp32, h_last).
+
+    Sequence-chunked: an outer lax.scan carries the state across chunks while a
+    log-depth associative scan runs inside each (rematted) chunk — the fp32
+    (B, S, W) gate/state temporaries of a monolithic associative scan dominate
+    HBM at 4k×4096w training otherwise (EXPERIMENTS.md §Perf)."""
+    B, S, W = u.shape
+    Q = min(chunk, S)
+    if S % Q or S == Q:
+        a, b = _rglru_coeffs(params, u)
+        h = _assoc_scan(a, b, h0)
+        return h, h[:, -1]
+    nc = S // Q
+    uc = u.reshape(B, nc, Q, W).transpose(1, 0, 2, 3)  # (nc, B, Q, W)
+    hinit = (jnp.zeros((B, W), jnp.float32) if h0 is None
+             else h0.astype(jnp.float32))
+
+    @jax.checkpoint
+    def chunk_body(h, u_blk):
+        a, b = _rglru_coeffs(params, u_blk)
+        hs = _assoc_scan(a, b, h)
+        return hs[:, -1], hs
+
+    h_last, hs = jax.lax.scan(chunk_body, hinit, uc)
+    return hs.transpose(1, 0, 2, 3).reshape(B, S, W), h_last
+
+
+def rglru_step(params: dict, u: jax.Array, h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step. u (B,1,W), h (B,W) fp32 -> (out (B,1,W), new h)."""
+    a, b = _rglru_coeffs(params, u)
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new[:, None], h_new
+
+
+def block_forward(
+    cfg: ModelConfig, params: dict, x: jax.Array, state: dict | None = None
+) -> Tuple[jax.Array, dict]:
+    """Full recurrent block. x (B,S,d); state {h (B,W) fp32, conv (B,K-1,W)} or None.
+
+    Returns (out (B,S,d), new_state).
+    """
+    gate = jax.nn.gelu(L.linear(params["in_gate"], x))
+    u = L.linear(params["in_main"], x)
+    tail = state["conv"] if state is not None else None
+    u, new_tail = _causal_conv(u, params["conv_w"], params["conv_b"], tail)
+    h0 = state["h"] if state is not None else None
+    if x.shape[1] == 1 and state is not None:  # decode fast path
+        h_seq, h_last = rglru_step(params, u, h0)
+    else:
+        h_seq, h_last = rglru_scan(params, u, h0)
+    out = L.linear(params["out"], h_seq.astype(x.dtype) * gate)
+    return out, {"h": h_last, "conv": new_tail}

@@ -1,0 +1,157 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm — quadratic attention-like compute
+inside chunks (MXU-friendly matmuls) plus a linear inter-chunk state recurrence —
+which is the paper's "duality" and maps naturally onto the TPU MXU. Decode is a
+constant-time state update, which is why this arch runs long_500k natively.
+
+Layout notes: heads-per-group broadcast of B/C is materialised (ngroups=1 for the
+assigned mamba2-130m); recurrent state is kept fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def init_ssd_block(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> dict:
+    d, di, ns, ng, nh = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                         cfg.ssm_ngroups, cfg.ssm_nheads)
+    conv_dim = di + 2 * ng * ns
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": L.init_linear(k1, d, 2 * di + 2 * ng * ns + nh, dtype=dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.conv_kernel, conv_dim), jnp.float32)
+                   * (cfg.conv_kernel ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jax.random.uniform(k3, (nh,), jnp.float32, 1.0, 16.0)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(  # softplus^-1 of dt in [1e-3, 1e-1]
+            jnp.exp(jax.random.uniform(k4, (nh,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "norm": jnp.ones((di,), jnp.float32),
+        "out_proj": L.init_linear(jax.random.fold_in(k1, 7), di, d, dtype=dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    di, ns, ng, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_nheads
+    z, xBC, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * ng * ns], axis=-1)
+    return z, xBC, dt  # dt: (..., nh)
+
+
+def _conv_silu(params, xBC, tail):
+    from repro.models.rglru import _causal_conv
+    out, new_tail = _causal_conv(xBC, params["conv_w"], params["conv_b"], tail)
+    return jax.nn.silu(out), new_tail
+
+
+def _gated_norm(params, y: jax.Array, z: jax.Array, eps: float) -> jax.Array:
+    return L.rmsnorm_nohead(y * jax.nn.silu(z), params["norm"], eps)
+
+
+def ssd_chunked(
+    x_dt: jax.Array,   # (b, s, nh, hd) — inputs pre-multiplied by dt
+    dtA: jax.Array,    # (b, s, nh) — dt * A  (≤ 0)
+    Bm: jax.Array,     # (b, s, nh, ns) — B broadcast to heads
+    Cm: jax.Array,     # (b, s, nh, ns)
+    h0: Optional[jax.Array] = None,  # (b, nh, hd, ns) fp32
+    chunk: int = 128,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (b,s,nh,hd), h_last (b,nh,hd,ns) fp32)."""
+    b, s, nh, hd = x_dt.shape
+    ns = Bm.shape[-1]
+    Q = min(chunk, s)
+    assert s % Q == 0, (s, Q)
+    nc = s // Q
+    xc = x_dt.reshape(b, nc, Q, nh, hd)
+    ac = dtA.reshape(b, nc, Q, nh).astype(jnp.float32)
+    Bc = Bm.reshape(b, nc, Q, nh, ns)
+    Cc = Cm.reshape(b, nc, Q, nh, ns)
+
+    cum = jnp.cumsum(ac, axis=2)  # (b,nc,Q,nh)
+    # --- intra-chunk (quadratic, "attention mode") ---
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,Q,Q,nh) i,j
+    Lmask = jnp.tril(jnp.ones((Q, Q), bool))
+    Ldec = jnp.where(Lmask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    G = jnp.einsum("bcihn,bcjhn->bcijh", Cc.astype(jnp.float32),
+                   Bc.astype(jnp.float32))
+    M = G * Ldec
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", M, xc.astype(jnp.float32))
+
+    # --- chunk states ---
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)  # (b,nc,Q,nh)
+    S = jnp.einsum("bcqhn,bcqhp->bchpn",
+                   Bc.astype(jnp.float32) * decay_out[..., None],
+                   xc.astype(jnp.float32))  # (b,nc,nh,hd,ns)
+
+    # --- inter-chunk recurrence (linear scan over nc) ---
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (b,nc,nh)
+    hinit = (jnp.zeros((b, nh, hd, ns), jnp.float32) if h0 is None
+             else h0.astype(jnp.float32))
+
+    def step(h, inp):
+        dec, s_c = inp  # (b,nh), (b,nh,hd,ns)
+        h_prev = h
+        h = dec[:, :, None, None] * h + s_c
+        return h, h_prev
+
+    (h_last, h_prevs) = jax.lax.scan(
+        step, hinit, (chunk_decay.transpose(1, 0, 2), S.transpose(1, 0, 2, 3, 4))
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)  # (b,nc,nh,hd,ns)
+
+    # --- off-diagonal contribution from carried states ---
+    decay_in = jnp.exp(cum)  # (b,nc,Q,nh)
+    y_off = jnp.einsum("bcqhn,bchpn->bcqhp",
+                       Cc.astype(jnp.float32) * decay_in[..., None], h_prevs)
+
+    y = (y_diag + y_off).reshape(b, s, nh, hd)
+    return y, h_last
+
+
+def block_forward(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,  # (B, S, d)
+    state: Optional[dict] = None,  # {"h": (B,nh,hd,ns) fp32, "conv": (B,K-1,conv_dim)}
+    chunk: int = 128,
+) -> Tuple[jax.Array, dict]:
+    """Full SSD block; returns (out (B,S,d), new_state)."""
+    di, ns, ng, nh, hd = (cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups,
+                          cfg.ssm_nheads, cfg.ssm_head_dim)
+    Bq, S, _ = x.shape
+    z, xBC, dt = _split_proj(cfg, L.linear(params["in_proj"], x))
+    tail = state["conv"] if state is not None else None
+    xBC, new_tail = _conv_silu(params, xBC, tail)
+    xs, Bg, Cg = jnp.split(xBC, [di, di + ng * ns], axis=-1)
+    xs = xs.reshape(Bq, S, nh, hd)
+    rep = nh // ng
+    Bm = jnp.repeat(Bg.reshape(Bq, S, ng, ns), rep, axis=2)
+    Cm = jnp.repeat(Cg.reshape(Bq, S, ng, ns), rep, axis=2)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(params["A_log"])  # (nh,)
+    dtA = dt * A
+    x_dt = xs.astype(jnp.float32) * dt[..., None]
+
+    h0 = state["h"] if state is not None else None
+    if S == 1 and state is not None:  # decode fast path: h' = e^{dtA} h + dt·x ⊗ B
+        a = jnp.exp(dtA[:, 0])  # (B,nh)
+        h_new = (a[:, :, None, None] * h0
+                 + jnp.einsum("bhp,bhn->bhpn", x_dt[:, 0], Bm[:, 0].astype(jnp.float32)))
+        y = jnp.einsum("bhpn,bhn->bhp", h_new, Cm[:, 0].astype(jnp.float32))[:, None]
+        h_last = h_new
+    else:
+        y, h_last = ssd_chunked(x_dt, dtA, Bm, Cm, h0, chunk)
+
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bq, S, di).astype(x.dtype)
+    y = _gated_norm(params, y, z, cfg.norm_eps)
+    out = L.linear(params["out_proj"], y)
+    return out, {"h": h_last, "conv": new_tail}

@@ -1,0 +1,530 @@
+"""Decoder assembly for all six assigned families.
+
+Compile-time scaling: layers are executed with ``jax.lax.scan`` over *pattern
+cycles* — for a block pattern of period p (e.g. RecurrentGemma's (rec, rec, swa)),
+parameters are stacked per pattern position across the ``num_layers // p`` full
+cycles and scanned, with the ``num_layers % p`` leftover layers applied unstacked.
+This keeps HLO size O(p) instead of O(num_layers), which is what makes compiling
+80-layer models against a 512-device mesh tractable (and is standard practice in
+production JAX LLM stacks).
+
+Entry points:
+  init_params      — build the parameter pytree
+  forward          — teacher-forced full-sequence forward (train / eval)
+  prefill          — full forward that also fills a decode cache
+  decode_step      — one-token step against a cache (serve_step target)
+  loss_fn          — LM cross-entropy (+ MoE aux)
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import ssd as SSD
+from repro.models.cache import init_cache
+
+
+# ------------------------------------------------------------ act sharding
+
+# Optional boundary sharding for the layer-scan carry (set by the launcher):
+# Megatron-style sequence parallelism — x is pinned to (batch→data, seq→model)
+# between blocks, so the 1-per-cycle rematted carries shrink by the model-axis
+# size; GSPMD inserts the all-gathers inside the blocks.
+_ACT_SPEC: list = [None]  # (NamedSharding, seq_divisor) | None
+
+
+@contextlib.contextmanager
+def activation_sharding(sharding, seq_divisor: int):
+    _ACT_SPEC[0] = (sharding, seq_divisor)
+    try:
+        yield
+    finally:
+        _ACT_SPEC[0] = None
+
+
+def _constrain(x):
+    if _ACT_SPEC[0] is not None and x.ndim == 3:
+        sharding, div = _ACT_SPEC[0]
+        if x.shape[1] % max(div, 1) == 0 and x.shape[1] >= div:
+            x = jax.lax.with_sharding_constraint(x, sharding)
+    return x
+
+
+def _remat_groups(cycles: int) -> int:
+    """Divisor of ``cycles`` nearest √cycles (hierarchical remat: carry memory
+    scales with G + cycles/G instead of cycles)."""
+    best = 1
+    for g in range(1, cycles + 1):
+        if cycles % g == 0 and abs(g - math.isqrt(cycles)) < abs(
+                best - math.isqrt(cycles)):
+            best = g
+    return best
+
+
+# ---------------------------------------------------------------- grouping
+
+
+def layer_grouping(cfg: ModelConfig) -> Tuple[int, Tuple[str, ...], Tuple[str, ...]]:
+    """(num_full_cycles, pattern, tail_types)."""
+    p = cfg.block_pattern
+    cycles = cfg.num_layers // len(p)
+    tail = p[: cfg.num_layers % len(p)]
+    return cycles, p, tail
+
+
+# ---------------------------------------------------------------- init
+
+
+def init_layer(cfg: ModelConfig, kind: str, key, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if kind in ("attn", "swa"):
+        p = {
+            "norm1": L.init_rmsnorm(cfg.d_model),
+            "attn": A.init_attention(cfg, k1, dtype),
+            "norm2": L.init_rmsnorm(cfg.d_model),
+        }
+        if cfg.num_experts:
+            p["ffn"] = MOE.init_moe(cfg, k2, dtype)
+        else:
+            p["ffn"] = L.init_swiglu(k2, cfg.d_model, cfg.d_ff, dtype)
+        return p
+    if kind == "rec":
+        return {
+            "norm1": L.init_rmsnorm(cfg.d_model),
+            "rec": RG.init_rglru_block(cfg, k3, dtype),
+            "norm2": L.init_rmsnorm(cfg.d_model),
+            "ffn": L.init_swiglu(k2, cfg.d_model, cfg.d_ff, dtype),
+        }
+    if kind == "ssd":
+        return {
+            "norm1": L.init_rmsnorm(cfg.d_model),
+            "ssd": SSD.init_ssd_block(cfg, k4, dtype),
+        }
+    raise ValueError(kind)
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16) -> dict:
+    cycles, pattern, tail = layer_grouping(cfg)
+    ke, kh, kl = jax.random.split(key, 3)
+    params: dict = {
+        "embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_linear(kh, cfg.d_model, cfg.vocab_size, dtype=dtype)
+
+    def stack_init(kind: str, pos: int):
+        keys = jax.random.split(jax.random.fold_in(kl, pos), cycles)
+        return jax.vmap(lambda k: init_layer(cfg, kind, k, dtype))(keys)
+
+    params["cycle"] = [stack_init(kind, i) for i, kind in enumerate(pattern)]
+    params["tail"] = [
+        init_layer(cfg, kind, jax.random.fold_in(kl, 1000 + i), dtype)
+        for i, kind in enumerate(tail)
+    ]
+    return params
+
+
+# ---------------------------------------------------------------- rope tables
+
+
+def rope_tables(cfg: ModelConfig, positions: jax.Array,
+                positions_3d: Optional[jax.Array] = None):
+    """cos/sin (B, S, hd//2) fp32. ``positions`` is (B, S) int32."""
+    if not cfg.attention_layers:  # attention-free (pure SSM): no rope needed
+        z = jnp.zeros((*positions.shape, 1), jnp.float32)
+        return z, z
+    hd = cfg.resolved_head_dim
+    if cfg.mrope_sections is not None:
+        if positions_3d is None:  # text-only: all three streams equal
+            positions_3d = jnp.broadcast_to(positions[None], (3, *positions.shape))
+        return L.mrope_table(positions_3d, hd, cfg.rope_theta, cfg.mrope_sections)
+    return L.rope_table(positions, hd, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------- layer apply
+
+
+def _apply_layer_full(cfg, kind, p, x, cos, sin, window, aux, state=None,
+                      extra_kv=None):
+    """Full-sequence layer. Returns (x, kv_or_state, aux)."""
+    kv = None
+    new_state = None
+    if kind in ("attn", "swa"):
+        w = window if kind == "swa" else 0
+        h, kv = A.full_forward(cfg, p["attn"], L.rmsnorm(p["norm1"], x, cfg.norm_eps),
+                               cos, sin, window=w, extra_kv=extra_kv)
+        x = x + h
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if cfg.num_experts:
+            y, a = MOE.moe_ffn(cfg, p["ffn"], h2)
+            aux = aux + a
+        else:
+            y = L.swiglu(p["ffn"], h2)
+        x = x + y
+    elif kind == "rec":
+        h, new_state = RG.block_forward(cfg, p["rec"],
+                                        L.rmsnorm(p["norm1"], x, cfg.norm_eps),
+                                        state)
+        x = x + h
+        x = x + L.swiglu(p["ffn"], L.rmsnorm(p["norm2"], x, cfg.norm_eps))
+    elif kind == "ssd":
+        h, new_state = SSD.block_forward(cfg, p["ssd"],
+                                         L.rmsnorm(p["norm1"], x, cfg.norm_eps),
+                                         state)
+        x = x + h
+    else:
+        raise ValueError(kind)
+    return x, kv, new_state, aux
+
+
+def _write_prefill_kv(entry: dict, kv: dict, window: int) -> dict:
+    """Store prefill k/v (B,Hkv,S,hd) into a preallocated cache entry."""
+    S = kv["k"].shape[-2]
+    if "slot_pos" in entry:  # ring buffer
+        W = entry["k"].shape[-2]
+        n = min(S, W)
+        pos = jnp.arange(S - n, S)
+        slots = pos % W
+        k = entry["k"].at[:, :, slots].set(kv["k"][:, :, -n:])
+        v = entry["v"].at[:, :, slots].set(kv["v"][:, :, -n:])
+        sp = entry["slot_pos"].at[:, slots].set(
+            jnp.broadcast_to(pos, (entry["slot_pos"].shape[0], n)).astype(jnp.int32))
+        return {"k": k, "v": v, "slot_pos": sp}
+    k = jax.lax.dynamic_update_slice(entry["k"], kv["k"], (0, 0, 0, 0))
+    v = jax.lax.dynamic_update_slice(entry["v"], kv["v"], (0, 0, 0, 0))
+    return {"k": k, "v": v}
+
+
+def _apply_layer_decode(cfg, kind, p, x, cos, sin, entry, pos, window,
+                        extra_kv=None, extra_kv_mode="concat"):
+    if kind in ("attn", "swa"):
+        w = window if kind == "swa" else 0
+        h, new_kv = A.decode_forward(cfg, p["attn"],
+                                     L.rmsnorm(p["norm1"], x, cfg.norm_eps),
+                                     cos, sin, entry, pos, window=w,
+                                     extra_kv=extra_kv,
+                                     extra_kv_mode=extra_kv_mode)
+        x = x + h
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if cfg.num_experts:
+            y, _ = MOE.moe_ffn(cfg, p["ffn"], h2)
+        else:
+            y = L.swiglu(p["ffn"], h2)
+        return x + y, new_kv
+    if kind == "rec":
+        h, st = RG.block_forward(cfg, p["rec"],
+                                 L.rmsnorm(p["norm1"], x, cfg.norm_eps), entry)
+        x = x + h
+        return x + L.swiglu(p["ffn"], L.rmsnorm(p["norm2"], x, cfg.norm_eps)), st
+    if kind == "ssd":
+        h, st = SSD.block_forward(cfg, p["ssd"],
+                                  L.rmsnorm(p["norm1"], x, cfg.norm_eps), entry)
+        return x + h, st
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------- forward
+
+
+def _embed_in(cfg, params, tokens, embeds):
+    if embeds is not None:
+        return embeds
+    return L.embed(params["embed"], tokens)
+
+
+def _logits_out(cfg, params, x):
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return L.unembed(params["embed"], x)
+    return L.linear(params["lm_head"], x)
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: Optional[jax.Array] = None,  # (B, S) int32
+    embeds: Optional[jax.Array] = None,  # (B, S, d) — vlm/audio frontends
+    positions_3d: Optional[jax.Array] = None,  # (3, B, S) for M-RoPE
+    *,
+    window_override: int = 0,
+    remat: bool = False,
+    extra_kv: Optional[list] = None,  # per pattern+tail position: stacked kv | None
+    unroll: bool = False,  # python-loop the cycles (dry-run cost accounting)
+    return_hidden: bool = False,  # skip unembed (chunked-CE path)
+) -> Tuple[jax.Array, jax.Array]:
+    """Teacher-forced forward. Returns (logits (B,S,V), moe_aux scalar).
+
+    ``extra_kv`` is the C2C fused-cache prefix (Eq. 1/4): a list with one entry per
+    pattern position (then tail positions); attention entries are stacked
+    {"k","v"} of shape (cycles, B, Hkv, Sf, hd), others None.
+    """
+    cycles, pattern, tail = layer_grouping(cfg)
+    x = _embed_in(cfg, params, tokens, embeds)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    cos, sin = rope_tables(cfg, positions, positions_3d)
+    window = window_override or cfg.sliding_window
+    ek = extra_kv or [None] * (len(pattern) + len(tail))
+    # scan xs must be a uniform pytree: dummy zeros for positions without a prefix
+    ek_cycle = tuple(
+        ek[i] if ek[i] is not None else jnp.zeros((cycles,), jnp.float32)
+        for i in range(len(pattern))
+    )
+
+    def cycle_body(carry, xs):
+        x, aux = carry
+        x = _constrain(x)
+        p_stack, ekx = xs
+        for i, kind in enumerate(pattern):
+            e = ekx[i] if isinstance(ekx[i], dict) else None
+            x, _, _, aux = _apply_layer_full(cfg, kind, p_stack[i], x, cos, sin,
+                                             window, aux, extra_kv=e)
+        return (_constrain(x), aux), None
+
+    aux = jnp.zeros((), jnp.float32)
+    if cycles > 0:
+        xs_all = (tuple(params["cycle"]), ek_cycle)
+        if unroll:
+            body = jax.checkpoint(cycle_body) if remat else cycle_body
+            for c in range(cycles):
+                (x, aux), _ = body((x, aux), jax.tree.map(lambda a: a[c], xs_all))
+        elif remat and cycles > 3:
+            # Hierarchical remat: remat at BOTH levels. The outer checkpoint
+            # stops the forward pass storing inner-scan carries (only G group
+            # carries survive); the inner checkpoint keeps backward transients
+            # to one cycle's intermediates. Live carry memory: G + cycles/G
+            # instead of cycles.
+            G = _remat_groups(cycles)
+            xs_g = jax.tree.map(
+                lambda a: a.reshape(G, cycles // G, *a.shape[1:]), xs_all)
+
+            @jax.checkpoint
+            def group_body(carry, xs_grp):
+                return jax.lax.scan(jax.checkpoint(cycle_body), carry, xs_grp)
+
+            (x, aux), _ = jax.lax.scan(group_body, (x, aux), xs_g)
+        else:
+            body = jax.checkpoint(cycle_body) if remat else cycle_body
+            (x, aux), _ = jax.lax.scan(body, (x, aux), xs_all)
+    for i, kind in enumerate(tail):
+        e = ek[len(pattern) + i]
+        e = jax.tree.map(lambda a: a[0], e) if e is not None else None
+        x, _, _, aux = _apply_layer_full(cfg, kind, params["tail"][i], x, cos, sin,
+                                         window, aux, extra_kv=e)
+    if return_hidden:
+        return x, aux
+    return _logits_out(cfg, params, x), aux
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: Optional[jax.Array] = None,
+    embeds: Optional[jax.Array] = None,
+    positions_3d: Optional[jax.Array] = None,
+    *,
+    max_seq: int,
+    cache_dtype=jnp.bfloat16,
+    window_override: int = 0,
+    extra_kv: Optional[list] = None,  # C2C fused prefix, as in ``forward``
+    unroll: bool = False,
+) -> Tuple[jax.Array, dict]:
+    """Full forward that also fills a decode cache. Returns (logits, cache)."""
+    cycles, pattern, tail = layer_grouping(cfg)
+    x = _embed_in(cfg, params, tokens, embeds)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    cos, sin = rope_tables(cfg, positions, positions_3d)
+    window = window_override or cfg.sliding_window
+    cache = init_cache(cfg, B, max_seq, cache_dtype,
+                       window_override=window_override or None)
+    ek = extra_kv or [None] * (len(pattern) + len(tail))
+    ek_cycle = tuple(
+        ek[i] if ek[i] is not None else jnp.zeros((max(cycles, 1),), jnp.float32)
+        for i in range(len(pattern))
+    )
+
+    def cycle_body(carry, xs):
+        x, aux = carry
+        p_stack, entries, ekx = xs
+        new_entries = []
+        for i, kind in enumerate(pattern):
+            e = ekx[i] if isinstance(ekx[i], dict) else None
+            x, kv, st, aux = _apply_layer_full(
+                cfg, kind, p_stack[i], x, cos, sin, window, aux,
+                state=None, extra_kv=e)
+            if kind in ("attn", "swa"):
+                new_entries.append(
+                    _write_prefill_kv(entries[i],
+                                      {k: v.astype(cache_dtype) for k, v in kv.items()},
+                                      window))
+            else:
+                new_entries.append(st)
+        return (x, aux), tuple(new_entries)
+
+    aux = jnp.zeros((), jnp.float32)
+    if cycles > 0:
+        xs_all = (tuple(params["cycle"]), tuple(cache["layers"][: len(pattern)]),
+                  ek_cycle)
+        if unroll:
+            ys = []
+            carry = (x, aux)
+            for c in range(cycles):
+                carry, y = cycle_body(carry, jax.tree.map(lambda a: a[c], xs_all))
+                ys.append(y)
+            (x, aux) = carry
+            new_layers = list(jax.tree.map(lambda *a: jnp.stack(a), *ys))
+        else:
+            (x, aux), new_layers = jax.lax.scan(cycle_body, (x, aux), xs_all)
+            new_layers = list(new_layers)
+    else:
+        new_layers = []
+    for i, kind in enumerate(tail):
+        entry = jax.tree.map(lambda a: a[0], cache["layers"][len(pattern) + i])
+        e = ek[len(pattern) + i]
+        e = jax.tree.map(lambda a: a[0], e) if e is not None else None
+        x, kv, st, aux = _apply_layer_full(cfg, kind, params["tail"][i], x, cos,
+                                           sin, window, aux, extra_kv=e)
+        if kind in ("attn", "swa"):
+            new_e = _write_prefill_kv(entry,
+                                      {k: v.astype(cache_dtype) for k, v in kv.items()},
+                                      window)
+        else:
+            new_e = st
+        new_layers.append(jax.tree.map(lambda a: a[None], new_e))
+    return _logits_out(cfg, params, x), {
+        "pos": jnp.asarray(S, jnp.int32),
+        "layers": new_layers,
+    }
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: dict,
+    cache: dict,
+    token: jax.Array,  # (B,) int32 — last generated token
+    *,
+    window_override: int = 0,
+    extra_kv: Optional[list] = None,  # C2C fused prefix, as in ``forward``
+    extra_kv_mode: str = "concat",  # "concat" (Eq.1 literal) | "split" (LSE)
+    unroll: bool = False,
+) -> Tuple[jax.Array, dict]:
+    """One decode step (the serve_step the decode shapes lower).
+
+    Returns (logits (B, V), updated cache)."""
+    cycles, pattern, tail = layer_grouping(cfg)
+    pos = cache["pos"]
+    x = L.embed(params["embed"], token[:, None])
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    cos, sin = rope_tables(cfg, positions)
+    window = window_override or cfg.sliding_window
+    ek = extra_kv or [None] * (len(pattern) + len(tail))
+    ek_cycle = tuple(
+        ek[i] if ek[i] is not None else jnp.zeros((max(cycles, 1),), jnp.float32)
+        for i in range(len(pattern))
+    )
+
+    def cycle_body(x, xs):
+        p_stack, entries, ekx = xs
+        new_entries = []
+        for i, kind in enumerate(pattern):
+            e = ekx[i] if isinstance(ekx[i], dict) else None
+            x, new_e = _apply_layer_decode(cfg, kind, p_stack[i], x, cos, sin,
+                                           entries[i], pos, window, extra_kv=e,
+                                           extra_kv_mode=extra_kv_mode)
+            new_entries.append(new_e)
+        return x, tuple(new_entries)
+
+    if cycles > 0:
+        xs_all = (tuple(params["cycle"]), tuple(cache["layers"][: len(pattern)]),
+                  ek_cycle)
+        if unroll:
+            ys = []
+            for c in range(cycles):
+                x, y = cycle_body(x, jax.tree.map(lambda a: a[c], xs_all))
+                ys.append(y)
+            new_layers = list(jax.tree.map(lambda *a: jnp.stack(a), *ys))
+        else:
+            x, new_layers = jax.lax.scan(cycle_body, x, xs_all)
+            new_layers = list(new_layers)
+    else:
+        new_layers = []
+    for i, kind in enumerate(tail):
+        entry = jax.tree.map(lambda a: a[0], cache["layers"][len(pattern) + i])
+        e = ek[len(pattern) + i]
+        e = jax.tree.map(lambda a: a[0], e) if e is not None else None
+        x, new_e = _apply_layer_decode(cfg, kind, params["tail"][i], x, cos, sin,
+                                       entry, pos, window, extra_kv=e,
+                                       extra_kv_mode=extra_kv_mode)
+        new_layers.append(jax.tree.map(lambda a: a[None], new_e))
+    logits = _logits_out(cfg, params, x)[:, 0]
+    return logits, {"pos": pos + 1, "layers": new_layers}
+
+
+# ---------------------------------------------------------------- loss
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: Optional[jax.Array] = None,
+    labels: jax.Array = None,  # (B, S) int32; -100 = ignore
+    embeds: Optional[jax.Array] = None,
+    positions_3d: Optional[jax.Array] = None,
+    *,
+    remat: bool = True,
+    unroll: bool = False,
+) -> jax.Array:
+    hidden, aux = forward(cfg, params, tokens, embeds, positions_3d, remat=remat,
+                          unroll=unroll, return_hidden=True)
+    hidden = L.rmsnorm(params["final_norm"], hidden, cfg.norm_eps)
+
+    def unembed(xb):
+        if cfg.tie_embeddings:
+            return L.unembed(params["embed"], xb)
+        return L.linear(params["lm_head"], xb)
+
+    # Chunked cross-entropy: the (B, S, V) fp32 logits of a 150k–256k vocab are
+    # several GiB/device — never materialise them. Each (rematted) chunk
+    # unembeds, reduces to (nll_sum, count), and is recomputed in backward.
+    # One-hot contraction instead of take_along_axis: a gather along the
+    # vocab-SHARDED axis would make GSPMD replicate the full logits.
+    B, S, _ = hidden.shape
+    Q = S
+    for cand in (512, 256, 128):
+        if S % cand == 0 and S > cand:
+            Q = cand
+            break
+    nc = S // Q
+    xc = hidden.reshape(B, nc, Q, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, Q).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_ce(carry, xs):
+        xb, lb = xs
+        logits = unembed(xb).astype(jnp.float32)
+        valid = lb >= 0
+        safe = jnp.where(valid, lb, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(safe, cfg.vocab_size, dtype=logits.dtype)
+        picked = jnp.sum(logits * onehot, axis=-1)
+        nll = (lse - picked) * valid
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(valid)), None
+
+    (nll_sum, count), _ = jax.lax.scan(
+        chunk_ce, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xc, lc))
+    loss = nll_sum / jnp.maximum(count, 1)
+    return loss + cfg.router_aux_coef * aux

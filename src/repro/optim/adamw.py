@@ -1,0 +1,118 @@
+"""AdamW + schedules in pure JAX (no optax offline).
+
+Mixed-precision convention: model params may be bf16; the optimizer keeps fp32
+master weights and fp32 moments, applies the update in fp32 and casts back —
+standard large-model practice. Integer leaves (e.g. fuser alignment tables) are
+treated as non-trainable and passed through untouched.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _trainable(leaf) -> bool:
+    return jnp.issubdtype(leaf.dtype, jnp.floating)
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    schedule: str = "constant"  # constant | cosine | linear_warmup_cosine
+    warmup_steps: int = 0
+    total_steps: int = 1000
+    min_lr_frac: float = 0.1
+
+
+def schedule_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    lr = jnp.asarray(cfg.lr, jnp.float32)
+    if cfg.schedule == "constant":
+        return lr
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    if cfg.schedule == "cosine":
+        return lr * cos
+    return lr * warm * cos  # linear_warmup_cosine
+
+
+def init_opt_state(params) -> dict:
+    def zeros_like_f32(p):
+        if _trainable(p):
+            return jnp.zeros(p.shape, jnp.float32)
+        return None
+
+    def master(p):
+        return p.astype(jnp.float32) if _trainable(p) else None
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros_like_f32, params),
+        "v": jax.tree.map(zeros_like_f32, params),
+        "master": jax.tree.map(master, params),
+    }
+
+
+def global_norm(grads) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads) if _trainable(g)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state) -> tuple:
+    """One AdamW step. Returns (new_params, new_state)."""
+    step = state["step"] + 1
+    lr = schedule_lr(cfg, step)
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9)) if cfg.grad_clip else 1.0
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, w):
+        if not _trainable(p):
+            return p, m, v, w
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        w = w - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * w)
+        return w.astype(p.dtype), m, v, w
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_w = treedef.flatten_up_to(state["master"])
+    outs = [upd(p, g, m, v, w)
+            for p, g, m, v, w in zip(flat_p, flat_g, flat_m, flat_v, flat_w)]
+    new_p = treedef.unflatten([o[0] for o in outs])
+    new_state = {
+        "step": step,
+        "m": treedef.unflatten([o[1] for o in outs]),
+        "v": treedef.unflatten([o[2] for o in outs]),
+        "master": treedef.unflatten([o[3] for o in outs]),
+    }
+    return new_p, new_state
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: AdamWConfig):
+    """loss_fn(params, batch) -> scalar. Returns jit-able step(params, state, batch)."""
+
+    def step(params, state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_state = apply_updates(opt_cfg, params, grads, state)
+        return new_params, new_state, loss
+
+    return step

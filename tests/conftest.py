@@ -1,0 +1,19 @@
+import os
+
+# Tests must see the real (1-device) CPU platform — the 512-device override is
+# exclusively for launch/dryrun.py (see its module docstring).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def f32():
+    return jnp.float32

@@ -1,0 +1,89 @@
+"""Case-study data + protocol-shape invariants (fast; the full trained case
+study runs in benchmarks)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import (A_TOK, PAD_TOK, Q_TOK, SEP_TOK, World,
+                                  WorldSpec)
+
+
+@pytest.fixture(scope="module")
+def world():
+    return World(WorldSpec())
+
+
+def test_question_batch_never_contains_answers(world):
+    """The anti-cheating invariant: answer tokens appear only in labels."""
+    rng = np.random.default_rng(0)
+    b = world.question_batch(rng, 8, 24)
+    obj_base = world.spec.obj_base
+    assert not ((b["tokens"] >= obj_base) &
+                (b["tokens"] < obj_base + world.spec.n_objects)).any()
+    lab = b["labels"][b["labels"] >= 0]
+    assert ((lab >= obj_base) & (lab < obj_base + world.spec.n_objects)).all()
+
+
+def test_question_batch_single_question_matches_eval_shape(world):
+    rng = np.random.default_rng(0)
+    b = world.question_batch(rng, 4, 4)
+    assert b["tokens"].shape == (4, 4)
+    assert (b["tokens"][:, 0] == Q_TOK).all()
+    assert (b["tokens"][:, 3] == A_TOK).all()
+    assert (b["labels"][:, 3] >= world.spec.obj_base).all()
+    ev = world.eval_batch(np.random.default_rng(0), 4)
+    assert ev["prompt"].shape == (4, 4)
+
+
+def test_known_mask_partitions_facts(world):
+    rng = np.random.default_rng(1)
+    for known in (True, False):
+        for _ in range(20):
+            t, _ = world.qa_example(rng, known=known)
+            s_cls = (t[1] - world.spec.subj_base) // world.spec.syn_width
+            r_cls = (t[2] - world.spec.rel_base) // world.spec.syn_width
+            assert bool(world.known[s_cls, r_cls]) == known
+    frac = world.known.mean()
+    assert 0.15 < frac < 0.45  # ~receiver_known_frac
+
+
+def test_domain_partition(world):
+    rng = np.random.default_rng(2)
+    for d in range(world.spec.n_domains):
+        t, _ = world.qa_example(rng, domain=d)
+        s_cls = (t[1] - world.spec.subj_base) // world.spec.syn_width
+        assert world.domain_of_subj(int(s_cls)) == d
+
+
+def test_answers_invariant_under_rephrasing(world):
+    """Same fact, any synonym surface -> same answer token."""
+    ch = world.synonym_channel()
+    rng = np.random.default_rng(3)
+    ev = world.eval_batch(rng, 32)
+    p = jnp.asarray(ev["prompt"])
+    rp = ch.rephrase(p, jax.random.PRNGKey(0))
+    # recompute answers from the rephrased surface forms
+    for b in range(32):
+        s_cls = int((rp[b, 1] - world.spec.subj_base) // world.spec.syn_width)
+        r_cls = int((rp[b, 2] - world.spec.rel_base) // world.spec.syn_width)
+        assert world.obj_token(world.facts[s_cls, r_cls]) == ev["answer"][b]
+
+
+def test_gating_selects_between_transmitters():
+    """Gate weights differ across differently-distributed fused stacks."""
+    from repro.configs.case_study import tiny_zoo
+    from repro.core.gating import gate_weight, init_gating
+    rx = tiny_zoo()["receiver"]
+    g = init_gating(rx, jax.random.PRNGKey(0))
+    n, B, H, S, hd = len(rx.attention_layers), 3, rx.num_kv_heads, 4, \
+        rx.resolved_head_dim
+    mk = lambda k, scale: {
+        "k": scale * jax.random.normal(jax.random.PRNGKey(k), (n, B, H, S, hd)),
+        "v": scale * jax.random.normal(jax.random.PRNGKey(k + 1), (n, B, H, S, hd)),
+    }
+    w1 = gate_weight(g, mk(0, 1.0))
+    w2 = gate_weight(g, mk(10, 5.0))
+    assert w1.shape == (B,)
+    assert ((w1 >= 0) & (w1 <= 1)).all()
+    assert float(jnp.abs(w1 - w2).max()) > 1e-6

@@ -1,0 +1,96 @@
+"""Assigned-architecture configs: exact published dims + smoke-config contracts."""
+import pytest
+
+from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, ALIASES, canonical,
+                                get_config, get_smoke_config)
+
+# (layers, d_model, heads, kv_heads, vocab) from the assignment table
+EXPECTED = {
+    "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 151_936),
+    "qwen2.5-32b": (64, 5120, 40, 8, 152_064),
+    "musicgen-large": (48, 2048, 32, 32, 2048),
+    "granite-20b": (52, 6144, 48, 1, 49_152),
+    "recurrentgemma-9b": (38, 4096, 16, 1, 256_000),
+    "qwen2-vl-72b": (80, 8192, 64, 8, 152_064),
+    "internlm2-1.8b": (24, 2048, 16, 8, 92_544),
+    "mamba2-130m": (24, 768, 0, 0, 50_280),
+    "qwen3-1.7b": (28, 2048, 16, 8, 151_936),
+    "qwen2-moe-a2.7b": (24, 2048, 16, 16, 151_936),
+}
+
+FFN = {
+    "qwen2.5-32b": 27_648, "musicgen-large": 8192, "granite-20b": 24_576,
+    "recurrentgemma-9b": 12_288, "qwen2-vl-72b": 29_568,
+    "internlm2-1.8b": 8192, "qwen3-1.7b": 6144,
+}
+
+MOE = {  # (experts, top_k, shared, moe_d_ff)
+    "qwen3-moe-30b-a3b": (128, 8, 0, 768),
+    "qwen2-moe-a2.7b": (60, 4, 4, 1408),
+}
+
+
+@pytest.mark.parametrize("alias", sorted(EXPECTED))
+def test_exact_dims(alias):
+    cfg = get_config(alias)
+    L, d, H, Hkv, V = EXPECTED[alias]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == H
+    assert cfg.num_kv_heads == Hkv
+    assert cfg.vocab_size == V
+    if alias in FFN:
+        assert cfg.d_ff == FFN[alias]
+    if alias in MOE:
+        E, K, Sh, f = MOE[alias]
+        assert (cfg.num_experts, cfg.num_experts_per_tok,
+                cfg.num_shared_experts, cfg.moe_d_ff) == (E, K, Sh, f)
+    assert cfg.source, "every config must cite its source"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_reductions(arch):
+    cfg = get_smoke_config(arch)
+    full = get_config(arch)
+    assert cfg.num_layers <= 3
+    assert cfg.d_model <= 512
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+    assert cfg.family == full.family
+    # family-defining features preserved
+    assert cfg.qk_norm == full.qk_norm
+    assert cfg.qkv_bias == full.qkv_bias
+    assert (cfg.mrope_sections is None) == (full.mrope_sections is None)
+    assert cfg.block_pattern == full.block_pattern or cfg.family == "hybrid"
+
+
+def test_family_coverage():
+    fams = {get_config(a).family for a in ARCH_IDS}
+    assert fams == {"dense", "moe", "ssm", "hybrid", "vlm", "audio"}
+
+
+def test_param_counts_match_billing():
+    # sanity: analytic param counts are in the advertised ballpark
+    assert 25e9 < get_config("qwen3-moe-30b-a3b").param_count() < 35e9
+    assert 2.5e9 < get_config("qwen3-moe-30b-a3b").active_param_count() < 4.5e9
+    assert 28e9 < get_config("qwen2.5-32b").param_count() < 36e9
+    assert 0.10e9 < get_config("mamba2-130m").param_count() < 0.16e9
+    assert 60e9 < get_config("qwen2-vl-72b").param_count() < 80e9
+    assert 1.5e9 < get_config("internlm2-1.8b").param_count() < 2.2e9
+    assert 8e9 < get_config("recurrentgemma-9b").param_count() < 14e9
+    assert 2.2e9 < get_config("qwen2-moe-a2.7b").active_param_count() < 3.8e9
+
+
+def test_shapes_table():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32_768
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524_288
+    assert INPUT_SHAPES["long_500k"].global_batch == 1
+
+
+def test_aliases_roundtrip():
+    for alias, mod in ALIASES.items():
+        assert canonical(alias) == mod
+        assert get_config(alias).name == alias

@@ -1,0 +1,204 @@
+"""FedRefine core invariants: fusers, gating, C2C equations, protocol, commload."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config, get_smoke_config
+from repro.configs.case_study import tiny_zoo
+from repro.core import c2c, commload, fuser as F, protocol
+from repro.core.fedrefine import FedRefineSystem, Participant
+from repro.models import transformer as T
+from repro.models.cache import attn_kv_stack
+
+KEY = jax.random.PRNGKey(3)
+
+
+@pytest.fixture(scope="module")
+def zoo():
+    z = tiny_zoo()
+    members = []
+    for i, cfg in enumerate([z["receiver"], *z["transmitters"]]):
+        params = T.init_params(cfg, jax.random.fold_in(KEY, i), jnp.float32)
+        members.append(Participant(cfg.name, cfg, params))
+    return members
+
+
+@pytest.fixture(scope="module")
+def system(zoo):
+    return FedRefineSystem.build(zoo)
+
+
+# --------------------------------------------------------------------- fusers
+
+
+def test_fuser_heterogeneous_dims(system, zoo):
+    """Fusers bridge models with different layer counts / kv dims / head counts."""
+    rx = zoo[0]
+    for tx in zoo[1:]:
+        fz = system.registry.get(tx.name, rx.name)
+        S = 8
+        prompt = jnp.zeros((2, S), jnp.int32)
+        _, cache = T.prefill(tx.cfg, tx.params, prompt, max_seq=S,
+                             cache_dtype=jnp.float32)
+        st = attn_kv_stack(tx.cfg, cache, length=S)
+        out = F.project_cache(fz, tx.cfg, rx.cfg, st)
+        n_rx = len(rx.cfg.attention_layers)
+        assert out["k"].shape == (n_rx, 2, rx.cfg.num_kv_heads, S,
+                                  rx.cfg.resolved_head_dim)
+        assert out["bias"].shape == (n_rx, 2, S)
+
+
+def test_alignment_bottom_up_clips():
+    a = F.LayerAlignment(rx_layers=6, tx_layers=3, mode="bottom_up")
+    assert a.table == (0, 1, 2, 2, 2, 2)
+    p = F.LayerAlignment(rx_layers=6, tx_layers=3, mode="proportional")
+    assert p.table == (0, 0, 1, 1, 2, 2)
+    assert max(p.table) < 3
+
+
+def test_inapplicable_for_ssm():
+    mamba = get_smoke_config("mamba2-130m")
+    qwen = get_smoke_config("qwen3-1.7b")
+    with pytest.raises(F.InapplicableError):
+        F.make_alignment(mamba, qwen)
+    with pytest.raises(F.InapplicableError):
+        F.make_alignment(qwen, mamba)
+
+
+def test_closed_gate_is_standalone(system, zoo):
+    rx, tx = zoo[0], zoo[1]
+    prompt = jax.random.randint(KEY, (2, 10), 8, rx.cfg.vocab_size)
+    fz = dict(system.registry.get(tx.name, rx.name))
+    fz["gate"] = jnp.full_like(fz["gate"], -200.0)
+    _, cache = T.prefill(tx.cfg, tx.params, prompt % tx.cfg.vocab_size,
+                         max_seq=10, cache_dtype=jnp.float32)
+    st = attn_kv_stack(tx.cfg, cache, length=10)
+    fused = F.project_cache(fz, tx.cfg, rx.cfg, st)
+    lg_c2c, _ = c2c.c2c_forward(rx.cfg, rx.params, prompt, fused)
+    lg_solo, _ = T.forward(rx.cfg, rx.params, prompt)
+    assert float(jnp.abs(lg_c2c - lg_solo).max()) < 1e-4
+
+
+def test_open_gate_changes_logits(system, zoo):
+    rx, tx = zoo[0], zoo[1]
+    prompt = jax.random.randint(KEY, (2, 10), 8, rx.cfg.vocab_size)
+    fz = dict(system.registry.get(tx.name, rx.name))
+    fz["gate"] = jnp.full_like(fz["gate"], 5.0)
+    _, cache = T.prefill(tx.cfg, tx.params, prompt % tx.cfg.vocab_size,
+                         max_seq=10, cache_dtype=jnp.float32)
+    st = attn_kv_stack(tx.cfg, cache, length=10)
+    fused = F.project_cache(fz, tx.cfg, rx.cfg, st)
+    lg_c2c, _ = c2c.c2c_forward(rx.cfg, rx.params, prompt, fused)
+    lg_solo, _ = T.forward(rx.cfg, rx.params, prompt)
+    assert float(jnp.abs(lg_c2c - lg_solo).max()) > 1e-3
+
+
+def test_eq1_equals_eq4_single_transmitter(system, zoo):
+    rx, tx = zoo[0], zoo[1]
+    prompt = jnp.zeros((1, 6), jnp.int32)
+    _, cache = T.prefill(tx.cfg, tx.params, prompt, max_seq=6,
+                         cache_dtype=jnp.float32)
+    st = attn_kv_stack(tx.cfg, cache, length=6)
+    fz = system.registry.get(tx.name, rx.name)
+    one = F.project_cache(fz, tx.cfg, rx.cfg, st)
+    multi = c2c.fused_prefix([fz], [tx.cfg], rx.cfg, [st])
+    for k in ("k", "v", "bias"):
+        assert float(jnp.abs(one[k] - multi[k]).max()) == 0.0
+
+
+def test_multi_transmitter_concat_order(system, zoo):
+    rx = zoo[0]
+    txs = zoo[1:3]
+    prompt = jnp.zeros((1, 5), jnp.int32)
+    stacks, fusers, cfgs = [], [], []
+    for tx in txs:
+        _, cache = T.prefill(tx.cfg, tx.params, prompt, max_seq=5,
+                             cache_dtype=jnp.float32)
+        stacks.append(attn_kv_stack(tx.cfg, cache, length=5))
+        fusers.append(system.registry.get(tx.name, rx.name))
+        cfgs.append(tx.cfg)
+    fused = c2c.fused_prefix(fusers, cfgs, rx.cfg, stacks)
+    assert fused["k"].shape[-2] == 10  # seq-wise concatenation (Eq. 4)
+
+
+def test_bidirectional_roles(system, zoo):
+    a, b = zoo[1], zoo[2]
+    B, S = 1, 6
+    prompt = jnp.zeros((B, S), jnp.int32)
+    _, ca = T.prefill(a.cfg, a.params, prompt, max_seq=S + 2, cache_dtype=jnp.float32)
+    _, cb = T.prefill(b.cfg, b.params, prompt, max_seq=S + 2, cache_dtype=jnp.float32)
+    fab = system.registry.get(a.name, b.name)
+    fba = system.registry.get(b.name, a.name)
+    ta = jnp.zeros((B,), jnp.int32)
+    (lg_a, _), (lg_b, _) = c2c.bidirectional_step(
+        a.cfg, a.params, ca, ta, b.cfg, b.params, cb, ta, fab, fba)
+    assert lg_a.shape == (B, a.cfg.vocab_size)
+    assert lg_b.shape == (B, b.cfg.vocab_size)
+
+
+def test_registry_full_matrix(system, zoo):
+    n = len(zoo)
+    assert len(system.registry.links()) == n * (n - 1)
+
+
+def test_scheduler_affinity(system, zoo):
+    system.task_affinity["code"] = [zoo[2].name]
+    picks = system.schedule("code", zoo[0].name, 2)
+    assert picks[0] == zoo[2].name
+    assert zoo[0].name not in picks
+
+
+# ------------------------------------------------------------------- commload
+
+
+def test_paper_88kb_vs_16b():
+    """The case-study zoo's published dims reproduce the paper's byte counts."""
+    r = commload.paper_case_study_bytes(dtype_bytes=2)
+    assert 70_000 < r["c2c_total_per_token"] < 100_000  # paper: 88 KB
+    assert r["t2t_total_per_token"] == 16  # paper: 16 B
+
+
+def test_c2c_bytes_formula():
+    cfg = get_config("internlm2-1.8b")
+    b = commload.c2c_bytes_per_token(cfg, 2)
+    assert b == 2 * 24 * 8 * 128 * 2  # k+v × layers × kv_heads × hd × bytes
+
+
+# ------------------------------------------------------------------- protocol
+
+
+def test_protocol_monotone_in_bandwidth():
+    txs = [get_config("internlm2-1.8b")]
+    rx = get_config("qwen3-1.7b")
+    qos = protocol.QoS(max_latency_s=2.0)
+    chosen = []
+    for bw in (1e5, 1e6, 1e7, 1e8, 1e9, 1e10):
+        r = protocol.choose_protocol(txs, rx, seq=1024, gen_steps=64,
+                                     link=protocol.LinkModel(bw), qos=qos)
+        chosen.append(r["protocol"])
+    rank = {"standalone": 0, "t2t": 1, "c2c": 2}
+    ranks = [rank[c] for c in chosen]
+    assert ranks == sorted(ranks), f"not monotone: {chosen}"
+    assert chosen[-1] == "c2c"  # infinite bandwidth => cache communication
+
+
+def test_protocol_respects_qos_floor():
+    txs = [get_config("internlm2-1.8b")]
+    rx = get_config("qwen3-1.7b")
+    r = protocol.choose_protocol(
+        txs, rx, seq=1024, gen_steps=64,
+        link=protocol.LinkModel(1e12),
+        qos=protocol.QoS(max_latency_s=100.0, min_quality="t2t"))
+    assert r["protocol"] in ("c2c", "t2t")
+    assert r["qos_met"]
+
+
+def test_latency_c2c_beats_t2t_on_fast_links():
+    """Fig 3(c): C2C skips the receiver-side prefill rebuild."""
+    txs = [get_config("qwen2.5-32b")]
+    rx = get_config("qwen3-1.7b")
+    link = protocol.LinkModel(bandwidth_bps=50e9)  # ICI-class link
+    lat_c2c = protocol.latency_c2c(txs, rx, seq=32_768, gen_steps=128, link=link)
+    lat_t2t = protocol.latency_t2t(txs, rx, seq=32_768, gen_steps=128, link=link,
+                                   shared_tokens=128)
+    assert lat_c2c < lat_t2t

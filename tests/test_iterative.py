@@ -1,0 +1,62 @@
+"""Iterative refinement + opportunistic serving (paper §Possible Variants)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.case_study import tiny_zoo
+from repro.core import protocol
+from repro.core.fedrefine import FedRefineSystem, Participant
+from repro.core.iterative import iterative_c2c_refine, self_refine_with_c2c
+from repro.models import transformer as T
+
+KEY = jax.random.PRNGKey(4)
+
+
+@pytest.fixture(scope="module")
+def system():
+    z = tiny_zoo()
+    members = []
+    for i, cfg in enumerate([z["receiver"], *z["transmitters"][:2]]):
+        params = T.init_params(cfg, jax.random.fold_in(KEY, i), jnp.float32)
+        members.append(Participant(cfg.name, cfg, params))
+    return FedRefineSystem.build(members)
+
+
+def test_iterative_c2c_rounds(system):
+    names = list(system.participants)
+    rx = system.participants[names[0]]
+    txs = [system.participants[n] for n in names[1:]]
+    prompt = jax.random.randint(KEY, (1, 8), 8, 200)
+    out = iterative_c2c_refine(
+        rx.cfg, rx.params,
+        [system.registry.get(t.name, rx.name) for t in txs],
+        [t.cfg for t in txs], [t.params for t in txs],
+        prompt, [prompt for _ in txs], rounds=2, steps=4)
+    assert out["tokens"].shape == (1, 4)
+    assert len(out["rounds"]) == 2
+    # round 2 re-prefilled with the draft -> refreshed caches may change output
+    assert out["rounds"][0].shape == out["rounds"][1].shape
+
+
+def test_self_refine_with_c2c(system):
+    names = list(system.participants)
+    rx = system.participants[names[0]]
+    prompt = jax.random.randint(KEY, (1, 8), 8, 200)
+    out = self_refine_with_c2c(rx.cfg, rx.params, None, prompt,
+                               rounds=2, steps=4)
+    assert out.shape == (1, 4)
+
+
+@pytest.mark.parametrize("bw,expected", [
+    (400e9, "c2c"),        # ICI-class link: ship the caches
+    (1.0, "standalone"),   # dead link: even 24 B of tokens misses the budget
+])
+def test_serve_opportunistic_executes_choice(system, bw, expected):
+    names = list(system.participants)
+    prompt = jax.random.randint(KEY, (1, 8), 8, 200)
+    out = system.serve_opportunistic(
+        names[0], prompt, steps=3,
+        link=protocol.LinkModel(bandwidth_bps=bw),
+        qos=protocol.QoS(max_latency_s=5.0), n_tx=2)
+    assert out["tokens"].shape == (1, 3)
+    assert out["protocol"] == expected

@@ -1,0 +1,112 @@
+"""Launch-layer logic that doesn't need the 512-device process: long-context
+variants, input specs, analytic roofline formulas, report generation."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config
+from repro import roofline as RL
+
+
+def _variant(cfg, shape_name):
+    # mirror of launch.dryrun.variant_config without importing it (that module
+    # forces XLA_FLAGS at import time)
+    if shape_name != "long_500k" or cfg.family in ("ssm", "hybrid"):
+        return cfg
+    pattern = tuple("swa" if t == "attn" else t for t in cfg.block_pattern)
+    return cfg.with_overrides(block_pattern=pattern,
+                              sliding_window=cfg.long_context_window)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_long_context_variant(arch):
+    cfg = get_config(arch)
+    v = _variant(cfg, "long_500k")
+    if cfg.family in ("ssm", "hybrid"):
+        assert v == cfg  # native sub-quadratic: no variant needed
+    else:
+        assert all(t != "attn" for t in v.layer_types)
+        assert v.sliding_window == cfg.long_context_window
+    # other shapes unchanged
+    assert _variant(cfg, "train_4k") == cfg
+
+
+def test_long_500k_cache_is_windowed():
+    """The 524k decode cache must be O(window), not O(seq)."""
+    from repro.models.cache import init_cache
+    cfg = _variant(get_config("qwen2.5-32b"), "long_500k")
+    cache = jax.eval_shape(lambda: init_cache(cfg, 1, 524_288, jnp.bfloat16))
+    k = cache["layers"][0]["k"]
+    assert k.shape[-2] == cfg.long_context_window  # ring buffer, not 524288
+    total = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+    assert total < 2 * 2**30  # whole decode state ≪ naive 137 GB
+
+
+def test_flops_analytic_scales():
+    cfg = get_config("internlm2-1.8b")
+    tr = RL.flops_analytic(cfg, INPUT_SHAPES["train_4k"], "train")
+    pf = RL.flops_analytic(cfg, INPUT_SHAPES["prefill_32k"], "prefill")
+    de = RL.flops_analytic(cfg, INPUT_SHAPES["decode_32k"], "decode")
+    # train multiplier (×4 remat) vs prefill's 8× larger attention seq: both
+    # matter — just pin the ordering and magnitudes
+    assert tr > pf > de
+    # decode processes B tokens vs B·S: orders of magnitude apart
+    assert de < pf / 1000
+    # 6·N·D sanity: analytic(train) within [1, 4]× of 6·N·D (attention + remat)
+    model = RL.model_flops_for(cfg, INPUT_SHAPES["train_4k"], "train")
+    assert 1.0 < tr / model < 4.0
+
+
+def test_flops_analytic_moe_counts_dispatch():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    with_d = RL.flops_analytic(cfg, INPUT_SHAPES["train_4k"], "train")
+    # the dispatch/combine share must be visible: compare against a config with
+    # tiny capacity
+    small = cfg.with_overrides(moe_capacity_factor=0.01)
+    without = RL.flops_analytic(small, INPUT_SHAPES["train_4k"], "train")
+    assert with_d > without
+
+
+def test_useful_ratio_below_one():
+    """6·N·D may never exceed the as-written FLOPs (over-counting guard)."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape_name in ("train_4k", "prefill_32k"):
+            shp = INPUT_SHAPES[shape_name]
+            kind = shp.kind
+            a = RL.flops_analytic(cfg, shp, kind, remat=(kind == "train"))
+            m = RL.model_flops_for(cfg, shp, kind)
+            assert m <= a * 1.10, (arch, shape_name, m / a)
+
+
+def test_collective_parser_on_real_snippet():
+    hlo = """
+  %all-reduce.1 = bf16[8,128]{1,0} all-reduce(bf16[8,128]{1,0} %x), replica_groups={}
+  %ag = (f32[4], f32[16]) all-gather(f32[4] %y), dimensions={0}
+  %nothing = f32[2] add(f32[2] %a, f32[2] %b)
+  %a2a.3 = s32[64]{0} all-to-all(s32[64]{0} %z)
+"""
+    st = RL.parse_collectives(hlo)
+    assert st.counts == {"all-reduce": 1, "all-gather": 1, "all-to-all": 1}
+    assert st.bytes_by_op["all-reduce"] == 8 * 128 * 2
+    # AR weighted 2×; AG counts the (tuple) result bytes
+    assert st.total_bytes == 2 * 8 * 128 * 2 + (4 + 16) * 4 + 64 * 4
+
+
+def test_report_tables(tmp_path, monkeypatch):
+    import json, os
+    from repro.launch import report
+    d = tmp_path / "dryrun"
+    d.mkdir()
+    rec = {"arch": "internlm2-1.8b", "shape": "train_4k", "mesh": "pod1x16x16",
+           "ok": True, "compute_s": 0.1, "memory_s": 0.2, "collective_s": 0.3,
+           "bottleneck": "collective", "useful_ratio": 0.7,
+           "memory_per_device": {"temp_bytes": 2**30, "argument_bytes": 2**29}}
+    with open(d / "internlm2_1_8b__train_4k__pod1x16x16.json", "w") as f:
+        json.dump(rec, f)
+    monkeypatch.setattr(report, "DRYRUN_DIR", str(d))
+    recs = report.load_all()
+    table = report.roofline_table(recs)
+    assert "| internlm2_1_8b | train_4k | 100.00 | 200.00 | 300.00 " in table
+    assert "MISSING" in table  # other archs absent
+    assert "collective" in report.summary(recs)

@@ -1,0 +1,140 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fuser as F
+from repro.roofline import _shape_bytes, parse_collectives
+
+KEY = jax.random.PRNGKey(5)
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ------------------------------------------------------------------ alignment
+
+
+@given(rx=st.integers(1, 96), tx=st.integers(1, 96),
+       mode=st.sampled_from(["bottom_up", "proportional"]))
+def test_alignment_total_and_monotone(rx, tx, mode):
+    table = F.LayerAlignment(rx, tx, mode).table
+    assert len(table) == rx
+    assert all(0 <= t < tx for t in table)
+    assert list(table) == sorted(table)  # bottom-up order preserved
+    assert table[0] == 0  # bottom layers pair with bottom layers
+
+
+# ------------------------------------------------------------------ roofline
+
+
+@given(st.lists(st.tuples(
+    st.sampled_from(["all-reduce", "all-gather", "reduce-scatter",
+                     "all-to-all", "collective-permute"]),
+    st.sampled_from(["f32", "bf16", "s32"]),
+    st.lists(st.integers(1, 64), min_size=1, max_size=3)), max_size=8))
+def test_collective_parser_counts(ops):
+    lines = ["HloModule m"]
+    expected = {}
+    for i, (op, dt, dims) in enumerate(ops):
+        shape = f"{dt}[{','.join(map(str, dims))}]"
+        lines.append(f"  %{op}.{i} = {shape} {op}({shape} %x.{i}), replica_groups={{}}")
+        expected[op] = expected.get(op, 0) + 1
+    stats = parse_collectives("\n".join(lines))
+    assert stats.counts == expected
+
+
+@given(st.sampled_from(["f32", "bf16", "s8"]),
+       st.lists(st.integers(1, 32), min_size=0, max_size=4))
+def test_shape_bytes(dt, dims):
+    nbytes = {"f32": 4, "bf16": 2, "s8": 1}[dt]
+    n = int(np.prod(dims)) if dims else 1
+    s = f"{dt}[{','.join(map(str, dims))}]"
+    assert _shape_bytes(s) == n * nbytes
+
+
+# ------------------------------------------------------------------ caches
+
+
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(2, 8))
+def test_cache_concat_associative(n, b, s):
+    from repro.models.cache import concat_kv
+    shapes = (n, b, 2, s, 4)
+    rng = np.random.default_rng(42)
+    mk = lambda: {"k": jnp.asarray(rng.normal(size=shapes), jnp.float32),
+                  "v": jnp.asarray(rng.normal(size=shapes), jnp.float32)}
+    a, b_, c = mk(), mk(), mk()
+    left = concat_kv(concat_kv(a, b_), c)
+    right = concat_kv(a, concat_kv(b_, c))
+    # concat_kv(own, fused) prepends fused: ((a∘b)∘c) vs (a∘(b∘c)) equal
+    assert jnp.array_equal(left["k"], right["k"])
+
+
+# ------------------------------------------------------------------ privacy
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_paraphrase_channel_closure_and_class_invariance(seed):
+    from repro.core.privacy import synonym_channel
+    V, W = 64, 4
+    ch = synonym_channel(V, W, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (2, 10), 0, V)
+    out = ch.rephrase(toks, jax.random.PRNGKey(seed + 1))
+    assert ((0 <= out) & (out < V)).all()  # vocabulary closure
+    assert (ch.class_of[toks] == ch.class_of[out]).all()  # semantics preserved
+
+
+# ------------------------------------------------------------------ fuser
+
+
+@given(st.integers(1, 3))
+@settings(max_examples=5)
+def test_fuser_batch_equivariance(b):
+    """Projecting a batch == projecting each element (no cross-batch leakage)."""
+    from repro.configs.case_study import tiny_zoo
+    z = tiny_zoo()
+    tx, rx = z["transmitters"][0], z["receiver"]
+    fz = F.init_fuser(tx, rx, KEY)
+    n_tx = len(tx.attention_layers)
+    S = 4
+    stack = {
+        "k": jax.random.normal(KEY, (n_tx, b, tx.num_kv_heads, S,
+                                     tx.resolved_head_dim)),
+        "v": jax.random.normal(jax.random.fold_in(KEY, 1),
+                               (n_tx, b, tx.num_kv_heads, S,
+                                tx.resolved_head_dim)),
+    }
+    full = F.project_cache(fz, tx, rx, stack)
+    for i in range(b):
+        one = F.project_cache(fz, tx, rx,
+                              jax.tree.map(lambda a: a[:, i : i + 1], stack))
+        assert float(jnp.abs(one["k"][:, 0] - full["k"][:, i]).max()) < 1e-5
+
+
+# ------------------------------------------------------------------ tokenizer
+
+
+@given(st.text(max_size=64))
+def test_tokenizer_roundtrip_property(s):
+    from repro.data.tokenizer import ByteTokenizer
+    tok = ByteTokenizer()
+    assert tok.decode(tok.encode(s)) == s
+
+
+# ------------------------------------------------------------------ optimizer
+
+
+@given(st.floats(1e-5, 1e-1), st.integers(1, 20))
+@settings(max_examples=10)
+def test_adamw_step_bounded(lr, steps):
+    """|Δw| per step ≤ lr·(1+wd) — AdamW's normalised-update invariant."""
+    from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state
+    cfg = AdamWConfig(lr=lr, grad_clip=0.0, weight_decay=0.0)
+    params = {"w": jnp.asarray([1.0, -1.0, 0.5])}
+    state = init_opt_state(params)
+    for i in range(steps):
+        prev = params["w"]
+        grads = {"w": jnp.sin(jnp.asarray([i, i + 1, i + 2], jnp.float32))}
+        params, state = apply_updates(cfg, params, grads, state)
+        assert float(jnp.abs(params["w"] - prev).max()) <= lr * 1.2

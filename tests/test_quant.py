@@ -1,0 +1,99 @@
+"""int8 cache-communication quantisation (beyond-paper; core/quant.py)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import quant
+from repro.core import commload
+
+KEY = jax.random.PRNGKey(9)
+
+
+def _stack(n=3, B=2, H=2, S=16, hd=8, scale=1.0):
+    k1, k2 = jax.random.split(KEY)
+    return {"k": scale * jax.random.normal(k1, (n, B, H, S, hd)),
+            "v": scale * jax.random.normal(k2, (n, B, H, S, hd))}
+
+
+def test_roundtrip_error_small():
+    st = _stack()
+    err = quant.roundtrip_error(st)
+    assert err < 0.01  # int8 per-channel: <1% relative L2
+
+
+def test_roundtrip_scale_invariant():
+    """Per-channel scales make the error independent of magnitude."""
+    e1 = quant.roundtrip_error(_stack(scale=1.0))
+    e2 = quant.roundtrip_error(_stack(scale=1000.0))
+    assert abs(e1 - e2) < 1e-3
+
+
+def test_dtype_and_shapes():
+    st = _stack()
+    q = quant.quantize_stack(st)
+    assert q["k_q"].dtype == jnp.int8
+    assert q["k_scale"].shape == (3, 2, 2, 1, 8)
+    dq = quant.dequantize_stack(q, jnp.bfloat16)
+    assert dq["k"].dtype == jnp.bfloat16
+    assert dq["k"].shape == st["k"].shape
+
+
+def test_wire_bytes_halved():
+    """Asymptotically exactly 2× less than bf16 C2C; the paper's 88 KB -> 43 KB."""
+    cfg = get_config("internlm2-1.8b")
+    bf16 = commload.c2c_bytes_per_token(cfg, 2)
+    int8 = quant.c2c_bytes_per_token_quantized(cfg)
+    assert int8 == bf16 / 2
+    # concrete stack accounting (incl. scale overhead) approaches 0.5 as S grows
+    st = _stack(n=24, B=1, H=8, S=256, hd=128)
+    bf16_bytes = 2 * st["k"].size * 2  # k+v at 2 B/elem on the wire
+    ratio = quant.quantized_bytes(st) / bf16_bytes
+    assert 0.5 < ratio < 0.52
+
+
+def test_quantized_prefix_decode_close():
+    """C2C decode with an int8 fused prefix ≈ full-precision decode."""
+    from repro.configs.case_study import tiny_zoo
+    from repro.core import c2c, fuser as F
+    from repro.models import transformer as T
+    from repro.models.cache import attn_kv_stack
+
+    z = tiny_zoo()
+    tx, rx = z["transmitters"][0], z["receiver"]
+    p_tx = T.init_params(tx, KEY, jnp.float32)
+    p_rx = T.init_params(rx, jax.random.fold_in(KEY, 1), jnp.float32)
+    prompt = jax.random.randint(KEY, (1, 8), 8, 200)
+    _, cache = T.prefill(tx, p_tx, prompt % tx.vocab_size, max_seq=8,
+                         cache_dtype=jnp.float32)
+    st = attn_kv_stack(tx, cache, length=8)
+    fz = F.init_fuser(tx, rx, KEY)
+    fused = F.project_cache(fz, tx, rx, st)
+    fused_q = dict(quant.dequantize_stack(quant.quantize_stack(fused),
+                                          jnp.float32), bias=fused["bias"])
+    a, _ = c2c.c2c_forward(rx, p_rx, prompt, fused)
+    b, _ = c2c.c2c_forward(rx, p_rx, prompt, fused_q)
+    # logits differ by less than typical logit gaps
+    assert float(jnp.abs(a - b).max()) < 0.5
+    assert float(jnp.mean(jnp.argmax(a[:, -1], -1) ==
+                          jnp.argmax(b[:, -1], -1))) == 1.0
+
+
+def test_decode_attention_q8_kernel():
+    """int8-KV flash decode kernel == fp32 reference on dequantised values."""
+    from repro.kernels import ops, ref
+    ks = jax.random.split(KEY, 3)
+    B, H, Hkv, S, hd = 2, 4, 2, 128, 32
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    stack_like = {"k": jax.random.normal(ks[1], (1, B, Hkv, S, hd)),
+                  "v": jax.random.normal(ks[2], (1, B, Hkv, S, hd))}
+    qs = quant.quantize_stack(stack_like)
+    qstack = {"k_q": qs["k_q"][0], "v_q": qs["v_q"][0],
+              "k_scale": qs["k_scale"][0], "v_scale": qs["v_scale"][0]}
+    bias = jnp.zeros((B, S))
+    o1 = ops.decode_attention_q8(q, qstack, bias)
+    dq = quant.dequantize_stack(qs, jnp.float32)
+    o2 = ref.decode_attention_ref(q.reshape(B, Hkv, H // Hkv, hd),
+                                  dq["k"][0], dq["v"][0], bias)
+    o2 = o2.reshape(B, H, hd)
+    assert float(jnp.abs(o1 - o2).max()) < 1e-4

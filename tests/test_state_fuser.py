@@ -1,0 +1,70 @@
+"""Beyond-paper state-to-state fuser (attention-free federation) — see
+core/state_fuser.py and DESIGN.md §Arch-applicability."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config, get_smoke_config
+from repro.core import state_fuser as SF
+from repro.models import transformer as T
+
+KEY = jax.random.PRNGKey(2)
+
+
+@pytest.fixture(scope="module")
+def pair():
+    cfg_a = get_smoke_config("mamba2-130m")
+    cfg_b = cfg_a.with_overrides(num_layers=3, d_model=96, ssm_head_dim=24,
+                                 name="mamba2-smoke-b")
+    pa = T.init_params(cfg_a, KEY, jnp.float32)
+    pb = T.init_params(cfg_b, jax.random.fold_in(KEY, 1), jnp.float32)
+    return cfg_a, pa, cfg_b, pb
+
+
+def test_state_fusion_decode(pair):
+    cfg_a, pa, cfg_b, pb = pair
+    prompt = jax.random.randint(KEY, (2, 16), 0, cfg_a.vocab_size)
+    _, ca = T.prefill(cfg_b, pb, prompt % cfg_b.vocab_size, max_seq=20,
+                      cache_dtype=jnp.float32)
+    _, cb = T.prefill(cfg_a, pa, prompt, max_seq=20, cache_dtype=jnp.float32)
+    fz = SF.init_state_fuser(cfg_b, cfg_a, KEY)
+    fused = SF.fuse_states(fz, cfg_b, cfg_a, ca, cb)
+    lg, _ = T.decode_step(cfg_a, pa, fused, prompt[:, -1])
+    assert lg.shape == (2, cfg_a.vocab_size)
+    assert bool(jnp.isfinite(lg).all())
+
+
+def test_closed_gate_is_identity(pair):
+    cfg_a, pa, cfg_b, pb = pair
+    prompt = jax.random.randint(KEY, (2, 16), 0, cfg_a.vocab_size)
+    _, ca = T.prefill(cfg_b, pb, prompt % cfg_b.vocab_size, max_seq=20,
+                      cache_dtype=jnp.float32)
+    _, cb = T.prefill(cfg_a, pa, prompt, max_seq=20, cache_dtype=jnp.float32)
+    fz = dict(SF.init_state_fuser(cfg_b, cfg_a, KEY))
+    fz["gate"] = jnp.full_like(fz["gate"], -200.0)
+    fused = SF.fuse_states(fz, cfg_b, cfg_a, ca, cb)
+    lg0, _ = T.decode_step(cfg_a, pa, fused, prompt[:, -1])
+    lg_ref, _ = T.decode_step(cfg_a, pa, cb, prompt[:, -1])
+    assert float(jnp.abs(lg0 - lg_ref).max()) == 0.0
+
+
+def test_attention_archs_rejected(pair):
+    cfg_a, *_ = pair
+    with pytest.raises(SF.StateInapplicableError):
+        SF.init_state_fuser(get_smoke_config("qwen3-1.7b"), cfg_a, KEY)
+
+
+def test_hybrid_rec_layers_accepted():
+    rg = get_smoke_config("recurrentgemma-9b")
+    mb = get_smoke_config("mamba2-130m")
+    fz = SF.init_state_fuser(rg, mb, KEY)  # rec -> ssd states
+    assert fz["mlp"]["w1"]["w"].shape[0] == len(
+        [t for t in mb.layer_types if t == "ssd"])
+
+
+def test_constant_message_size():
+    """The state medium is O(1) in sequence length (vs O(S) for KV C2C)."""
+    cfg = get_config("mamba2-130m")
+    b = SF.state_bytes(cfg)
+    assert b == 24 * cfg.ssm_nheads * cfg.ssm_head_dim * cfg.ssm_state * 4
+    assert b < 32 * 2**20  # ~19 MB regardless of context length

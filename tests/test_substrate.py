@@ -1,0 +1,183 @@
+"""Substrate: optimizer, checkpoint roundtrip, tokenizer, data pipeline, serve."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.adamw import (AdamWConfig, apply_updates, init_opt_state,
+                               schedule_lr)
+
+KEY = jax.random.PRNGKey(11)
+
+
+def test_adamw_minimises_quadratic():
+    cfg = AdamWConfig(lr=0.1, grad_clip=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = init_opt_state(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = apply_updates(cfg, params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adamw_skips_integer_leaves():
+    cfg = AdamWConfig(lr=0.1)
+    params = {"w": jnp.ones((2,)), "align": jnp.asarray([0, 1], jnp.int32)}
+    state = init_opt_state(params)
+    import jax as _jax
+    grads = {"w": jnp.ones((2,)),
+             "align": np.zeros((2, 0), dtype=_jax.dtypes.float0)}
+    new_p, _ = apply_updates(cfg, params, grads, state)
+    assert (new_p["align"] == params["align"]).all()
+    assert (new_p["w"] != params["w"]).all()
+
+
+def test_grad_clip_limits_update():
+    cfg = AdamWConfig(lr=1.0, grad_clip=1e-6)
+    params = {"w": jnp.zeros((4,))}
+    state = init_opt_state(params)
+    new_p, _ = apply_updates(cfg, params, {"w": jnp.full((4,), 1e6)}, state)
+    # clipped grads are tiny, but adam normalisation makes the step ~lr;
+    # verify no blow-up beyond lr
+    assert float(jnp.abs(new_p["w"]).max()) <= 1.0 + 1e-6
+
+
+def test_lr_schedules():
+    cfg = AdamWConfig(lr=1.0, schedule="linear_warmup_cosine",
+                      warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    lr0 = float(schedule_lr(cfg, jnp.asarray(0)))
+    lr10 = float(schedule_lr(cfg, jnp.asarray(10)))
+    lr100 = float(schedule_lr(cfg, jnp.asarray(100)))
+    assert lr0 < 0.05
+    assert 0.9 < lr10 <= 1.0
+    assert abs(lr100 - 0.1) < 1e-5
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint.checkpoint import load_pytree, save_pytree
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": [jnp.ones((2,), jnp.bfloat16), None,
+              (jnp.asarray(3, jnp.int32), {"c": jnp.zeros((1,))})],
+    }
+    path = os.path.join(tmp_path, "ckpt")
+    save_pytree(path, tree)
+    back = load_pytree(path)
+    assert (back["a"] == tree["a"]).all()
+    assert back["b"][1] is None
+    assert back["b"][0].dtype == jnp.bfloat16
+    assert int(back["b"][2][0]) == 3
+
+
+def test_registry_checkpoint_roundtrip(tmp_path):
+    from repro.configs.case_study import tiny_zoo
+    from repro.core.registry import FuserRegistry
+    z = tiny_zoo()
+    reg = FuserRegistry({c.name: c for c in [z["receiver"], z["transmitters"][0]]})
+    reg.ensure_all_pairs()
+    path = os.path.join(tmp_path, "reg")
+    reg.save(path)
+    reg2 = FuserRegistry(reg.models)
+    reg2.load(path)
+    assert set(reg2.fusers) == set(reg.fusers)
+    k0 = next(iter(reg.fusers))
+    a = jax.tree.leaves(reg.fusers[k0])[0]
+    b = jax.tree.leaves(reg2.fusers[k0])[0]
+    assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_tokenizer_roundtrip():
+    from repro.data.tokenizer import ByteTokenizer
+    tok = ByteTokenizer()
+    s = "FedRefine: héllo wörld! 123"
+    assert tok.decode(tok.encode(s)) == s
+
+
+def test_synthetic_world_answers_are_consistent():
+    from repro.data.synthetic import World, WorldSpec
+    w = World(WorldSpec())
+    rng = np.random.default_rng(0)
+    batch = w.qa_batch(rng, 4, 30)
+    assert batch["tokens"].shape == (4, 30)
+    # labels only on answer positions (shifted)
+    n_labels = (batch["labels"] >= 0).sum()
+    assert n_labels == 4 * (30 // 6)  # one answer per packed example
+
+
+def test_synonym_channel_preserves_semantics():
+    from repro.data.synthetic import World, WorldSpec
+    w = World(WorldSpec())
+    ch = w.synonym_channel()
+    rng = np.random.default_rng(1)
+    ev = w.eval_batch(rng, 16)
+    p = jnp.asarray(ev["prompt"])
+    rp = ch.rephrase(p, KEY)
+    # answers must be invariant: class of subject/relation unchanged
+    assert (ch.class_of[p[:, 1]] == ch.class_of[rp[:, 1]]).all()
+    assert (ch.class_of[p[:, 2]] == ch.class_of[rp[:, 2]]).all()
+    # surface must actually change sometimes (privacy)
+    assert float(ch.overlap(p[:, 1:3], rp[:, 1:3])) < 0.9
+
+
+def test_batched_server(key):
+    from repro.configs.base import get_smoke_config
+    from repro.launch.serve import BatchedServer
+    from repro.models import transformer as T
+    cfg = get_smoke_config("qwen3-1.7b")
+    params = T.init_params(cfg, key, jnp.float32)
+    srv = BatchedServer(cfg, params, max_batch=4, max_seq=48)
+    prompts = jax.random.randint(key, (3, 12), 0, cfg.vocab_size)
+    out = srv.serve(prompts, gen_steps=5)
+    assert out.shape == (3, 5)
+
+
+def test_pipeline_placement():
+    from repro.data.pipeline import place_batch, prefetch
+    batch = {"tokens": np.zeros((4, 8), np.int32)}
+    out = place_batch(batch)
+    assert out["tokens"].shape == (4, 8)
+    it = prefetch(iter([batch, batch, batch]), depth=2)
+    assert len(list(it)) == 3
+
+
+def test_model_rephrase_paper_mechanism(key):
+    """The paper's own rephrasing mechanism (receiver model rewrites the query)
+    produces vocabulary-valid, temperature-sampled rewrites."""
+    from repro.configs.base import get_smoke_config
+    from repro.core.privacy import model_rephrase
+    from repro.models import transformer as T
+    cfg = get_smoke_config("qwen3-1.7b")
+    params = T.init_params(cfg, key, jnp.float32)
+    toks = jax.random.randint(key, (2, 6), 0, cfg.vocab_size)
+    out = model_rephrase(cfg, params, toks, steps=6, key=key)
+    assert out.shape == (2, 6)
+    assert bool(((0 <= out) & (out < cfg.vocab_size)).all())
+    # different key -> different rewrite (sampled; random-init tied-embedding
+    # models are extremely peaked, so a high temperature is needed to see it)
+    out2 = model_rephrase(cfg, params, toks, steps=6, temperature=50.0,
+                          key=jax.random.fold_in(key, 1))
+    assert not bool(jnp.array_equal(out, out2))
+
+
+def test_batched_server_fused_path(key):
+    """BatchedServer serves with a C2C fused prefix (the federated hot path)."""
+    from repro.configs.case_study import tiny_zoo
+    from repro.core import fuser as F
+    from repro.launch.serve import BatchedServer
+    from repro.models import transformer as T
+    from repro.models.cache import attn_kv_stack
+    z = tiny_zoo()
+    tx, rx = z["transmitters"][0], z["receiver"]
+    p_tx = T.init_params(tx, key, jnp.float32)
+    p_rx = T.init_params(rx, jax.random.fold_in(key, 1), jnp.float32)
+    prompts = jax.random.randint(key, (2, 10), 8, 200)
+    _, cache = T.prefill(tx, p_tx, prompts % tx.vocab_size, max_seq=10,
+                         cache_dtype=jnp.float32)
+    st = attn_kv_stack(tx, cache, length=10)
+    fused = F.project_cache(F.init_fuser(tx, rx, key), tx, rx, st)
+    srv = BatchedServer(rx, p_rx, max_batch=4, max_seq=32)
+    out_fused = srv.serve(prompts, gen_steps=4, fused=fused)
+    out_plain = srv.serve(prompts, gen_steps=4)
+    assert out_fused.shape == out_plain.shape == (2, 4)
