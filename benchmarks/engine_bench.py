@@ -1,0 +1,212 @@
+"""Continuous-batching engine vs lockstep BatchedServer under Poisson traffic.
+
+Simulates the serving regime the federation targets: requests with mixed
+protocols (standalone + C2C-fused) arriving at staggered (Poisson) times.
+
+- **Engine** (launch/engine.py): requests join mid-flight, finished slots free
+  immediately, one decode trace covers every request mix.
+- **Lockstep** (launch/serve.py BatchedServer): requests wait to be grouped,
+  each group must share one protocol (a lockstep batch has a single fused
+  prefix), the whole group decodes for the longest member, and the fused path
+  re-jits its serve step per call.
+
+Both run on the same wall-clock timeline (arrivals are real waits); reported
+are sustained tokens/s and request-latency p50/p99.
+
+Run:  PYTHONPATH=src python benchmarks/engine_bench.py [--smoke]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.case_study import tiny_zoo
+from repro.core import c2c, fuser as F
+from repro.launch.engine import ContinuousBatchingEngine
+from repro.launch.serve import BatchedServer
+from repro.models import transformer as T
+from repro.models.cache import attn_kv_stack
+
+
+def build_world(vocab: int = 64):
+    zoo = tiny_zoo(vocab_size=vocab)
+    rx, tx = zoo["receiver"], zoo["transmitters"][0]
+    key = jax.random.PRNGKey(0)
+    p_rx = T.init_params(rx, key, jnp.float32)
+    p_tx = T.init_params(tx, jax.random.fold_in(key, 1), jnp.float32)
+    fz = F.init_fuser(tx, rx, jax.random.fold_in(key, 2))
+    return rx, p_rx, tx, p_tx, fz
+
+
+def make_requests(n: int, prompt_len: int, rate: float, vocab: int, seed=0):
+    """Poisson arrivals: exponential inter-arrival gaps at ``rate`` req/s."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n)
+    arrivals = np.cumsum(gaps)
+    key = jax.random.PRNGKey(7)
+    reqs = []
+    for i in range(n):
+        prompt = jax.random.randint(jax.random.fold_in(key, i),
+                                    (1, prompt_len), 0, vocab)
+        reqs.append({"arrival": float(arrivals[i]), "prompt": prompt,
+                     "protocol": "c2c" if i % 2 else "standalone"})
+    return reqs
+
+
+def make_tx_fused(tx, p_tx, fz, rx):
+    """Jitted transmitter-prefill + fuser-projection for (B, P) prompts (the
+    transmit/fuse hot path a real deployment compiles once)."""
+
+    @jax.jit
+    def fused(prompts):
+        S = prompts.shape[1]
+        _, cache = T.prefill(tx, p_tx, prompts, max_seq=S,
+                             cache_dtype=jnp.float32)
+        stack = attn_kv_stack(tx, cache, length=S)
+        return c2c.fused_prefix([fz], [tx], rx, [stack])
+
+    return fused
+
+
+def percentiles(lat):
+    lat = np.asarray(sorted(lat))
+    return float(np.percentile(lat, 50)), float(np.percentile(lat, 99))
+
+
+def run_engine(rx, p_rx, tx, p_tx, fz, reqs, gen, *, max_slots, max_seq,
+               max_prefix):
+    eng = ContinuousBatchingEngine(rx, p_rx, max_slots=max_slots,
+                                   max_seq=max_seq, max_prefix=max_prefix)
+    tx_fused = make_tx_fused(tx, p_tx, fz, rx)
+    # warm the traces (prefill + decode + fuser path) outside the clock
+    eng.submit(reqs[0]["prompt"], 2, fused=tx_fused(reqs[0]["prompt"]))
+    eng.submit(reqs[0]["prompt"], 2)
+    eng.drain()
+
+    pending = list(reqs)
+    arrival = {}
+    done_at = {}
+    t0 = time.perf_counter()
+    while pending or eng.num_queued or eng.num_active:
+        now = time.perf_counter() - t0
+        while pending and pending[0]["arrival"] <= now:
+            r = pending.pop(0)
+            fused = (tx_fused(r["prompt"])
+                     if r["protocol"] == "c2c" else None)
+            rid = eng.submit(r["prompt"], gen, fused=fused,
+                             protocol=r["protocol"])
+            arrival[rid] = r["arrival"]
+        if not (eng.num_queued or eng.num_active):
+            time.sleep(max(0.0, pending[0]["arrival"] - now))
+            continue
+        for c in eng.step():
+            done_at[c.rid] = time.perf_counter() - t0
+    lat = [done_at[r] - arrival[r] for r in done_at]
+    span = max(done_at.values()) - reqs[0]["arrival"]
+    toks = len(done_at) * gen
+    return {"tokens_per_s": toks / span, "latency": lat, "stats": eng.stats}
+
+
+def run_lockstep(rx, p_rx, tx, p_tx, fz, reqs, gen, *, max_batch, max_seq):
+    srv = BatchedServer(rx, p_rx, max_batch=max_batch, max_seq=max_seq)
+    tx_fused = make_tx_fused(tx, p_tx, fz, rx)
+    pad = jnp.tile(reqs[0]["prompt"], (max_batch, 1))
+    srv.serve(pad, 2)  # warm the standalone traces
+    srv.serve(pad, 2, fused=tx_fused(pad))
+
+    pending = list(reqs)
+    done_at, arrival = {}, {}
+    t0 = time.perf_counter()
+    while pending:
+        now = time.perf_counter() - t0
+        avail = [r for r in pending if r["arrival"] <= now]
+        if not avail:
+            time.sleep(max(0.0, pending[0]["arrival"] - now))
+            continue
+        # lockstep constraint: one protocol (one shared fused prefix) per batch
+        proto = avail[0]["protocol"]
+        batch = [r for r in avail if r["protocol"] == proto][:max_batch]
+        for r in batch:
+            pending.remove(r)
+        prompts = jnp.concatenate([r["prompt"] for r in batch], axis=0)
+        n_real = prompts.shape[0]
+        if n_real < max_batch:  # pad to the compiled batch width
+            prompts = jnp.concatenate(
+                [prompts, jnp.tile(prompts[-1:], (max_batch - n_real, 1))], 0)
+        fused = tx_fused(prompts) if proto == "c2c" else None
+        out = srv.serve(prompts, gen, fused=fused)
+        jax.block_until_ready(out)
+        t_done = time.perf_counter() - t0
+        for i, r in enumerate(batch):
+            rid = len(done_at)
+            done_at[rid] = t_done
+            arrival[rid] = r["arrival"]
+    lat = [done_at[r] - arrival[r] for r in done_at]
+    span = max(done_at.values()) - reqs[0]["arrival"]
+    toks = len(done_at) * gen
+    return {"tokens_per_s": toks / span, "latency": lat}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes + invariant checks (CI); overrides "
+                         "--requests/--gen/--slots/--rate")
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="Poisson arrival rate (req/s)")
+    ap.add_argument("--slots", type=int, default=8)
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests, args.gen, args.slots = 10, 8, 4
+        args.rate = 50.0
+    if args.rate <= 0:
+        ap.error("--rate must be > 0")
+
+    vocab = 64
+    rx, p_rx, tx, p_tx, fz = build_world(vocab)
+    max_seq = args.prompt_len + args.gen + 8
+    reqs = make_requests(args.requests, args.prompt_len, args.rate, vocab)
+
+    eng = run_engine(rx, p_rx, tx, p_tx, fz, reqs, args.gen,
+                     max_slots=args.slots, max_seq=max_seq,
+                     max_prefix=args.prompt_len)
+    lck = run_lockstep(rx, p_rx, tx, p_tx, fz, reqs, args.gen,
+                       max_batch=args.slots, max_seq=max_seq)
+
+    ep50, ep99 = percentiles(eng["latency"])
+    lp50, lp99 = percentiles(lck["latency"])
+    print(f"\n{args.requests} requests, Poisson rate {args.rate}/s, "
+          f"gen {args.gen} tok, {args.slots} slots, mixed standalone+C2C")
+    print(f"{'':22s}{'tokens/s':>10s}{'p50 (s)':>10s}{'p99 (s)':>10s}")
+    print(f"{'continuous (engine)':22s}{eng['tokens_per_s']:>10.1f}"
+          f"{ep50:>10.3f}{ep99:>10.3f}")
+    print(f"{'lockstep (Batched)':22s}{lck['tokens_per_s']:>10.1f}"
+          f"{lp50:>10.3f}{lp99:>10.3f}")
+    print(f"engine stats: {eng['stats']}")
+
+    ok = True
+    if eng["stats"]["decode_traces"] != 1:
+        print("FAIL: decode step traced more than once across the mix")
+        ok = False
+    # smoke (CI, shared runners): allow wall-clock noise a generous margin so
+    # a noisy-neighbour hiccup can't fail an unrelated PR; full runs are strict
+    margin = 0.8 if args.smoke else 1.0
+    if eng["tokens_per_s"] < margin * lck["tokens_per_s"]:
+        print("FAIL: engine slower than lockstep baseline")
+        ok = False
+    print("PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -4,7 +4,6 @@ domain. Paper: "the intrinsic capabilities of the sharer model directly impact
 the performance of the collaborative model"."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -1,13 +1,31 @@
-"""End-to-end driver: federated serving of batched requests (Fig. 2 pipeline).
+"""End-to-end driver: continuous-batching federated serving (Fig. 2 pipeline).
 
 Builds the five-member heterogeneous zoo, trains the transmitters on disjoint
 knowledge domains + fusers (the server-side {F_ij} registry), then serves a
-batch of QA requests through the full FedRefine path:
+stream of QA requests through the FedRefine engine path:
 
-  rephrase -> transmitter prefill -> fuser projection -> gated fusion
-  -> receiver batched decode (Eq. 4) -> answers
+  submit: rephrase -> transmitter prefill -> fuser projection -> gated fusion
+  drain:  receiver continuous-batching decode (Eq. 4) -> answers
 
 and reports accuracy vs the standalone receiver plus the per-request C2C bytes.
+
+Engine quickstart
+-----------------
+The continuous-batching engine (``repro.launch.engine``) replaces lockstep
+serving: a fixed-capacity slot table lets requests join mid-flight and frees
+slots the moment a request finishes, while ONE jitted decode step covers every
+standalone / C2C-fused / T2T mix (per-slot fused prefixes live in a fixed
+``max_prefix`` bucket, absent positions masked by attention-logit bias)::
+
+    system = FedRefineSystem.build([receiver, *transmitters])
+    system.make_engine(rx.name, max_slots=8, max_seq=64, max_prefix=16)
+    rid_a = system.submit(rx.name, prompt_a, steps=2, protocol="c2c", n_tx=4)
+    rid_b = system.submit(rx.name, prompt_b, steps=2, protocol="standalone")
+    results = system.drain(rx.name)   # {rid: {"tokens", "protocol", ...}}
+
+or drive the engine directly (``engine.submit(...)``/``engine.step()``) for
+online serving; ``benchmarks/engine_bench.py`` measures it against the old
+lockstep ``BatchedServer`` under Poisson arrivals.
 
 Run:  PYTHONPATH=src python examples/serve_federated.py  [--requests 32]
 (env CS_TRAIN_STEPS=60 CS_FUSER_STEPS=40 for a faster demo build)
@@ -22,15 +40,15 @@ import numpy as np
 
 sys.path.insert(0, ".")  # allow running from repo root
 from benchmarks.common import build_case_study  # noqa: E402
-from repro.core import c2c  # noqa: E402
+from repro.core import commload  # noqa: E402
 from repro.models import transformer as T  # noqa: E402
-from repro.models.cache import attn_kv_stack  # noqa: E402
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--n-tx", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=8)
     args = ap.parse_args()
 
     cs = build_case_study()
@@ -41,36 +59,47 @@ def main() -> None:
     ev = world.eval_batch(rng, args.requests)
     prompts = jnp.asarray(ev["prompt"])
     answers = np.asarray(ev["answer"])
+    S = prompts.shape[1]
 
     # ---- standalone baseline ------------------------------------------------
     logits, _ = T.forward(rx.cfg, rx.params, prompts)
     solo = np.mean(np.asarray(jnp.argmax(logits[:, -1], -1)) == answers)
 
-    # ---- federated serving --------------------------------------------------
+    # ---- federated serving through the continuous-batching engine ----------
+    system.make_engine(rx.name, max_slots=args.slots, max_seq=2 * S + 4,
+                       max_prefix=args.n_tx * S)
     t0 = time.perf_counter()
     key = jax.random.PRNGKey(0)
-    stacks, fusers, cfgs, bytes_total = [], [], [], 0
-    for i, name in enumerate(tx_names):
-        tx = system.participants[name]
-        tp = system.channel.rephrase(prompts, jax.random.fold_in(key, i))
-        _, cache = T.prefill(tx.cfg, tx.params, tp, max_seq=tp.shape[1],
-                             cache_dtype=jnp.float32)
-        st = attn_kv_stack(tx.cfg, cache, length=tp.shape[1])
-        stacks.append(st)
-        fusers.append(system.registry.get(name, rx.name))
-        cfgs.append(tx.cfg)
-        bytes_total += 2 * st["k"].nbytes  # k + v on the wire
-    fused = c2c.fused_prefix(fusers, cfgs, rx.cfg, stacks)
-    rx_prompts = system.channel.rephrase(prompts, jax.random.fold_in(key, 99))
-    logits, _ = c2c.c2c_forward(rx.cfg, rx.params, rx_prompts, fused)
-    fed = np.mean(np.asarray(jnp.argmax(logits[:, -1], -1)) == answers)
+    rids = []
+    for i in range(args.requests):
+        # every participant gets its OWN rephrasing of the original prompt
+        # (the Fig. 2 privacy regime — never a rephrase of a rephrase)
+        ki = jax.random.fold_in(key, i)
+        rx_prompt = system.channel.rephrase(prompts[i : i + 1],
+                                            jax.random.fold_in(ki, 99))
+        tx_prompts = {
+            n: system.channel.rephrase(prompts[i : i + 1],
+                                       jax.random.fold_in(ki, j))
+            for j, n in enumerate(tx_names)
+        }
+        rids.append(system.submit(rx.name, rx_prompt, steps=2, protocol="c2c",
+                                  n_tx=args.n_tx, tx_prompts=tx_prompts))
+    results = system.drain(rx.name)
     dt = time.perf_counter() - t0
+
+    preds = np.array([results[r]["tokens"][0] for r in rids])
+    fed = np.mean(preds == answers)
+    per_req = sum(commload.c2c_bytes_per_token(system.participants[n].cfg)
+                  for n in tx_names) * S
+    eng = system.engines[rx.name]
 
     print(f"\nrequests={args.requests} transmitters={tx_names}")
     print(f"standalone receiver accuracy: {solo:.3f}")
     print(f"FedRefine accuracy:           {fed:.3f}")
-    print(f"C2C bytes shipped: {bytes_total} "
-          f"({bytes_total // args.requests} per request), wall {dt*1e3:.0f} ms")
+    print(f"C2C bytes shipped: {per_req * args.requests} "
+          f"({per_req} per request), wall {dt*1e3:.0f} ms")
+    print(f"engine: {eng.stats['admitted']} admitted through "
+          f"{args.slots} slots, decode traced {eng.stats['decode_traces']}x")
 
 
 if __name__ == "__main__":

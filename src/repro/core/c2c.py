@@ -8,7 +8,6 @@ benchmarks/fig3c_latency.py quantifies.
 """
 from __future__ import annotations
 
-import functools
 from typing import List, Optional, Tuple
 
 import jax

@@ -21,10 +21,10 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import c2c
-from repro.core.privacy import ParaphraseChannel, identity_channel
+from repro.core.privacy import ParaphraseChannel
 from repro.core.registry import FuserRegistry
 from repro.models import transformer as T
-from repro.models.cache import attn_kv_stack, extra_kv_layers
+from repro.models.cache import attn_kv_stack
 
 
 @dataclass
@@ -41,6 +41,8 @@ class FedRefineSystem:
     channel: Optional[ParaphraseChannel] = None
     # task -> preferred transmitter names, best first (the case-study prior)
     task_affinity: Dict[str, List[str]] = field(default_factory=dict)
+    # receiver name -> continuous-batching engine (see make_engine/submit/drain)
+    engines: Dict[str, object] = field(default_factory=dict)
 
     # ------------------------------------------------------------- setup
     @classmethod
@@ -120,6 +122,87 @@ class FedRefineSystem:
             "c2c_bytes": sum(
                 commload.c2c_bytes_per_token(self.participants[n].cfg)
                 for n in tx_names),
+        }
+
+    # ------------------------------------------------- continuous serving
+    def make_engine(self, receiver: str, *, max_slots: int = 8,
+                    max_seq: int = 128, max_prefix: int = 32,
+                    cache_dtype=None, prompt_bucket: Optional[int] = None):
+        """Build (and register) the receiver's continuous-batching engine.
+
+        All protocols share it: standalone and T2T requests decode alongside
+        C2C-fused ones in the same slot table (launch/engine.py)."""
+        import jax.numpy as jnp
+        from repro.launch.engine import ContinuousBatchingEngine
+
+        rxp = self.participants[receiver]
+        eng = ContinuousBatchingEngine(
+            rxp.cfg, rxp.params, max_slots=max_slots, max_seq=max_seq,
+            max_prefix=max_prefix,
+            cache_dtype=cache_dtype if cache_dtype is not None else jnp.float32,
+            prompt_bucket=prompt_bucket)
+        self.engines[receiver] = eng
+        return eng
+
+    def submit(self, receiver: str, prompt: jax.Array, steps: int, *,
+               protocol: str = "c2c", task: str = "default", n_tx: int = 1,
+               tx_prompts: Optional[Dict[str, jax.Array]] = None,
+               key: Optional[jax.Array] = None, gated: bool = True) -> int:
+        """Queue one request (B=1) into the receiver's engine; returns its rid.
+
+        ``prompt`` is the receiver-side (already rephrased) prompt, as in
+        refine_generate; pass ``tx_prompts`` to give each transmitter its own
+        rephrasing of the *original* prompt (otherwise the receiver prompt is
+        re-rephrased, compounding paraphrase noise on non-idempotent channels).
+
+        ``protocol``: "c2c" (transmit + fuse a KV prefix), "t2t" (transmitters
+        answer as text, prepended to the receiver prompt), or "standalone".
+        An explicit "c2c"/"t2t" request with no schedulable transmitter raises
+        rather than silently degrading to standalone. Requests of all three
+        kinds coexist in one decode batch; drain() (or engine.step()) runs
+        them to completion."""
+        from repro.core import t2t
+
+        eng = self.engines.get(receiver) or self.make_engine(receiver)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        prompt = jnp.asarray(prompt, jnp.int32)
+        if prompt.ndim == 1:
+            prompt = prompt[None]
+        tx_names = (self.schedule(task, receiver, n_tx)
+                    if protocol != "standalone" else [])
+        if protocol != "standalone" and not tx_names:
+            raise ValueError(
+                f"protocol {protocol!r} requested but no transmitter with a "
+                f"fuser for receiver {receiver!r} is schedulable; submit with "
+                f"protocol='standalone' to run unrefined")
+        if protocol == "c2c":
+            if tx_prompts is None:
+                tx_prompts = {
+                    n: self.rephrase(prompt, jax.random.fold_in(key, i))
+                    for i, n in enumerate(tx_names)
+                }
+            stacks = self.transmit_stacks(tx_names, tx_prompts)
+            fused = self.fused_prefix(receiver, tx_names, stacks, gated=gated)
+            return eng.submit(prompt, steps, fused=fused, protocol="c2c",
+                              meta={"transmitters": tx_names})
+        if protocol == "t2t":
+            shared = []
+            for i, n in enumerate(tx_names):
+                p = self.participants[n]
+                tp = (tx_prompts[n] if tx_prompts is not None
+                      else self.rephrase(prompt, jax.random.fold_in(key, i)))
+                shared.append(t2t.t2t_exchange(p.cfg, p.params, tp, steps))
+            combined = jnp.concatenate([*shared, prompt], axis=1)
+            return eng.submit(combined, steps, protocol="t2t",
+                              meta={"transmitters": tx_names})
+        return eng.submit(prompt, steps, protocol="standalone")
+
+    def drain(self, receiver: str) -> Dict[int, dict]:
+        """Run the receiver's engine until idle; {rid: completion dict}."""
+        eng = self.engines[receiver]
+        return {
+            c.rid: {"tokens": c.tokens, "protocol": c.protocol, **c.meta}
+            for c in eng.drain()
         }
 
     # ---------------------------------------------------- opportunistic serve

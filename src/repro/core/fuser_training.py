@@ -13,7 +13,6 @@ tx KV stack is computed under ``stop_gradient`` once per batch.
 """
 from __future__ import annotations
 
-import functools
 from typing import Iterator, Optional, Tuple
 
 import jax
@@ -23,7 +22,7 @@ from repro.configs.base import ModelConfig
 from repro.core import c2c
 from repro.core import fuser as F
 from repro.models import transformer as T
-from repro.models.cache import attn_kv_stack, extra_kv_layers
+from repro.models.cache import attn_kv_stack
 from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state
 
 

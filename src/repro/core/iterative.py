@@ -20,14 +20,13 @@ compute is traced once per shape).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import c2c
-from repro.core import fuser as F
 from repro.models import transformer as T
 from repro.models.cache import attn_kv_stack
 

@@ -13,9 +13,7 @@ round-trip error; benchmarks report the end-task delta).
 """
 from __future__ import annotations
 
-from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig

@@ -17,7 +17,7 @@ has headroom, which is the regime Fig. 3(a) probes.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import numpy as np

@@ -7,7 +7,6 @@ forced via REPRO_PALLAS_INTERPRET=0/1.
 """
 from __future__ import annotations
 
-import functools
 import math
 import os
 

@@ -1,0 +1,279 @@
+"""Continuous-batching federated serving engine (replaces lockstep serving).
+
+The lockstep ``BatchedServer`` (launch/serve.py) needs every request to arrive
+together, decode in unison and finish together — and its fused-prefix path
+re-jits a fresh serve step per call. This engine serves the regime the paper's
+federation actually targets: heavy *mixed* traffic, where standalone, C2C-fused
+and T2T requests with different lengths and arrival times share one device.
+
+Design:
+
+- **Slot table** — a fixed-capacity decode cache (``models/cache.init_slot_cache``)
+  whose batch axis is ``max_slots`` request slots, each with its own position
+  (the per-slot ``pos`` vector that ``transformer.decode_step`` now understands).
+- **Admission queue** — ``submit()`` enqueues; each ``step()`` first admits
+  queued requests into free slots (prefill + ``cache_insert_slot``), so
+  requests join mid-flight without disturbing in-flight neighbours.
+- **Completion path** — a slot is freed the step its request finishes
+  (``cache_evict_slot``); stale K/V are masked by the per-slot position, so no
+  zeroing is needed and the slot is immediately reusable.
+- **One jitted decode step** — the whole slot array decodes in a single jitted
+  function with *fixed* shapes: ``max_slots`` rows, ``max_seq`` cache, and a
+  per-slot fused C2C prefix padded to a fixed ``max_prefix`` bucket whose
+  absent/inactive positions carry ``PREFIX_MASK_BIAS`` (zero attention mass).
+  The step therefore traces exactly once, no matter how the standalone /
+  C2C-fused / T2T request mix changes (``stats["decode_traces"]`` proves it).
+
+Prefill is bucketed separately (``prompt_bucket``): right-padding a prompt is
+exact for *full-attention* layers (causality — pad keys sit after every real
+query, and the per-slot position mask hides them). It is NOT exact for
+sliding-window ring buffers (pad writes can wrap the ring and evict real
+in-window entries) or recurrent/SSD state (carried left-to-right through
+pads), so models with swa/rec/ssd layers prefill at the exact prompt length
+instead.
+
+Quickstart::
+
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=8, max_seq=128,
+                                   max_prefix=16)
+    rid_a = eng.submit(prompt_a, max_new_tokens=16)               # standalone
+    rid_b = eng.submit(prompt_b, max_new_tokens=8, fused=prefix)  # C2C-fused
+    done = eng.drain()      # or eng.step() per tick for online serving
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.models import cache as C
+
+
+@dataclass
+class EngineRequest:
+    """One queued request. ``fused`` is an already-projected C2C prefix stack
+    {"k","v"[,"bias"]} of shape (n_attn_rx, 1, Hkv, Sf, hd) with Sf <= the
+    engine's ``max_prefix`` (see core/c2c.fused_prefix)."""
+
+    rid: int
+    prompt: jax.Array  # (1, S) int32
+    max_new_tokens: int
+    fused: Optional[dict] = None
+    protocol: str = "standalone"
+    meta: dict = field(default_factory=dict)
+
+
+@dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray  # (max_new_tokens,) int32 greedy continuation
+    protocol: str
+    meta: dict = field(default_factory=dict)
+
+
+class ContinuousBatchingEngine:
+    """Fixed-slot continuous-batching decode engine for one receiver model."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: dict,
+        *,
+        max_slots: int = 8,
+        max_seq: int = 128,
+        max_prefix: int = 0,
+        cache_dtype=jnp.float32,
+        prompt_bucket: Optional[int] = None,
+    ):
+        if max_prefix and not cfg.attention_layers:
+            raise ValueError("fused prefixes need attention layers (C2C medium)")
+        self.cfg, self.params = cfg, params
+        self.max_slots, self.max_seq = max_slots, max_seq
+        self.max_prefix = max_prefix
+        self.cache_dtype = cache_dtype
+        # exact-length prefill unless the model is pure full-attention:
+        # right-padded prompts pollute rec/ssd left-to-right state, and pad
+        # writes can wrap a swa ring buffer and evict real in-window entries
+        pad_safe = all(k == "attn" for k in cfg.block_pattern)
+        self.prompt_bucket = prompt_bucket if pad_safe else None
+
+        self._table = C.init_slot_cache(cfg, max_slots, max_seq, cache_dtype)
+        self._tok = jnp.zeros((max_slots,), jnp.int32)
+        self._fused = (C.empty_fused_stack(cfg, max_slots, max_prefix, cache_dtype)
+                       if max_prefix else None)
+        # shared all-masked prefix for standalone admissions (identical every
+        # time — build once, not per request)
+        self._empty_req_fused = (C.empty_fused_stack(cfg, 1, max_prefix,
+                                                     cache_dtype)
+                                 if max_prefix else None)
+        self._active = np.zeros(max_slots, bool)
+        self._slot_rid: List[Optional[int]] = [None] * max_slots
+        self._remaining = np.zeros(max_slots, np.int64)
+        self._queue: deque = deque()
+        self._outputs: Dict[int, list] = {}
+        self._req_info: Dict[int, EngineRequest] = {}
+        self._ready: List[Completion] = []  # completed at admission (1-token)
+        self._next_rid = 0
+        self.stats = {"decode_traces": 0, "prefill_traces": 0, "admitted": 0,
+                      "completed": 0, "decode_steps": 0}
+        self._decode = jax.jit(self._make_decode())
+        self._prefill = jax.jit(self._make_prefill())
+        self._insert = jax.jit(C.cache_insert_slot)
+        self._insert_fused = jax.jit(C.fused_stack_insert_slot)
+
+    # ------------------------------------------------------------- jitted fns
+    def _make_decode(self):
+        cfg = self.cfg
+
+        def decode(params, table, tok, fused, active):
+            self.stats["decode_traces"] += 1  # trace-time: counts compilations
+            ek = C.extra_kv_layers(cfg, fused) if fused is not None else None
+            logits, new_table = T.decode_step(cfg, params, table, tok,
+                                              extra_kv=ek)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            nxt = jnp.where(active, nxt, tok)
+            # hold inactive slots in place so their position never grows past
+            # max_seq while they wait for the next occupant
+            pos = jnp.where(active, new_table["pos"], table["pos"])
+            return nxt, {"pos": pos, "layers": new_table["layers"]}
+
+        return decode
+
+    def _make_prefill(self):
+        cfg, max_seq, dtype = self.cfg, self.max_seq, self.cache_dtype
+
+        def prefill(params, tokens, fused):
+            self.stats["prefill_traces"] += 1
+            ek = C.extra_kv_layers(cfg, fused) if fused is not None else None
+            logits, cache = T.prefill(cfg, params, tokens, max_seq=max_seq,
+                                      cache_dtype=dtype, extra_kv=ek)
+            return logits, cache
+
+        return prefill
+
+    # ------------------------------------------------------------- submission
+    def submit(self, prompt, max_new_tokens: int, *,
+               fused: Optional[dict] = None, protocol: Optional[str] = None,
+               meta: Optional[dict] = None) -> int:
+        """Queue a request; returns its rid. Joins the running batch at the
+        next step() with a free slot."""
+        prompt = jnp.asarray(prompt, jnp.int32)
+        if prompt.ndim == 1:
+            prompt = prompt[None]
+        if prompt.shape[0] != 1:
+            raise ValueError("submit() takes one request at a time (B=1)")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        S = int(prompt.shape[1])
+        if S + max_new_tokens > self.max_seq:
+            raise ValueError(f"prompt({S}) + gen({max_new_tokens}) exceeds "
+                             f"max_seq={self.max_seq}")
+        if fused is not None:
+            if not self.max_prefix:
+                raise ValueError("engine built with max_prefix=0 cannot take "
+                                 "fused prefixes")
+            fused = C.pad_fused_stack(fused, self.max_prefix)
+        proto = protocol or ("c2c" if fused is not None else "standalone")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = EngineRequest(rid, prompt, max_new_tokens, fused, proto,
+                            meta or {})
+        self._queue.append(req)
+        self._req_info[rid] = req
+        return rid
+
+    # -------------------------------------------------------------- admission
+    def _bucket_len(self, S: int) -> int:
+        if self.prompt_bucket is None:
+            return S
+        b = ((S + self.prompt_bucket - 1) // self.prompt_bucket
+             ) * self.prompt_bucket
+        return min(b, self.max_seq)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i in range(self.max_slots) if not self._active[i]]
+
+    def _admit(self) -> None:
+        free = deque(self._free_slots())
+        while self._queue and free:
+            req = self._queue.popleft()
+            S = int(req.prompt.shape[1])
+            Sb = self._bucket_len(S)
+            toks = jnp.pad(req.prompt, ((0, 0), (0, Sb - S)))
+            fused = req.fused
+            if self.max_prefix and fused is None:
+                # standalone rides the same prefill trace as fused requests
+                fused = self._empty_req_fused
+            logits, cache1 = self._prefill(self.params, toks, fused)
+            first = jnp.argmax(logits[0, S - 1]).astype(jnp.int32)
+            self._outputs[req.rid] = [first]
+            self.stats["admitted"] += 1
+            if req.max_new_tokens == 1:  # done at prefill: never takes a slot
+                self._ready.append(self._finish(req.rid))
+                continue
+            slot = free.popleft()
+            self._table = self._insert(self._table, jnp.int32(slot), cache1,
+                                       jnp.int32(S))
+            self._tok = self._tok.at[slot].set(first)
+            if self._fused is not None:
+                self._fused = self._insert_fused(self._fused, jnp.int32(slot),
+                                                 fused)
+            self._active[slot] = True
+            self._slot_rid[slot] = req.rid
+            self._remaining[slot] = req.max_new_tokens - 1
+
+    # ------------------------------------------------------------- completion
+    def _finish(self, rid: int) -> Completion:
+        req = self._req_info.pop(rid)
+        toks = np.asarray(jnp.stack(self._outputs.pop(rid)), np.int32)
+        self.stats["completed"] += 1
+        return Completion(rid, toks, req.protocol, req.meta)
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> List[Completion]:
+        """Admit what fits, decode one token for every active slot, free any
+        slot whose request just finished. Returns the completions."""
+        self._admit()
+        done, self._ready = self._ready, []
+        if not self._active.any():
+            return done
+        self._tok, self._table = self._decode(
+            self.params, self._table, self._tok, self._fused,
+            jnp.asarray(self._active))
+        self.stats["decode_steps"] += 1
+        tok_host = np.asarray(self._tok)
+        for s in np.nonzero(self._active)[0]:
+            rid = self._slot_rid[s]
+            self._outputs[rid].append(tok_host[s])
+            self._remaining[s] -= 1
+            if self._remaining[s] == 0:
+                self._active[s] = False
+                self._slot_rid[s] = None
+                self._table = C.cache_evict_slot(self._table, int(s))
+                done.append(self._finish(rid))
+        return done
+
+    # ----------------------------------------------------------------- drain
+    def drain(self) -> List[Completion]:
+        """Run until the queue and every slot are empty."""
+        out: List[Completion] = []
+        while self._queue or self._active.any():
+            out.extend(self.step())
+        out.extend(self._ready)
+        self._ready = []
+        return out
+
+    # ----------------------------------------------------------------- intro
+    @property
+    def num_active(self) -> int:
+        return int(self._active.sum())
+
+    @property
+    def num_queued(self) -> int:
+        return len(self._queue)

@@ -15,8 +15,10 @@ import jax
 
 def _mk(shape, axes):
     import jax.sharding as shd
-    return jax.make_mesh(shape, axes,
-                         axis_types=(shd.AxisType.Auto,) * len(axes))
+    if hasattr(shd, "AxisType"):  # jax >= 0.5 explicit-sharding API
+        return jax.make_mesh(shape, axes,
+                             axis_types=(shd.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

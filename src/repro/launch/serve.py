@@ -6,8 +6,7 @@ cache. The federated variants thread the C2C fused prefix through (Eq. 4).
 """
 from __future__ import annotations
 
-import functools
-from typing import List, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -7,9 +7,7 @@ function is what launch/dryrun.py lowers against the production mesh.
 from __future__ import annotations
 
 import argparse
-import functools
 import time
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -290,14 +290,21 @@ def decode_forward(
     cos: jax.Array,  # (B, 1, hd//2)
     sin: jax.Array,
     kv: dict,  # full: k/v (B,Hkv,S,hd); swa ring: + slot_pos (B,W)
-    pos: jax.Array,  # scalar int32 — current absolute position
+    pos: jax.Array,  # int32 — current absolute position: scalar or per-slot (B,)
     *,
     window: int = 0,
     extra_kv: Optional[dict] = None,  # fused transmitter cache (C2C), always visible
     extra_kv_mode: str = "concat",  # "concat" (Eq. 1 literal) | "split" (LSE merge)
 ) -> Tuple[jax.Array, dict]:
-    """Single-token decode against a cache; returns (out (B,1,d), updated kv)."""
+    """Single-token decode against a cache; returns (out (B,1,d), updated kv).
+
+    ``pos`` may be a scalar (lockstep batch: every row at the same position) or a
+    per-row (B,) vector (continuous batching: each slot decodes at its own
+    position — launch/engine.py). The vector path vmaps the cache write over the
+    batch and masks keys per row.
+    """
     B = x.shape[0]
+    per_slot = pos.ndim == 1
     q, k_new, v_new = project_qkv(cfg, params, x, cos, sin)
     k_new = k_new.astype(kv["k"].dtype)
     v_new = v_new.astype(kv["v"].dtype)
@@ -305,20 +312,36 @@ def decode_forward(
     if "slot_pos" in kv:  # sliding-window ring buffer
         W = kv["k"].shape[-2]
         slot = pos % W
-        k = jax.lax.dynamic_update_slice(kv["k"], k_new, (0, 0, slot, 0))
-        v = jax.lax.dynamic_update_slice(kv["v"], v_new, (0, 0, slot, 0))
-        slot_pos = jax.lax.dynamic_update_slice(
-            kv["slot_pos"], jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32), (0, slot)
-        )
-        valid = (slot_pos >= 0) & (slot_pos > pos - (window or W)) & (slot_pos <= pos)
+        if per_slot:
+            upd = jax.vmap(
+                lambda c, n, s: jax.lax.dynamic_update_slice(c, n, (0, s, 0)))
+            k = upd(kv["k"], k_new, slot)
+            v = upd(kv["v"], v_new, slot)
+            slot_pos = jax.vmap(
+                lambda sp, s, p: jax.lax.dynamic_update_slice(sp, p[None], (s,))
+            )(kv["slot_pos"], slot, pos.astype(jnp.int32))
+        else:
+            k = jax.lax.dynamic_update_slice(kv["k"], k_new, (0, 0, slot, 0))
+            v = jax.lax.dynamic_update_slice(kv["v"], v_new, (0, 0, slot, 0))
+            slot_pos = jax.lax.dynamic_update_slice(
+                kv["slot_pos"], jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32),
+                (0, slot))
+        p = pos[:, None] if per_slot else pos
+        valid = (slot_pos >= 0) & (slot_pos > p - (window or W)) & (slot_pos <= p)
         mask = valid[:, None, None, :]  # (B,1,1,W)
         new_kv = {"k": k, "v": v, "slot_pos": slot_pos}
     else:  # full cache
         S = kv["k"].shape[-2]
-        k = jax.lax.dynamic_update_slice(kv["k"], k_new, (0, 0, pos, 0))
-        v = jax.lax.dynamic_update_slice(kv["v"], v_new, (0, 0, pos, 0))
-        kpos = jnp.arange(S)
-        mask = (kpos <= pos)[None, None, None, :]
+        if per_slot:
+            upd = jax.vmap(
+                lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (0, p, 0)))
+            k = upd(kv["k"], k_new, pos)
+            v = upd(kv["v"], v_new, pos)
+            mask = (jnp.arange(S)[None, :] <= pos[:, None])[:, None, None, :]
+        else:
+            k = jax.lax.dynamic_update_slice(kv["k"], k_new, (0, 0, pos, 0))
+            v = jax.lax.dynamic_update_slice(kv["v"], v_new, (0, 0, pos, 0))
+            mask = (jnp.arange(S) <= pos)[None, None, None, :]
         new_kv = {"k": k, "v": v}
 
     if extra_kv is not None and extra_kv_mode == "split":

@@ -171,6 +171,115 @@ def extra_kv_layers(cfg: ModelConfig, fused_stack: dict) -> list:
     return out
 
 
+# ------------------------------------------------------- slot table (engine)
+
+# Additive attention-logit bias that masks an absent/inactive fused-prefix key.
+# exp(PREFIX_MASK_BIAS - m) underflows to exactly 0 in fp32 softmax, so a fully
+# masked prefix is *identical* to decoding with no prefix at all — the property
+# that lets launch/engine.py keep one fixed-shape fused bucket per slot.
+PREFIX_MASK_BIAS = -1e30
+
+
+def init_slot_cache(
+    cfg: ModelConfig,
+    slots: int,
+    max_seq: int,
+    dtype=jnp.bfloat16,
+    *,
+    window_override: Optional[int] = None,
+) -> dict:
+    """A decode cache whose batch axis is a *slot table*: ``pos`` is per-slot
+    (slots,) int32 so every slot decodes at its own position (continuous
+    batching — launch/engine.py). Consumed by transformer.decode_step's
+    vector-``pos`` path."""
+    c = init_cache(cfg, slots, max_seq, dtype, window_override=window_override)
+    c["pos"] = jnp.zeros((slots,), jnp.int32)
+    return c
+
+
+def _insert_slot_leaf(table_leaf: jax.Array, req_leaf: jax.Array,
+                      slot: jax.Array) -> jax.Array:
+    # every cache leaf is (cycles, batch, ...): scatter the request's batch=1
+    # block at batch index ``slot``
+    start = (jnp.zeros((), jnp.int32), slot) + tuple(
+        jnp.zeros((), jnp.int32) for _ in range(table_leaf.ndim - 2))
+    return jax.lax.dynamic_update_slice(
+        table_leaf, req_leaf.astype(table_leaf.dtype), start)
+
+
+def cache_insert_slot(table: dict, slot: jax.Array, req: dict,
+                      length: jax.Array) -> dict:
+    """Insert a single-request cache (batch 1, same ``max_seq``) into slot
+    ``slot`` of a slot-table cache and set that slot's position to ``length``.
+
+    Stale K/V beyond ``length`` (from a previous occupant) never need zeroing:
+    the per-slot position mask hides them, and decode overwrites each index
+    before it first becomes visible."""
+    slot = jnp.asarray(slot, jnp.int32)
+    layers = [
+        jax.tree.map(lambda t, r: _insert_slot_leaf(t, r, slot), tl, rl)
+        for tl, rl in zip(table["layers"], req["layers"])
+    ]
+    pos = table["pos"].at[slot].set(jnp.asarray(length, jnp.int32))
+    return {"pos": pos, "layers": layers}
+
+
+def cache_evict_slot(table: dict, slot) -> dict:
+    """Free a slot immediately: reset its position (stale K/V stay but are
+    masked — see cache_insert_slot)."""
+    return {"pos": table["pos"].at[jnp.asarray(slot, jnp.int32)].set(0),
+            "layers": table["layers"]}
+
+
+def empty_fused_stack(cfg: ModelConfig, batch: int, max_prefix: int,
+                      dtype=jnp.float32) -> dict:
+    """All-masked fused-prefix stack: k/v zeros (n_attn, batch, Hkv, max_prefix,
+    hd) and bias PREFIX_MASK_BIAS everywhere. Decoding against it equals
+    standalone decoding exactly."""
+    n = len(cfg.attention_layers)
+    hd = cfg.resolved_head_dim
+    shape = (n, batch, cfg.num_kv_heads, max_prefix, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "bias": jnp.full((n, batch, max_prefix), PREFIX_MASK_BIAS, jnp.float32),
+    }
+
+
+def pad_fused_stack(fused: dict, max_prefix: int) -> dict:
+    """Right-pad a fused prefix stack to the fixed ``max_prefix`` bucket; padded
+    positions get bias PREFIX_MASK_BIAS (zero attention mass). This is what
+    keeps the engine's decode step shape-stable across request mixes."""
+    n, B, H, S, hd = fused["k"].shape
+    if S > max_prefix:
+        raise ValueError(f"fused prefix length {S} exceeds max_prefix {max_prefix}")
+    pad = max_prefix - S
+    bias = fused.get("bias")
+    if bias is None:
+        bias = jnp.zeros((n, B, S), jnp.float32)
+    return {
+        "k": jnp.pad(fused["k"], ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
+        "v": jnp.pad(fused["v"], ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
+        "bias": jnp.pad(bias.astype(jnp.float32), ((0, 0), (0, 0), (0, pad)),
+                        constant_values=PREFIX_MASK_BIAS),
+    }
+
+
+def fused_stack_insert_slot(table: dict, slot, req: dict) -> dict:
+    """Scatter a single request's padded fused stack (n_attn, 1, Hkv, P, hd)
+    into batch index ``slot`` of the engine's per-slot fused table."""
+    slot = jnp.asarray(slot, jnp.int32)
+    z = jnp.zeros((), jnp.int32)
+    out = {}
+    for name in ("k", "v"):
+        out[name] = jax.lax.dynamic_update_slice(
+            table[name], req[name].astype(table[name].dtype),
+            (z, slot, z, z, z))
+    out["bias"] = jax.lax.dynamic_update_slice(
+        table["bias"], req["bias"].astype(jnp.float32), (z, slot, z))
+    return out
+
+
 def n_attn_layers(cfg: ModelConfig) -> int:
     return len(cfg.attention_layers)
 

@@ -13,7 +13,7 @@ top-k probabilities. Load-balance auxiliary loss is the standard Switch form
 from __future__ import annotations
 
 import contextlib
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -89,8 +89,18 @@ def moe_ffn(
     *,
     group_size: int = 0,
     capacity_factor: float = 0.0,
+    dropless: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Returns (y (B,S,d), aux_loss scalar fp32)."""
+    """Returns (y (B,S,d), aux_loss scalar fp32).
+
+    ``dropless=True`` gives every routed token capacity (C = g): routing then
+    depends only on the token itself, never on how many tokens share the
+    dispatch group. Serving needs this — capacity competition makes a request's
+    logits depend on batch packing (prefill vs teacher-forced lengths disagree,
+    and a continuous-batching slot would depend on its neighbours). Training
+    keeps the capacity-bounded Switch/GShard baseline. A sorted-scatter
+    dropless dispatch (capacity buffers are O(g²) here) is a §Perf follow-up.
+    """
     group_size = group_size or cfg.moe_group_size
     capacity_factor = capacity_factor or cfg.moe_capacity_factor
     Bq, S, d = x.shape
@@ -106,8 +116,11 @@ def moe_ffn(
     top_p, top_i = jax.lax.top_k(probs, K)  # (G, g, K)
     top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalise (Qwen)
 
-    C = _round_up(max(int(g * K / E * capacity_factor), 4), 4)
-    C = min(C, g)
+    if dropless:
+        C = g
+    else:
+        C = _round_up(max(int(g * K / E * capacity_factor), 4), 4)
+        C = min(C, g)
 
     # Position of each (token, slot) within its expert's capacity buffer.
     # Token-major priority: earlier tokens (and earlier top-k slots) win capacity.

@@ -18,7 +18,6 @@ Entry points:
 from __future__ import annotations
 
 import contextlib
-import functools
 import math
 from typing import Optional, Tuple
 
@@ -156,7 +155,7 @@ def rope_tables(cfg: ModelConfig, positions: jax.Array,
 
 
 def _apply_layer_full(cfg, kind, p, x, cos, sin, window, aux, state=None,
-                      extra_kv=None):
+                      extra_kv=None, moe_dropless=True):
     """Full-sequence layer. Returns (x, kv_or_state, aux)."""
     kv = None
     new_state = None
@@ -167,7 +166,7 @@ def _apply_layer_full(cfg, kind, p, x, cos, sin, window, aux, state=None,
         x = x + h
         h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
         if cfg.num_experts:
-            y, a = MOE.moe_ffn(cfg, p["ffn"], h2)
+            y, a = MOE.moe_ffn(cfg, p["ffn"], h2, dropless=moe_dropless)
             aux = aux + a
         else:
             y = L.swiglu(p["ffn"], h2)
@@ -218,7 +217,9 @@ def _apply_layer_decode(cfg, kind, p, x, cos, sin, entry, pos, window,
         x = x + h
         h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
         if cfg.num_experts:
-            y, _ = MOE.moe_ffn(cfg, p["ffn"], h2)
+            # dropless: a slot's routing must not depend on its batch
+            # neighbours (continuous batching packs unrelated requests)
+            y, _ = MOE.moe_ffn(cfg, p["ffn"], h2, dropless=True)
         else:
             y = L.swiglu(p["ffn"], h2)
         return x + y, new_kv
@@ -262,6 +263,7 @@ def forward(
     extra_kv: Optional[list] = None,  # per pattern+tail position: stacked kv | None
     unroll: bool = False,  # python-loop the cycles (dry-run cost accounting)
     return_hidden: bool = False,  # skip unembed (chunked-CE path)
+    moe_dropless: bool = True,  # inference default; training sets False (moe.py)
 ) -> Tuple[jax.Array, jax.Array]:
     """Teacher-forced forward. Returns (logits (B,S,V), moe_aux scalar).
 
@@ -289,7 +291,8 @@ def forward(
         for i, kind in enumerate(pattern):
             e = ekx[i] if isinstance(ekx[i], dict) else None
             x, _, _, aux = _apply_layer_full(cfg, kind, p_stack[i], x, cos, sin,
-                                             window, aux, extra_kv=e)
+                                             window, aux, extra_kv=e,
+                                             moe_dropless=moe_dropless)
         return (_constrain(x), aux), None
 
     aux = jnp.zeros((), jnp.float32)
@@ -321,7 +324,8 @@ def forward(
         e = ek[len(pattern) + i]
         e = jax.tree.map(lambda a: a[0], e) if e is not None else None
         x, _, _, aux = _apply_layer_full(cfg, kind, params["tail"][i], x, cos, sin,
-                                         window, aux, extra_kv=e)
+                                         window, aux, extra_kv=e,
+                                         moe_dropless=moe_dropless)
     if return_hidden:
         return x, aux
     return _logits_out(cfg, params, x), aux
@@ -422,12 +426,18 @@ def decode_step(
 ) -> Tuple[jax.Array, dict]:
     """One decode step (the serve_step the decode shapes lower).
 
+    ``cache["pos"]`` may be a scalar (lockstep batch) or a per-row (B,) vector
+    (continuous batching: each slot at its own position — launch/engine.py).
+
     Returns (logits (B, V), updated cache)."""
     cycles, pattern, tail = layer_grouping(cfg)
     pos = cache["pos"]
     x = L.embed(params["embed"], token[:, None])
     B = x.shape[0]
-    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    if pos.ndim == 1:  # per-slot positions
+        positions = pos[:, None].astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
     cos, sin = rope_tables(cfg, positions)
     window = window_override or cfg.sliding_window
     ek = extra_kv or [None] * (len(pattern) + len(tail))
@@ -488,7 +498,8 @@ def loss_fn(
     unroll: bool = False,
 ) -> jax.Array:
     hidden, aux = forward(cfg, params, tokens, embeds, positions_3d, remat=remat,
-                          unroll=unroll, return_hidden=True)
+                          unroll=unroll, return_hidden=True,
+                          moe_dropless=False)  # capacity-bounded training baseline
     hidden = L.rmsnorm(params["final_norm"], hidden, cfg.norm_eps)
 
     def unembed(xb):

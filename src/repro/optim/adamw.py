@@ -7,9 +7,8 @@ treated as non-trainable and passed through untouched.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Callable, NamedTuple, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ per-op below); cost_analysis of a partitioned module is likewise per-device.
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import asdict, dataclass, field
 from typing import Optional

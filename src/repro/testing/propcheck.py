@@ -1,0 +1,207 @@
+"""Minimal, dependency-free stand-in for the slice of `hypothesis` the test
+suite uses (``given``/``settings``/``strategies``).
+
+tests/test_property.py prefers the real library (pinned in requirements.txt —
+CI installs it); this shim keeps the property tests collectable and meaningful
+in hermetic environments where ``pip install`` is unavailable. It is NOT a
+general hypothesis replacement: no shrinking, no database, no stateful
+testing — just deterministic boundary-first example generation.
+
+Examples are generated from a per-test seed (stable across runs): the first
+examples exercise each strategy's boundary values, the rest are pseudo-random.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+
+# ------------------------------------------------------------------ strategies
+
+
+class SearchStrategy:
+    """Base: ``edges()`` are tried first (boundary values), then ``sample``."""
+
+    def edges(self) -> List[Any]:
+        return []
+
+    def sample(self, rng: random.Random) -> Any:
+        raise NotImplementedError
+
+    def example(self, rng: random.Random, i: int = 0) -> Any:
+        e = self.edges()
+        return e[i] if i < len(e) else self.sample(rng)
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = lo, hi
+
+    def edges(self):
+        return [self.lo, self.hi] if self.hi != self.lo else [self.lo]
+
+    def sample(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, lo: float, hi: float):
+        self.lo, self.hi = lo, hi
+
+    def edges(self):
+        return [self.lo, self.hi]
+
+    def sample(self, rng):
+        return rng.uniform(self.lo, self.hi)
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements: Sequence[Any]):
+        self.elements = list(elements)
+
+    def edges(self):
+        return self.elements[:2]
+
+    def sample(self, rng):
+        return rng.choice(self.elements)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elem: SearchStrategy, min_size: int = 0,
+                 max_size: Optional[int] = None):
+        self.elem, self.min_size = elem, min_size
+        self.max_size = max_size if max_size is not None else min_size + 8
+
+    def edges(self):
+        if self.min_size == 0:
+            return [[]]
+        return []
+
+    def sample(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elem.example(rng, i=2 + rng.randint(0, 10))
+                for _ in range(n)]
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, *elems: SearchStrategy):
+        self.elems = elems
+
+    def sample(self, rng):
+        return tuple(e.example(rng, i=2 + rng.randint(0, 10))
+                     for e in self.elems)
+
+
+_ALPHABET = ("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789"
+             " \t\n.,;:!?-_()[]{}'\"@#$%&*+=/\\|<>~`^"
+             "äöüßéèêñçαβγδΩπ☃€→中日한🦜🎉")
+
+
+class _Text(SearchStrategy):
+    def __init__(self, max_size: int = 32):
+        self.max_size = max_size
+
+    def edges(self):
+        return ["", "\x00", _ALPHABET[-8:]]
+
+    def sample(self, rng):
+        n = rng.randint(0, self.max_size)
+        return "".join(rng.choice(_ALPHABET) for _ in range(n))
+
+
+class _Strategies:
+    """The ``strategies as st`` namespace."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> SearchStrategy:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> SearchStrategy:
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+        return _SampledFrom(elements)
+
+    @staticmethod
+    def lists(elem: SearchStrategy, *, min_size: int = 0,
+              max_size: Optional[int] = None) -> SearchStrategy:
+        return _Lists(elem, min_size, max_size)
+
+    @staticmethod
+    def tuples(*elems: SearchStrategy) -> SearchStrategy:
+        return _Tuples(*elems)
+
+    @staticmethod
+    def text(*, max_size: int = 32) -> SearchStrategy:
+        return _Text(max_size)
+
+
+strategies = _Strategies()
+
+
+# -------------------------------------------------------------------- settings
+
+
+_PROFILES: Dict[str, dict] = {"default": {"max_examples": 25}}
+_ACTIVE: dict = dict(_PROFILES["default"])
+
+
+class settings:
+    """Decorator + profile registry (the subset the suite touches)."""
+
+    def __init__(self, max_examples: Optional[int] = None, deadline=None,
+                 **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn: Callable) -> Callable:
+        fn._propcheck_settings = {"max_examples": self.max_examples}
+        return fn
+
+    @staticmethod
+    def register_profile(name: str, *, max_examples: int = 25,
+                         deadline=None, **_ignored) -> None:
+        _PROFILES[name] = {"max_examples": max_examples}
+
+    @staticmethod
+    def load_profile(name: str) -> None:
+        _ACTIVE.clear()
+        _ACTIVE.update(_PROFILES[name])
+
+
+# ----------------------------------------------------------------------- given
+
+
+def given(*arg_strats: SearchStrategy, **kw_strats: SearchStrategy):
+    """Run the test once per generated example (boundaries first)."""
+
+    def deco(fn: Callable) -> Callable:
+        n_override = getattr(fn, "_propcheck_settings", {}).get("max_examples")
+
+        @functools.wraps(fn)
+        def wrapper(*outer_args, **outer_kw):
+            n = n_override or _ACTIVE.get("max_examples", 25)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                args = [s.example(rng, i) for s in arg_strats]
+                kw = {k: s.example(rng, i) for k, s in kw_strats.items()}
+                fn(*outer_args, *args, **outer_kw, **kw)
+
+        # hide strategy-bound params from pytest's fixture resolution: the
+        # wrapper's visible signature keeps only the test's real fixtures.
+        # Positional strategies bind to the RIGHTMOST parameters (hypothesis
+        # semantics — fixtures come first), so drop from the right.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        if arg_strats:
+            params = params[:-len(arg_strats)]
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for p in params if p.name not in kw_strats])
+        del wrapper.__wrapped__  # pytest would re-inspect the original
+        return wrapper
+
+    return deco

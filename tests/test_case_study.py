@@ -5,8 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.data.synthetic import (A_TOK, PAD_TOK, Q_TOK, SEP_TOK, World,
-                                  WorldSpec)
+from repro.data.synthetic import A_TOK, Q_TOK, World, WorldSpec
 
 
 @pytest.fixture(scope="module")

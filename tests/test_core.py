@@ -31,6 +31,7 @@ def system(zoo):
 # --------------------------------------------------------------------- fusers
 
 
+@pytest.mark.slow
 def test_fuser_heterogeneous_dims(system, zoo):
     """Fusers bridge models with different layer counts / kv dims / head counts."""
     rx = zoo[0]
@@ -65,6 +66,7 @@ def test_inapplicable_for_ssm():
         F.make_alignment(qwen, mamba)
 
 
+@pytest.mark.slow
 def test_closed_gate_is_standalone(system, zoo):
     rx, tx = zoo[0], zoo[1]
     prompt = jax.random.randint(KEY, (2, 10), 8, rx.cfg.vocab_size)
@@ -121,6 +123,7 @@ def test_multi_transmitter_concat_order(system, zoo):
     assert fused["k"].shape[-2] == 10  # seq-wise concatenation (Eq. 4)
 
 
+@pytest.mark.slow
 def test_bidirectional_roles(system, zoo):
     a, b = zoo[1], zoo[2]
     B, S = 1, 6

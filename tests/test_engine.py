@@ -1,0 +1,281 @@
+"""Continuous-batching engine (launch/engine.py): slot lifecycle, mid-flight
+joins, mixed standalone+C2C batches, and the one-trace compilation guarantee."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.configs.case_study import tiny_zoo
+from repro.core import fuser as F
+from repro.launch.engine import ContinuousBatchingEngine
+from repro.models import transformer as T
+from repro.models.cache import (attn_kv_stack, cache_evict_slot,
+                                cache_insert_slot, empty_fused_stack,
+                                extra_kv_layers, init_slot_cache,
+                                pad_fused_stack, PREFIX_MASK_BIAS)
+
+VOCAB = 64
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return ModelConfig(name="eng-tiny", family="dense", num_layers=2,
+                       d_model=32, num_heads=2, num_kv_heads=1, head_dim=16,
+                       d_ff=64, vocab_size=VOCAB, tie_embeddings=True)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+
+
+def _prompt(key, n):
+    return jax.random.randint(key, (1, n), 0, VOCAB)
+
+
+def _solo(cfg, params, prompt, steps, max_seq, fused=None):
+    """Reference greedy run on the plain (scalar-pos) decode path."""
+    ek = extra_kv_layers(cfg, fused) if fused is not None else None
+    logits, cache = T.prefill(cfg, params, prompt, max_seq=max_seq,
+                              cache_dtype=jnp.float32, extra_kv=ek)
+    tok = jnp.argmax(logits[:, prompt.shape[1] - 1], -1)
+    out = [tok]
+    for _ in range(steps - 1):
+        lg, cache = T.decode_step(cfg, params, cache, tok, extra_kv=ek)
+        tok = jnp.argmax(lg, -1)
+        out.append(tok)
+    return np.asarray(jnp.stack(out, 1)[0])
+
+
+# ------------------------------------------------------------- slot lifecycle
+
+
+def test_slot_admission_eviction_reuse(cfg, params):
+    """More requests than slots: slots are freed on completion and reused, and
+    every request still matches its solo reference."""
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2, max_seq=48)
+    key = jax.random.PRNGKey(1)
+    reqs = [( _prompt(jax.random.fold_in(key, i), 4 + i), 3 + i)
+            for i in range(5)]
+    rids = [eng.submit(p, n) for p, n in reqs]
+    assert eng.num_active == 0 and eng.num_queued == 5
+    done = {c.rid: c.tokens for c in eng.drain()}
+    assert eng.num_active == 0 and eng.num_queued == 0
+    assert eng.stats["admitted"] == 5 and eng.stats["completed"] == 5
+    for rid, (p, n) in zip(rids, reqs):
+        assert np.array_equal(done[rid], _solo(cfg, params, p, n, 48))
+
+
+def test_slot_insert_evict_roundtrip(cfg, params):
+    """cache_insert_slot/evict_slot: inserted slot carries the request's
+    position; evicted slot resets to 0 and hides its stale keys."""
+    table = init_slot_cache(cfg, 3, 32, jnp.float32)
+    p = _prompt(jax.random.PRNGKey(2), 6)
+    _, req = T.prefill(cfg, params, p, max_seq=32, cache_dtype=jnp.float32)
+    table = cache_insert_slot(table, 1, req, 6)
+    assert table["pos"].shape == (3,)
+    assert table["pos"].tolist() == [0, 6, 0]
+    table = cache_evict_slot(table, 1)
+    assert table["pos"].tolist() == [0, 0, 0]
+
+
+def test_completion_at_prefill_never_occupies_slot(cfg, params):
+    """max_new_tokens=1 completes from the prefill logits directly."""
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=1, max_seq=32)
+    p = _prompt(jax.random.PRNGKey(3), 5)
+    rid = eng.submit(p, 1)
+    done = {c.rid: c.tokens for c in eng.drain()}
+    assert np.array_equal(done[rid], _solo(cfg, params, p, 1, 32))
+    assert eng.stats["decode_steps"] == 0
+
+
+# ------------------------------------------------------------ mid-flight joins
+
+
+def test_midflight_join_matches_solo(cfg, params):
+    """A request admitted while others are mid-decode produces exactly the
+    tokens of a solo run (slot isolation)."""
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=3, max_seq=48)
+    key = jax.random.PRNGKey(4)
+    p1, p2, p3 = (_prompt(jax.random.fold_in(key, i), n)
+                  for i, n in enumerate((7, 5, 9)))
+    r1 = eng.submit(p1, 10)
+    for _ in range(3):
+        eng.step()
+    r2 = eng.submit(p2, 6)   # joins while r1 is mid-decode
+    r3 = eng.submit(p3, 8)
+    done = {c.rid: c.tokens for c in eng.drain()}
+    assert np.array_equal(done[r1], _solo(cfg, params, p1, 10, 48))
+    assert np.array_equal(done[r2], _solo(cfg, params, p2, 6, 48))
+    assert np.array_equal(done[r3], _solo(cfg, params, p3, 8, 48))
+
+
+# ----------------------------------------------------------------- mixed batch
+
+
+def _tiny_c2c():
+    zoo = tiny_zoo(vocab_size=VOCAB)
+    rx, tx = zoo["receiver"], zoo["transmitters"][0]
+    key = jax.random.PRNGKey(5)
+    p_rx = T.init_params(rx, key, jnp.float32)
+    p_tx = T.init_params(tx, jax.random.fold_in(key, 1), jnp.float32)
+    fz = F.init_fuser(tx, rx, jax.random.fold_in(key, 2))
+    return rx, p_rx, tx, p_tx, fz
+
+
+def test_mixed_standalone_c2c_batch():
+    """Standalone and C2C-fused requests share one slot table; each matches
+    its own solo reference, and the fixed-bucket prefix mask is exact."""
+    rx, p_rx, tx, p_tx, fz = _tiny_c2c()
+    key = jax.random.PRNGKey(6)
+    pa = _prompt(key, 6)
+    pb = _prompt(jax.random.fold_in(key, 1), 5)
+    S = pa.shape[1]
+    _, txc = T.prefill(tx, p_tx, pa, max_seq=S, cache_dtype=jnp.float32)
+    fused = F.project_cache(fz, tx, rx, attn_kv_stack(tx, txc, length=S))
+
+    eng = ContinuousBatchingEngine(rx, p_rx, max_slots=2, max_seq=40,
+                                   max_prefix=8)
+    ra = eng.submit(pa, 7, fused=fused)
+    rb = eng.submit(pb, 7)
+    done = {c.rid: c for c in eng.drain()}
+    assert done[ra].protocol == "c2c" and done[rb].protocol == "standalone"
+    # unpadded reference == engine (prefix padded to the bucket): mask exact
+    assert np.array_equal(done[ra].tokens, _solo(rx, p_rx, pa, 7, 40, fused))
+    assert np.array_equal(done[rb].tokens, _solo(rx, p_rx, pb, 7, 40))
+
+
+def test_padded_prefix_mask_is_exact():
+    """pad_fused_stack / empty_fused_stack: masked positions carry zero
+    attention mass, so a padded prefix equals the unpadded one and an empty
+    prefix equals no prefix."""
+    rx, p_rx, tx, p_tx, fz = _tiny_c2c()
+    p = _prompt(jax.random.PRNGKey(7), 6)
+    _, txc = T.prefill(tx, p_tx, p, max_seq=6, cache_dtype=jnp.float32)
+    fused = F.project_cache(fz, tx, rx, attn_kv_stack(tx, txc, length=6))
+    padded = pad_fused_stack(fused, 11)
+    assert padded["k"].shape[-2] == 11
+    assert float(padded["bias"][..., -1].max()) == float(
+        jnp.float32(PREFIX_MASK_BIAS))
+    assert np.array_equal(_solo(rx, p_rx, p, 5, 32, fused),
+                          _solo(rx, p_rx, p, 5, 32, padded))
+    empty = empty_fused_stack(rx, 1, 4, jnp.float32)
+    assert np.array_equal(_solo(rx, p_rx, p, 5, 32),
+                          _solo(rx, p_rx, p, 5, 32, empty))
+
+
+# ------------------------------------------------------------ recompile count
+
+
+def test_decode_jits_exactly_once_across_mixes():
+    """The decode step traces once, no matter how the request mix changes
+    (standalone-only -> fused-only -> mixed, different prefix lengths)."""
+    rx, p_rx, tx, p_tx, fz = _tiny_c2c()
+    key = jax.random.PRNGKey(8)
+    eng = ContinuousBatchingEngine(rx, p_rx, max_slots=2, max_seq=40,
+                                   max_prefix=8, prompt_bucket=8)
+
+    def fused_for(p):
+        S = p.shape[1]
+        _, c = T.prefill(tx, p_tx, p, max_seq=S, cache_dtype=jnp.float32)
+        return F.project_cache(fz, tx, rx, attn_kv_stack(tx, c, length=S))
+
+    # wave 1: standalone only
+    eng.submit(_prompt(key, 5), 4)
+    eng.drain()
+    # wave 2: fused only, prefix length 6
+    p = _prompt(jax.random.fold_in(key, 1), 6)
+    eng.submit(p, 4, fused=fused_for(p))
+    eng.drain()
+    # wave 3: mixed, different prefix length (3) and prompt lengths
+    q = _prompt(jax.random.fold_in(key, 2), 3)
+    eng.submit(q, 4, fused=fused_for(q))
+    eng.submit(_prompt(jax.random.fold_in(key, 3), 7), 4)
+    eng.drain()
+
+    assert eng.stats["decode_steps"] > 0
+    assert eng.stats["decode_traces"] == 1, (
+        "decode step re-traced as the request mix changed")
+    # bucketed prompts: one prefill trace covers every wave too
+    assert eng.stats["prefill_traces"] == 1
+
+
+# ------------------------------------------------------- fedrefine submit/drain
+
+
+def test_fedrefine_submit_drain_mixed_protocols():
+    """FedRefineSystem.submit()/drain(): standalone, C2C and T2T requests
+    coexist in one engine; explicit protocols without transmitters raise."""
+    from repro.core.fedrefine import FedRefineSystem, Participant
+
+    zoo = tiny_zoo(vocab_size=VOCAB)
+    key = jax.random.PRNGKey(10)
+    members = [Participant(c.name, c, T.init_params(c, jax.random.fold_in(key, i),
+                                                    jnp.float32))
+               for i, c in enumerate([zoo["receiver"], zoo["transmitters"][0]])]
+    system = FedRefineSystem.build(members)
+    rx = members[0].name
+    system.make_engine(rx, max_slots=3, max_seq=64, max_prefix=8)
+    p = _prompt(key, 5)
+    r_solo = system.submit(rx, p, 3, protocol="standalone")
+    r_c2c = system.submit(rx, p, 3, protocol="c2c")
+    r_t2t = system.submit(rx, p, 3, protocol="t2t")
+    out = system.drain(rx)
+    assert out[r_solo]["protocol"] == "standalone"
+    assert out[r_c2c]["protocol"] == "c2c"
+    assert out[r_t2t]["protocol"] == "t2t"
+    assert all(len(out[r]["tokens"]) == 3 for r in (r_solo, r_c2c, r_t2t))
+    assert out[r_c2c]["transmitters"] == [members[1].name]
+    assert system.engines[rx].stats["decode_traces"] == 1
+
+    # a receiver-only system cannot satisfy an explicit c2c request
+    lone = FedRefineSystem.build(members[:1])
+    lone.make_engine(rx, max_slots=1, max_seq=32, max_prefix=4)
+    with pytest.raises(ValueError, match="no transmitter"):
+        lone.submit(rx, p, 2, protocol="c2c")
+
+
+# ----------------------------------------------------- other block families
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma_9b", "mamba2_130m"])
+def test_engine_stateful_families(arch):
+    """Per-slot decode through swa ring buffers (RecurrentGemma) and
+    recurrent/SSD states (Mamba-2): mid-flight joins still match solo runs.
+    Stateful families use exact-length prefill (no prompt bucketing)."""
+    from repro.configs.base import get_smoke_config
+
+    cfg = get_smoke_config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2, max_seq=32,
+                                   prompt_bucket=8)
+    assert eng.prompt_bucket is None  # stateful: bucketing must be refused
+    key = jax.random.PRNGKey(1)
+    p1 = jax.random.randint(key, (1, 6), 0, cfg.vocab_size)
+    p2 = jax.random.randint(jax.random.fold_in(key, 1), (1, 4), 0,
+                            cfg.vocab_size)
+    r1 = eng.submit(p1, 6)
+    eng.step()
+    r2 = eng.submit(p2, 4)  # joins mid-decode
+    done = {c.rid: c.tokens for c in eng.drain()}
+    assert np.array_equal(done[r1], _solo(cfg, params, p1, 6, 32))
+    assert np.array_equal(done[r2], _solo(cfg, params, p2, 4, 32))
+    assert eng.stats["decode_traces"] == 1
+
+
+# ------------------------------------------------------------- per-slot decode
+
+
+def test_per_slot_positions_decode_parity(cfg, params):
+    """Vector-pos decode_step == scalar-pos decode_step when all slots happen
+    to sit at the same position (the refactor preserves the lockstep path)."""
+    B, S = 2, 6
+    toks = jax.random.randint(jax.random.PRNGKey(9), (B, S + 1), 0, VOCAB)
+    _, cache = T.prefill(cfg, params, toks[:, :S], max_seq=S + 2,
+                         cache_dtype=jnp.float32)
+    lg_scalar, _ = T.decode_step(cfg, params, cache, toks[:, S])
+    vec_cache = dict(cache, pos=jnp.full((B,), cache["pos"], jnp.int32))
+    lg_vec, new_cache = T.decode_step(cfg, params, vec_cache, toks[:, S])
+    assert float(jnp.abs(lg_scalar - lg_vec).max()) < 1e-5
+    assert new_cache["pos"].tolist() == [S + 1] * B

@@ -22,6 +22,7 @@ def system():
     return FedRefineSystem.build(members)
 
 
+@pytest.mark.slow
 def test_iterative_c2c_rounds(system):
     names = list(system.participants)
     rx = system.participants[names[0]]
@@ -38,6 +39,7 @@ def test_iterative_c2c_rounds(system):
     assert out["rounds"][0].shape == out["rounds"][1].shape
 
 
+@pytest.mark.slow
 def test_self_refine_with_c2c(system):
     names = list(system.participants)
     rx = system.participants[names[0]]
@@ -51,6 +53,7 @@ def test_self_refine_with_c2c(system):
     (400e9, "c2c"),        # ICI-class link: ship the caches
     (1.0, "standalone"),   # dead link: even 24 B of tokens misses the budget
 ])
+@pytest.mark.slow
 def test_serve_opportunistic_executes_choice(system, bw, expected):
     names = list(system.participants)
     prompt = jax.random.randint(KEY, (1, 8), 8, 200)

@@ -94,7 +94,7 @@ def test_collective_parser_on_real_snippet():
 
 
 def test_report_tables(tmp_path, monkeypatch):
-    import json, os
+    import json
     from repro.launch import report
     d = tmp_path / "dryrun"
     d.mkdir()

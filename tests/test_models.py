@@ -30,6 +30,7 @@ def test_forward_smoke(arch, key):
         assert float(aux) > 0  # load-balance loss is live
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_train_step_smoke(arch, key):
     from repro.launch.train import make_train_step
@@ -70,6 +71,7 @@ def test_decode_matches_teacher_forced(arch, key):
     assert max(errs) < 2e-3, f"{arch}: decode diverges from teacher-forced {errs}"
 
 
+@pytest.mark.slow
 def test_unroll_matches_scan(key):
     cfg = get_smoke_config("recurrentgemma-9b")  # pattern cycles + tail
     cfg = cfg.with_overrides(num_layers=3)
@@ -80,6 +82,7 @@ def test_unroll_matches_scan(key):
     assert float(jnp.abs(a - b).max()) < 1e-4
 
 
+@pytest.mark.slow
 def test_sliding_window_ring_buffer_wraps(key):
     cfg = get_smoke_config("recurrentgemma-9b").with_overrides(sliding_window=8)
     params = T.init_params(cfg, key, jnp.float32)

@@ -1,7 +1,6 @@
 """int8 cache-communication quantisation (beyond-paper; core/quant.py)."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.configs.base import get_config
 from repro.core import quant

@@ -11,9 +11,8 @@ import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ARCH_IDS, get_config, get_smoke_config
 from repro.launch import sharding as SH
@@ -97,6 +96,7 @@ def test_opt_specs_add_zero1_data_axis():
     assert n_data / len(flat) > 0.9  # nearly every master leaf is ZeRO-sharded
 
 
+@pytest.mark.slow
 def test_train_step_runs_under_host_mesh(key):
     """The exact sharded train path executes on a 1×1 mesh (CPU)."""
     from repro.launch.mesh import make_host_mesh
@@ -119,6 +119,7 @@ def test_train_step_runs_under_host_mesh(key):
     assert bool(jnp.isfinite(loss))
 
 
+@pytest.mark.slow
 def test_dryrun_cli_one_pair(tmp_path):
     """The dry-run CLI end-to-end on the cheapest pair (subprocess because it
     forces 512 host devices)."""

@@ -21,6 +21,7 @@ def pair():
     return cfg_a, pa, cfg_b, pb
 
 
+@pytest.mark.slow
 def test_state_fusion_decode(pair):
     cfg_a, pa, cfg_b, pb = pair
     prompt = jax.random.randint(KEY, (2, 16), 0, cfg_a.vocab_size)
@@ -34,6 +35,7 @@ def test_state_fusion_decode(pair):
     assert bool(jnp.isfinite(lg).all())
 
 
+@pytest.mark.slow
 def test_closed_gate_is_identity(pair):
     cfg_a, pa, cfg_b, pb = pair
     prompt = jax.random.randint(KEY, (2, 16), 0, cfg_a.vocab_size)

@@ -142,6 +142,7 @@ def test_pipeline_placement():
     assert len(list(it)) == 3
 
 
+@pytest.mark.slow
 def test_model_rephrase_paper_mechanism(key):
     """The paper's own rephrasing mechanism (receiver model rewrites the query)
     produces vocabulary-valid, temperature-sampled rewrites."""
