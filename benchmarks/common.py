@@ -22,8 +22,8 @@ from repro.core.fedrefine import FedRefineSystem, Participant
 from repro.core.fuser_training import train_fuser
 from repro.data.synthetic import World, WorldSpec, lm_stream
 from repro.launch.train import train_loop
+from repro.models.cache import FusedPrefix
 from repro.models import transformer as T
-from repro.models.cache import attn_kv_stack
 
 CKPT = os.path.join(os.path.dirname(__file__), "..", "experiments", "case_study")
 
@@ -143,18 +143,14 @@ def train_gating(world, system, receiver, transmitters, *, steps=250, lr=2e-3):
                                  tx_toks[i], max_seq=tx_toks.shape[-1],
                                  cache_dtype=jnp.float32)
             st = jax.lax.stop_gradient(
-                attn_kv_stack(cfg, cache, length=tx_toks.shape[-1]))
+                cache.export_stack(cfg, length=tx_toks.shape[-1]))
             projected.append(F.project_cache(fz, cfg, rx.cfg, st))
         gated = apply_gates(gating, projected)
         # transmitter-subset dropout: every federation size is in-distribution
         # (evaluating n < N transmitters otherwise degrades — pilot-5 lesson)
-        gated = [dict(p, bias=p["bias"] + jnp.log(mask[i]))
+        gated = [p.with_bias(p.bias + jnp.log(mask[i]))
                  for i, p in enumerate(gated)]
-        fused = {
-            "k": jnp.concatenate([p["k"] for p in gated], axis=-2),
-            "v": jnp.concatenate([p["v"] for p in gated], axis=-2),
-            "bias": jnp.concatenate([p["bias"] for p in gated], axis=-1),
-        }
+        fused = FusedPrefix.concat(gated)
         logits, _ = c2c.c2c_forward(rx.cfg, jax.lax.stop_gradient(rx.params),
                                     rx_toks, fused)
         logits = logits.astype(jnp.float32)
@@ -230,7 +226,7 @@ def answer_accuracy_c2c(cs, tx_names, rng, n=EVAL_N, *, rephrased=True,
         S = tp.shape[1]
         _, cache = T.prefill(tx.cfg, tx.params, tp, max_seq=S,
                              cache_dtype=jnp.float32)
-        stacks.append(attn_kv_stack(tx.cfg, cache, length=S))
+        stacks.append(cache.export_stack(tx.cfg, length=S))
         fusers.append(system.registry.get(name, rx.name))
         cfgs.append(tx.cfg)
     rx_prompts = (system.channel.rephrase(prompts, jax.random.fold_in(key, 99))

@@ -1,4 +1,5 @@
-"""Continuous-batching engine vs lockstep BatchedServer under Poisson traffic.
+"""Continuous-batching engine vs lockstep BatchedServer under Poisson traffic,
+plus the paged-vs-dense slot-capacity comparison.
 
 Simulates the serving regime the federation targets: requests with mixed
 protocols (standalone + C2C-fused) arriving at staggered (Poisson) times.
@@ -13,9 +14,20 @@ protocols (standalone + C2C-fused) arriving at staggered (Poisson) times.
 Both run on the same wall-clock timeline (arrivals are real waits); reported
 are sustained tokens/s and request-latency p50/p99.
 
-Run:  PYTHONPATH=src python benchmarks/engine_bench.py [--smoke]
+The **capacity section** pits the paged slot table (models/cache.SlotTable)
+against the dense reference at EQUAL KV HBM budget: the paged engine gets a
+page pool of exactly the dense table's byte size but twice the slots, and a
+burst of short requests must (a) decode byte-identically to the dense engine
+and (b) sustain ≥2× the dense engine's concurrent slots — the win paging buys
+when requests are shorter than max_seq.
+
+Results are also written as JSON (``--json BENCH_engine.json``; CI uploads it
+as an artifact on main so the bench trajectory accumulates).
+
+Run:  PYTHONPATH=src python benchmarks/engine_bench.py [--smoke] [--json PATH]
 """
 import argparse
+import json
 import os
 import sys
 import time
@@ -32,7 +44,6 @@ from repro.core import c2c, fuser as F
 from repro.launch.engine import ContinuousBatchingEngine
 from repro.launch.serve import BatchedServer
 from repro.models import transformer as T
-from repro.models.cache import attn_kv_stack
 
 
 def build_world(vocab: int = 64):
@@ -69,7 +80,7 @@ def make_tx_fused(tx, p_tx, fz, rx):
         S = prompts.shape[1]
         _, cache = T.prefill(tx, p_tx, prompts, max_seq=S,
                              cache_dtype=jnp.float32)
-        stack = attn_kv_stack(tx, cache, length=S)
+        stack = cache.export_stack(tx, length=S)
         return c2c.fused_prefix([fz], [tx], rx, [stack])
 
     return fused
@@ -154,6 +165,63 @@ def run_lockstep(rx, p_rx, tx, p_tx, fz, reqs, gen, *, max_batch, max_seq):
     return {"tokens_per_s": toks / span, "latency": lat}
 
 
+# ------------------------------------------------------- paged-vs-dense
+
+
+def run_capacity(rx, p_rx, *, dense_slots, max_seq, page_size, prompt_len,
+                 gen, n_requests, vocab):
+    """Equal-HBM capacity comparison: dense table (dense_slots × max_seq rows)
+    vs a paged pool of exactly the same byte size serving 2× the slots.
+
+    Returns the per-section dict for the JSON report; the byte-identity
+    verdict is returned as ``byte_identical_outputs`` (the paged table must
+    be a pure layout change, never a numerics change — main() turns a False
+    into a failing exit code). Only the equal-budget precondition asserts."""
+    key = jax.random.PRNGKey(11)
+    prompts = [jax.random.randint(jax.random.fold_in(key, i),
+                                  (1, prompt_len), 0, vocab)
+               for i in range(n_requests)]
+
+    dense = ContinuousBatchingEngine(rx, p_rx, max_slots=dense_slots,
+                                     max_seq=max_seq)
+    pages_per_slot = max_seq // page_size
+    paged = ContinuousBatchingEngine(
+        rx, p_rx, max_slots=2 * dense_slots, max_seq=max_seq, paged=True,
+        page_size=page_size, num_pages=dense_slots * pages_per_slot)
+    assert paged.kv_table_bytes <= dense.kv_table_bytes, (
+        paged.kv_table_bytes, dense.kv_table_bytes)
+
+    outs = {}
+    for name, eng in (("dense", dense), ("paged", paged)):
+        rids = [eng.submit(p, gen) for p in prompts]  # burst: all at once
+        t0 = time.perf_counter()
+        done = {c.rid: c.tokens for c in eng.drain()}
+        dt = time.perf_counter() - t0
+        outs[name] = {
+            "tokens": [done[r] for r in rids],
+            "max_slots": eng.max_slots,
+            "peak_active": eng.stats["peak_active"],
+            "kv_table_bytes": eng.kv_table_bytes,
+            "tokens_per_s": n_requests * gen / dt,
+            "decode_traces": eng.stats["decode_traces"],
+        }
+
+    identical = all(
+        np.array_equal(a, b)
+        for a, b in zip(outs["dense"]["tokens"], outs["paged"]["tokens"]))
+    section = {
+        k: {kk: vv for kk, vv in v.items() if kk != "tokens"}
+        for k, v in outs.items()
+    }
+    section["byte_identical_outputs"] = bool(identical)
+    section["capacity_ratio"] = (outs["paged"]["peak_active"]
+                                 / max(outs["dense"]["peak_active"], 1))
+    section["page_size"] = page_size
+    section["request_tokens"] = prompt_len + gen
+    section["max_seq"] = max_seq
+    return section
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -165,6 +233,8 @@ def main() -> int:
     ap.add_argument("--rate", type=float, default=8.0,
                     help="Poisson arrival rate (req/s)")
     ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--json", type=str, default="BENCH_engine.json",
+                    help="write results JSON here ('' disables)")
     args = ap.parse_args()
     if args.smoke:
         args.requests, args.gen, args.slots = 10, 8, 4
@@ -194,6 +264,25 @@ def main() -> int:
           f"{lp50:>10.3f}{lp99:>10.3f}")
     print(f"engine stats: {eng['stats']}")
 
+    # --- paged-vs-dense capacity at equal HBM (short requests, long rows) ---
+    cap_seq = 128  # dense row length; requests use ~1/4 of it
+    dense_slots = max(2, args.slots // 2)
+    cap = run_capacity(rx, p_rx, dense_slots=dense_slots, max_seq=cap_seq,
+                       page_size=16, prompt_len=args.prompt_len,
+                       gen=args.gen, n_requests=4 * dense_slots, vocab=vocab)
+    print(f"\npaged-vs-dense capacity at equal KV HBM "
+          f"({cap['dense']['kv_table_bytes'] / 1e6:.1f} MB pool, "
+          f"requests of {cap['request_tokens']} tok in max_seq={cap_seq}):")
+    print(f"{'':22s}{'slots':>8s}{'peak act':>10s}{'tok/s':>10s}{'KV MB':>8s}")
+    for name in ("dense", "paged"):
+        r = cap[name]
+        print(f"{name:22s}{r['max_slots']:>8d}{r['peak_active']:>10d}"
+              f"{r['tokens_per_s']:>10.1f}"
+              f"{r['kv_table_bytes'] / 1e6:>8.1f}")
+    print(f"capacity ratio (paged/dense peak slots): "
+          f"{cap['capacity_ratio']:.2f}×; byte-identical outputs: "
+          f"{cap['byte_identical_outputs']}")
+
     ok = True
     if eng["stats"]["decode_traces"] != 1:
         print("FAIL: decode step traced more than once across the mix")
@@ -204,6 +293,34 @@ def main() -> int:
     if eng["tokens_per_s"] < margin * lck["tokens_per_s"]:
         print("FAIL: engine slower than lockstep baseline")
         ok = False
+    if not cap["byte_identical_outputs"]:
+        print("FAIL: paged decode outputs differ from dense reference")
+        ok = False
+    if cap["capacity_ratio"] < 2.0:
+        print("FAIL: paged table sustained < 2x dense concurrent slots")
+        ok = False
+
+    if args.json:
+        report = {
+            "bench": "engine",
+            "config": {"requests": args.requests,
+                       "prompt_len": args.prompt_len, "gen": args.gen,
+                       "rate": args.rate, "slots": args.slots,
+                       "smoke": bool(args.smoke)},
+            "throughput": {
+                "engine_tokens_per_s": eng["tokens_per_s"],
+                "engine_p50_s": ep50, "engine_p99_s": ep99,
+                "lockstep_tokens_per_s": lck["tokens_per_s"],
+                "lockstep_p50_s": lp50, "lockstep_p99_s": lp99,
+                "engine_stats": eng["stats"],
+            },
+            "capacity": cap,
+            "pass": ok,
+        }
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+
     print("PASS" if ok else "FAIL")
     return 0 if ok else 1
 

@@ -10,7 +10,6 @@ import numpy as np
 from benchmarks.common import build_case_study
 from repro.core import c2c
 from repro.models import transformer as T
-from repro.models.cache import attn_kv_stack
 
 
 def _acc_domain(cs, tx_name, domain, n=96):
@@ -21,7 +20,7 @@ def _acc_domain(cs, tx_name, domain, n=96):
     tx = system.participants[tx_name]
     _, cache = T.prefill(tx.cfg, tx.params, prompts, max_seq=prompts.shape[1],
                          cache_dtype=jnp.float32)
-    stack = attn_kv_stack(tx.cfg, cache, length=prompts.shape[1])
+    stack = cache.export_stack(tx.cfg, length=prompts.shape[1])
     fz = system.registry.get(tx_name, rx.name)
     fused = c2c.fused_prefix([fz], [tx.cfg], rx.cfg, [stack])
     logits, _ = c2c.c2c_forward(rx.cfg, rx.params, prompts, fused)

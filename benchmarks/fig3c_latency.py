@@ -20,7 +20,6 @@ from benchmarks.common import build_case_study
 from repro.configs.case_study import ZOO
 from repro.core import c2c, protocol
 from repro.models import transformer as T
-from repro.models.cache import attn_kv_stack
 
 
 def _timed(fn, *args, repeat=3):
@@ -44,7 +43,7 @@ def run_measured(gen_steps: int = 8) -> dict:
 
     def c2c_pipeline(p):
         _, cache = T.prefill(tx.cfg, tx.params, p, max_seq=S, cache_dtype=jnp.float32)
-        stack = attn_kv_stack(tx.cfg, cache, length=S)
+        stack = cache.export_stack(tx.cfg, length=S)
         fused = c2c.fused_prefix([fz], [tx.cfg], rx.cfg, [stack])
         return c2c.generate(rx.cfg, rx.params, p, gen_steps, fused=fused)
 

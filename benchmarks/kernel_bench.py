@@ -48,7 +48,7 @@ def run() -> list:
     # int8-KV decode (quantised C2C serving path)
     from repro.core import quant
     qs = quant.quantize_stack({"k": k[None], "v": v[None]})
-    qstack = {kk: vv[0] for kk, vv in qs.items()}
+    qstack = {kk: qs[kk][0] for kk in ("k_q", "v_q", "k_scale", "v_scale")}
     rows.append(("decode_attn_q8_pallas_interp",
                  _timed(lambda: ops.decode_attention_q8(q, qstack, bias))))
     # banded SWA prefill vs dense-masked reference at window << S

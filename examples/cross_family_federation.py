@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from repro.configs.base import get_smoke_config
 from repro.core import c2c, fuser as F, state_fuser as SF
 from repro.models import transformer as T
-from repro.models.cache import attn_kv_stack
+from repro.models.cache import FusedPrefix
 
 key = jax.random.PRNGKey(0)
 tx_cfg = get_smoke_config("qwen2.5-32b")  # dense transmitter
@@ -25,8 +25,8 @@ params_tx = T.init_params(tx_cfg, key, jnp.float32)
 prompt = jax.random.randint(key, (1, 12), 8, 256)
 _, tx_cache = T.prefill(tx_cfg, params_tx, prompt, max_seq=12,
                         cache_dtype=jnp.float32)
-tx_stack = attn_kv_stack(tx_cfg, tx_cache, length=12)
-print(f"transmitter: {tx_cfg.name} — exported KV stack {tx_stack['k'].shape}")
+tx_stack = tx_cache.export_stack(tx_cfg, length=12)
+print(f"transmitter: {tx_cfg.name} — exported KV stack {tx_stack.k.shape}")
 
 for rx_arch in ("qwen3-moe-30b-a3b", "recurrentgemma-9b", "qwen2-vl-72b"):
     rx_cfg = get_smoke_config(rx_arch)
@@ -38,10 +38,8 @@ for rx_arch in ("qwen3-moe-30b-a3b", "recurrentgemma-9b", "qwen2-vl-72b"):
         from repro.models.frontend import synth_embeddings
         emb = synth_embeddings(rx_cfg, key, 1, 12, jnp.float32)
         logits, _ = T.forward(rx_cfg, params_rx, embeds=emb,
-                              extra_kv=__import__(
-                                  "repro.models.cache",
-                                  fromlist=["extra_kv_layers"]).extra_kv_layers(
-                                      rx_cfg, fused))
+                              extra_kv=FusedPrefix.ensure(fused)
+                              .to_extra_kv(rx_cfg))
         toks = jnp.argmax(logits[:, -1:], -1)
     else:
         toks = c2c.generate(rx_cfg, params_rx, prompt % rx_cfg.vocab_size, 4,

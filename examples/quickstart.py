@@ -14,7 +14,6 @@ from repro.core import c2c, fuser as F
 from repro.core.fuser_training import train_fuser
 from repro.data.synthetic import World, WorldSpec, lm_stream
 from repro.models import transformer as T
-from repro.models.cache import attn_kv_stack
 
 key = jax.random.PRNGKey(0)
 world = World(WorldSpec())
@@ -33,14 +32,14 @@ params_rx = T.init_params(rx_cfg, jax.random.fold_in(key, 1), jnp.float32)
 prompt = jax.random.randint(key, (2, 12), 8, world.spec.vocab_size)
 _, tx_cache = T.prefill(tx_cfg, params_tx, prompt, max_seq=12,
                         cache_dtype=jnp.float32)
-tx_stack = attn_kv_stack(tx_cfg, tx_cache, length=12)
-print(f"\nKV stack communicated: {tx_stack['k'].shape} (k) — "
-      f"{2 * tx_stack['k'].nbytes} bytes")
+tx_stack = tx_cache.export_stack(tx_cfg, length=12)
+print(f"\nKV stack communicated: {tx_stack.k.shape} (k) — "
+      f"{tx_stack.nbytes} bytes")
 
 # --- 2. fuser projects it into receiver space (Eq. 1's C(F_ij, M_i)) -------
 fz = F.init_fuser(tx_cfg, rx_cfg, key)
 fused = F.project_cache(fz, tx_cfg, rx_cfg, tx_stack)
-print(f"fused into receiver space: {fused['k'].shape} (k), "
+print(f"fused into receiver space: {fused.k.shape} (k), "
       f"per-layer gates σ={jax.nn.sigmoid(fz['gate'])[:3]}…")
 
 # --- 3. receiver decodes over [fused ∘ own] ---------------------------------

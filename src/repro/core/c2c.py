@@ -16,18 +16,18 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import fuser as F
 from repro.models import transformer as T
-from repro.models.cache import attn_kv_stack, extra_kv_layers
+from repro.models.cache import FusedPrefix, KVCache
 
 
 def fused_prefix(
     fusers: List[dict],
     cfg_txs: List[ModelConfig],
     cfg_rx: ModelConfig,
-    tx_stacks: List[dict],
+    tx_stacks: List,
     *,
     gating: Optional[dict] = None,
     use_kernel: bool = False,
-) -> dict:
+) -> FusedPrefix:
     """Project every transmitter stack into receiver space and concatenate
     sequence-wise (Eq. 4's C(F_{j1 i}) ∘ … ∘ C(F_{js i}))."""
     from repro.core.gating import apply_gates
@@ -38,35 +38,31 @@ def fused_prefix(
     ]
     if gating is not None:
         projected = apply_gates(gating, projected)
-    return {
-        "k": jnp.concatenate([p["k"] for p in projected], axis=-2),
-        "v": jnp.concatenate([p["v"] for p in projected], axis=-2),
-        "bias": jnp.concatenate([p["bias"] for p in projected], axis=-1),
-    }
+    return FusedPrefix.concat(projected)
 
 
 def c2c_forward(
     cfg_rx: ModelConfig,
     params_rx: dict,
     tokens: jax.Array,
-    fused: dict,  # fused prefix stack (n_rx, B, Hkv, Sf, hd)
+    fused,  # FusedPrefix (n_rx, B, Hkv, Sf, hd)
 ) -> Tuple[jax.Array, jax.Array]:
     """Teacher-forced receiver forward with a fused-cache prefix (fuser training
     and accuracy eval both use this). Returns (logits, aux)."""
     return T.forward(cfg_rx, params_rx, tokens,
-                     extra_kv=extra_kv_layers(cfg_rx, fused))
+                     extra_kv=FusedPrefix.ensure(fused).to_extra_kv(cfg_rx))
 
 
 def c2c_decode_step(
     cfg_rx: ModelConfig,
     params_rx: dict,
-    cache: dict,
+    cache: KVCache,
     token: jax.Array,
-    fused: dict,
-) -> Tuple[jax.Array, dict]:
+    fused,
+) -> Tuple[jax.Array, KVCache]:
     """Eq. 1: one receiver decode step attending over fused ∘ own caches."""
     return T.decode_step(cfg_rx, params_rx, cache, token,
-                         extra_kv=extra_kv_layers(cfg_rx, fused))
+                         extra_kv=FusedPrefix.ensure(fused).to_extra_kv(cfg_rx))
 
 
 def generate(
@@ -75,13 +71,14 @@ def generate(
     prompt: jax.Array,  # (B, S) int32
     steps: int,
     *,
-    fused: Optional[dict] = None,
+    fused=None,
     max_seq: Optional[int] = None,
 ) -> jax.Array:
     """Greedy generation, optionally C2C-refined. Returns (B, steps) tokens."""
     B, S = prompt.shape
     max_seq = max_seq or S + steps
-    ek = extra_kv_layers(cfg, fused) if fused is not None else None
+    ek = (FusedPrefix.ensure(fused).to_extra_kv(cfg)
+          if fused is not None else None)
     logits, cache = T.prefill(cfg, params, prompt, max_seq=max_seq, extra_kv=ek)
     tok = jnp.argmax(logits[:, -1], axis=-1)
     out = [tok]
@@ -93,14 +90,14 @@ def generate(
 
 
 def bidirectional_step(
-    cfg_i: ModelConfig, params_i: dict, cache_i: dict, tok_i: jax.Array,
-    cfg_j: ModelConfig, params_j: dict, cache_j: dict, tok_j: jax.Array,
+    cfg_i: ModelConfig, params_i: dict, cache_i: KVCache, tok_i: jax.Array,
+    cfg_j: ModelConfig, params_j: dict, cache_j: KVCache, tok_j: jax.Array,
     fuser_ij: dict, fuser_ji: dict,
-) -> Tuple[Tuple[jax.Array, dict], Tuple[jax.Array, dict]]:
+) -> Tuple[Tuple[jax.Array, KVCache], Tuple[jax.Array, KVCache]]:
     """Co-C2C (Eq. 2/3): both models decode one token, each refined by the
     other's *current* cache — the dual-role transmitter/receiver step."""
-    stack_i = attn_kv_stack(cfg_i, cache_i)
-    stack_j = attn_kv_stack(cfg_j, cache_j)
+    stack_i = KVCache.ensure(cache_i).export_stack(cfg_i)
+    stack_j = KVCache.ensure(cache_j).export_stack(cfg_j)
     fused_for_j = F.project_cache(fuser_ij, cfg_i, cfg_j, stack_i)
     fused_for_i = F.project_cache(fuser_ji, cfg_j, cfg_i, stack_j)
     out_j = c2c_decode_step(cfg_j, params_j, cache_j, tok_j, fused_for_j)

@@ -4,13 +4,18 @@ for a single token requires 88 KB, whereas T2T requires only 16 bytes").
 These are the byte counts the opportunistic protocol (protocol.py) trades against
 latency, and the quantities the ICI roofline term measures when federation
 participants are mapped onto mesh slices (DESIGN.md §2).
-"""
+
+The *analytic* numbers here are cross-checked against the transport layer's
+measured accounting: ``IdentityChannel.bytes_on_wire`` over a concrete
+:class:`~repro.models.cache.KVStack` must equal :func:`c2c_bytes_total`, and a
+token message must cost :func:`t2t_bytes_per_token` per id
+(tests/test_transport.py pins both)."""
 from __future__ import annotations
 
 from typing import List
 
 from repro.configs.base import ModelConfig
-from repro.models.cache import cache_bytes_per_token
+from repro.models.cache import cache_bytes_per_token, tree_bytes
 
 
 def c2c_bytes_per_token(cfg_tx: ModelConfig, dtype_bytes: int = 2) -> int:
@@ -30,6 +35,12 @@ def t2t_bytes_per_token(token_bytes: int = 4) -> int:
 
 def t2t_bytes_total(n_tx: int, tokens_per_tx: int, token_bytes: int = 4) -> int:
     return n_tx * tokens_per_tx * token_bytes
+
+
+def measured_bytes(obj) -> int:
+    """Measured wire bytes of any message/stack pytree (array-leaf nbytes) —
+    the quantity ``Channel.bytes_on_wire`` reports; see module docstring."""
+    return tree_bytes(obj)
 
 
 def paper_case_study_bytes(dtype_bytes: int = 2) -> dict:

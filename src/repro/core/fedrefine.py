@@ -7,24 +7,32 @@ tasks", §Case Study). One refined inference:
 
   1. privacy: every participant receives its own rephrased prompt,
   2. transmitters prefill locally and export their KV stacks,
-  3. the server (here: receiver-side) projects each stack through F_{j,i},
-  4. gating weighs each fused cache,
-  5. the receiver decodes per Eq. 4 over [fused_1 ∘ … ∘ fused_s ∘ own].
+  3. the stacks cross the federation ``wire`` (core/transport.py channel:
+     identity, int8, or a composed pipeline) — byte-accounted per request,
+  4. the server (here: receiver-side) projects each stack through F_{j,i},
+  5. gating weighs each fused cache,
+  6. the receiver decodes per Eq. 4 over [fused_1 ∘ … ∘ fused_s ∘ own].
+
+Protocol mechanics (how a request becomes engine inputs) live in
+``core/protocol.PROTOCOLS`` — this orchestrator only schedules transmitters,
+owns the participants/registry/wire, and drives the engines.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import c2c
+from repro.core import transport as TR
 from repro.core.privacy import ParaphraseChannel
+from repro.core.protocol import PROTOCOLS
 from repro.core.registry import FuserRegistry
 from repro.models import transformer as T
-from repro.models.cache import attn_kv_stack
+from repro.models.cache import FusedPrefix, KVStack
 
 
 @dataclass
@@ -39,6 +47,9 @@ class FedRefineSystem:
     participants: Dict[str, Participant]
     registry: FuserRegistry
     channel: Optional[ParaphraseChannel] = None
+    # on-the-wire codec for transmitted KV stacks (core/transport.py);
+    # IdentityChannel ships raw bf16/fp32, QuantChannel ships int8+scales.
+    wire: TR.Channel = field(default_factory=TR.IdentityChannel)
     # task -> preferred transmitter names, best first (the case-study prior)
     task_affinity: Dict[str, List[str]] = field(default_factory=dict)
     # receiver name -> continuous-batching engine (see make_engine/submit/drain)
@@ -47,10 +58,12 @@ class FedRefineSystem:
     # ------------------------------------------------------------- setup
     @classmethod
     def build(cls, members: Sequence[Participant],
-              channel: Optional[ParaphraseChannel] = None) -> "FedRefineSystem":
+              channel: Optional[ParaphraseChannel] = None,
+              wire: Optional[TR.Channel] = None) -> "FedRefineSystem":
         reg = FuserRegistry({m.name: m.cfg for m in members})
         reg.ensure_all_pairs()
-        return cls({m.name: m for m in members}, reg, channel)
+        return cls({m.name: m for m in members}, reg, channel,
+                   wire or TR.IdentityChannel())
 
     # ------------------------------------------------------------- scheduling
     def schedule(self, task: str, receiver: str, n_tx: int) -> List[str]:
@@ -68,19 +81,26 @@ class FedRefineSystem:
             return tokens
         return self.channel.rephrase(tokens, key)
 
-    def transmit_stacks(self, tx_names: List[str], prompts: Dict[str, jax.Array]):
-        """Step 2: local prefill at each transmitter; export KV stacks."""
-        stacks = []
+    def transmit_stacks(self, tx_names: List[str],
+                        prompts: Dict[str, jax.Array]
+                        ) -> Tuple[List[KVStack], int]:
+        """Steps 2–3: local prefill at each transmitter; export KV stacks and
+        ship them through the wire channel. Returns (received stacks, total
+        bytes the link carried)."""
+        stacks, wire_bytes = [], 0
         for n in tx_names:
             p = self.participants[n]
             S = prompts[n].shape[1]
             _, cache = T.prefill(p.cfg, p.params, prompts[n], max_seq=S)
-            stacks.append(attn_kv_stack(p.cfg, cache, length=S))
-        return stacks
+            msg = TR.stack_message(cache.export_stack(p.cfg, length=S))
+            received, nbytes = self.wire.transmit(msg)
+            stacks.append(received.stack)
+            wire_bytes += nbytes
+        return stacks, wire_bytes
 
     def fused_prefix(self, receiver: str, tx_names: List[str],
-                     stacks: List[dict], *, gated: bool = True,
-                     use_kernel: bool = False) -> dict:
+                     stacks: List[KVStack], *, gated: bool = True,
+                     use_kernel: bool = False) -> FusedPrefix:
         rxp = self.participants[receiver]
         fusers = [self.registry.get(n, receiver) for n in tx_names]
         cfg_txs = [self.participants[n].cfg for n in tx_names]
@@ -103,36 +123,29 @@ class FedRefineSystem:
         """Full FedRefine inference (Eq. 4). Returns tokens + diagnostics."""
         key = key if key is not None else jax.random.PRNGKey(0)
         tx_names = self.schedule(task, receiver, n_tx)
-        if tx_prompts is None:
-            tx_prompts = {
-                n: self.rephrase(prompt, jax.random.fold_in(key, i))
-                for i, n in enumerate(tx_names)
-            }
-        stacks = self.transmit_stacks(tx_names, tx_prompts)
         rxp = self.participants[receiver]
-        if tx_names:
-            fused = self.fused_prefix(receiver, tx_names, stacks, gated=gated)
-            toks = c2c.generate(rxp.cfg, rxp.params, prompt, steps, fused=fused)
-        else:
-            toks = c2c.generate(rxp.cfg, rxp.params, prompt, steps)
-        from repro.core import commload
+        proto = PROTOCOLS["c2c" if tx_names else "standalone"]
+        prep = proto.prepare(self, receiver, prompt, tx_names, steps=steps,
+                             key=key, gated=gated, tx_prompts=tx_prompts)
+        toks = c2c.generate(rxp.cfg, rxp.params, prep.prompt, steps,
+                            fused=prep.fused)
         return {
             "tokens": toks,
             "transmitters": tx_names,
-            "c2c_bytes": sum(
-                commload.c2c_bytes_per_token(self.participants[n].cfg)
-                for n in tx_names),
+            "c2c_bytes": prep.wire_bytes,
         }
 
     # ------------------------------------------------- continuous serving
     def make_engine(self, receiver: str, *, max_slots: int = 8,
                     max_seq: int = 128, max_prefix: int = 32,
-                    cache_dtype=None, prompt_bucket: Optional[int] = None):
+                    cache_dtype=None, prompt_bucket: Optional[int] = None,
+                    **engine_kw):
         """Build (and register) the receiver's continuous-batching engine.
 
         All protocols share it: standalone and T2T requests decode alongside
-        C2C-fused ones in the same slot table (launch/engine.py)."""
-        import jax.numpy as jnp
+        C2C-fused ones in the same slot table (launch/engine.py). Extra
+        keywords (``paged=True``, ``page_size=``, ``num_pages=``,
+        ``admit_batch=``) reach the engine unchanged."""
         from repro.launch.engine import ContinuousBatchingEngine
 
         rxp = self.participants[receiver]
@@ -140,7 +153,7 @@ class FedRefineSystem:
             rxp.cfg, rxp.params, max_slots=max_slots, max_seq=max_seq,
             max_prefix=max_prefix,
             cache_dtype=cache_dtype if cache_dtype is not None else jnp.float32,
-            prompt_bucket=prompt_bucket)
+            prompt_bucket=prompt_bucket, **engine_kw)
         self.engines[receiver] = eng
         return eng
 
@@ -155,47 +168,34 @@ class FedRefineSystem:
         rephrasing of the *original* prompt (otherwise the receiver prompt is
         re-rephrased, compounding paraphrase noise on non-idempotent channels).
 
-        ``protocol``: "c2c" (transmit + fuse a KV prefix), "t2t" (transmitters
-        answer as text, prepended to the receiver prompt), or "standalone".
-        An explicit "c2c"/"t2t" request with no schedulable transmitter raises
-        rather than silently degrading to standalone. Requests of all three
-        kinds coexist in one decode batch; drain() (or engine.step()) runs
-        them to completion."""
-        from repro.core import t2t
-
+        ``protocol`` names an entry of core/protocol.PROTOCOLS ("c2c", "t2t",
+        "standalone"). An explicit protocol that needs transmitters but has no
+        schedulable one raises rather than silently degrading to standalone.
+        Requests of all kinds coexist in one decode batch; drain() (or
+        engine.step()) runs them to completion."""
+        if protocol not in PROTOCOLS:
+            raise ValueError(f"unknown protocol {protocol!r}; "
+                             f"have {sorted(PROTOCOLS)}")
+        proto = PROTOCOLS[protocol]
         eng = self.engines.get(receiver) or self.make_engine(receiver)
         key = key if key is not None else jax.random.PRNGKey(0)
         prompt = jnp.asarray(prompt, jnp.int32)
         if prompt.ndim == 1:
             prompt = prompt[None]
         tx_names = (self.schedule(task, receiver, n_tx)
-                    if protocol != "standalone" else [])
-        if protocol != "standalone" and not tx_names:
+                    if proto.needs_transmitters() else [])
+        if proto.needs_transmitters() and not tx_names:
             raise ValueError(
                 f"protocol {protocol!r} requested but no transmitter with a "
                 f"fuser for receiver {receiver!r} is schedulable; submit with "
                 f"protocol='standalone' to run unrefined")
-        if protocol == "c2c":
-            if tx_prompts is None:
-                tx_prompts = {
-                    n: self.rephrase(prompt, jax.random.fold_in(key, i))
-                    for i, n in enumerate(tx_names)
-                }
-            stacks = self.transmit_stacks(tx_names, tx_prompts)
-            fused = self.fused_prefix(receiver, tx_names, stacks, gated=gated)
-            return eng.submit(prompt, steps, fused=fused, protocol="c2c",
-                              meta={"transmitters": tx_names})
-        if protocol == "t2t":
-            shared = []
-            for i, n in enumerate(tx_names):
-                p = self.participants[n]
-                tp = (tx_prompts[n] if tx_prompts is not None
-                      else self.rephrase(prompt, jax.random.fold_in(key, i)))
-                shared.append(t2t.t2t_exchange(p.cfg, p.params, tp, steps))
-            combined = jnp.concatenate([*shared, prompt], axis=1)
-            return eng.submit(combined, steps, protocol="t2t",
-                              meta={"transmitters": tx_names})
-        return eng.submit(prompt, steps, protocol="standalone")
+        prep = proto.prepare(self, receiver, prompt, tx_names, steps=steps,
+                             key=key, gated=gated, tx_prompts=tx_prompts)
+        return eng.submit(prep.prompt, steps, fused=prep.fused,
+                          protocol=proto.name,
+                          meta={"transmitters": tx_names,
+                                "wire_bytes": prep.wire_bytes}
+                          if tx_names else {})
 
     def drain(self, receiver: str) -> Dict[int, dict]:
         """Run the receiver's engine until idle; {rid: completion dict}."""
@@ -220,29 +220,20 @@ class FedRefineSystem:
     ) -> dict:
         """Paper §Possible Variants: pick C2C vs T2T vs standalone per the
         current link + QoS, then execute that protocol end to end."""
-        from repro.core import protocol, t2t
+        from repro.core import protocol as P
 
         key = key if key is not None else jax.random.PRNGKey(0)
         tx_names = self.schedule(task, receiver, n_tx)
         rxp = self.participants[receiver]
         cfg_txs = [self.participants[n].cfg for n in tx_names]
-        decision = protocol.choose_protocol(
+        decision = P.choose_protocol(
             cfg_txs, rxp.cfg, seq=int(prompt.shape[1]), gen_steps=steps,
             link=link, qos=qos)
-        proto = decision["protocol"] if tx_names else "standalone"
-
-        if proto == "c2c":
-            out = self.refine_generate(receiver, prompt, steps, task=task,
-                                       n_tx=n_tx, key=key)
-            toks = out["tokens"]
-        elif proto == "t2t":
-            shared = []
-            for i, n in enumerate(tx_names):
-                p = self.participants[n]
-                tp = self.rephrase(prompt, jax.random.fold_in(key, i))
-                shared.append(t2t.t2t_exchange(p.cfg, p.params, tp, steps))
-            toks = t2t.t2t_generate(rxp.cfg, rxp.params, prompt, shared, steps)
-        else:
-            toks = c2c.generate(rxp.cfg, rxp.params, prompt, steps)
-        return {"tokens": toks, "protocol": proto, "decision": decision,
-                "transmitters": tx_names if proto != "standalone" else []}
+        proto = PROTOCOLS[decision["protocol"] if tx_names else "standalone"]
+        prep = proto.prepare(self, receiver, prompt, tx_names, steps=steps,
+                             key=key)
+        toks = c2c.generate(rxp.cfg, rxp.params, prep.prompt, steps,
+                            fused=prep.fused)
+        return {"tokens": toks, "protocol": proto.name, "decision": decision,
+                "transmitters": prep.transmitters,
+                "wire_bytes": prep.wire_bytes}

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
+from repro.models.cache import FusedPrefix, KVStack
 
 
 class InapplicableError(TypeError):
@@ -118,23 +119,24 @@ def project_cache(
     fuser: dict,
     cfg_tx: ModelConfig,
     cfg_rx: ModelConfig,
-    tx_stack: dict,  # {"k","v"}: (n_tx, B, Hkv_t, S, hd_t)
+    tx_stack,  # KVStack: k/v (n_tx, B, Hkv_t, S, hd_t)
     *,
     use_kernel: bool = False,
-) -> dict:
+) -> FusedPrefix:
     """Project a transmitter KV stack into receiver space: Eq. 1's C(F_ij, M_i).
 
-    Returns {"k","v","bias"}: k/v (n_rx, B, Hkv_r, S, hd_r) plus a per-layer,
+    Returns a FusedPrefix: k/v (n_rx, B, Hkv_r, S, hd_r) plus a per-layer,
     per-position attention-logit bias (n_rx, B, S) = log σ(gate). The gate acts
     multiplicatively on the *attention mass* of fused tokens: gate→0 recovers
     standalone inference exactly (a property tests pin down), gate→1 recovers the
     paper's plain concatenation.
     """
-    n_tx, B, Ht, S, hdt = tx_stack["k"].shape
+    tx_stack = KVStack.ensure(tx_stack)
+    n_tx, B, Ht, S, hdt = tx_stack.k.shape
     align = fuser["align"]  # (n_rx,)
     # gather transmitter layers for each receiver layer
-    k_sel = tx_stack["k"][align]  # (n_rx, B, Ht, S, hdt)
-    v_sel = tx_stack["v"][align]
+    k_sel = tx_stack.k[align]  # (n_rx, B, Ht, S, hdt)
+    v_sel = tx_stack.v[align]
     x = jnp.concatenate(
         [
             k_sel.transpose(0, 1, 3, 2, 4).reshape(len(align), B, S, Ht * hdt),
@@ -156,27 +158,28 @@ def project_cache(
     # log σ(gate) = -softplus(-gate): numerically safe even for very closed gates
     log_g = -jax.nn.softplus(-fuser["gate"].astype(jnp.float32))
     bias = jnp.broadcast_to(log_g[:, None, None], (len(align), B, S))
-    return {"k": k_hat, "v": v_hat, "bias": bias}
+    return FusedPrefix(k=k_hat, v=v_hat, bias=bias)
 
 
 def mix_cache(
     fuser: dict,
     cfg_tx: ModelConfig,
     cfg_rx: ModelConfig,
-    tx_stack: dict,
-    rx_stack: dict,  # receiver's own stack, same S
+    tx_stack,
+    rx_stack,  # receiver's own KVStack, same S
     *,
     use_kernel: bool = False,
-) -> dict:
+) -> KVStack:
     """Per-position gated mixing (the case-study variant: "the receiver mixes the
     projected KV cache with its own"). Requires equal cached lengths.
 
     k' = (1-g)·k_own + g·k̂ ; v' likewise. Returns receiver-shaped stack.
     """
+    rx_stack = KVStack.ensure(rx_stack)
     proj = project_cache(fuser, cfg_tx, cfg_rx, tx_stack, use_kernel=use_kernel)
     g = jax.nn.sigmoid(fuser["gate"].astype(jnp.float32))[:, None, None, None, None]
-    g = g.astype(rx_stack["k"].dtype)
-    return {
-        "k": (1 - g) * rx_stack["k"] + g * proj["k"],
-        "v": (1 - g) * rx_stack["v"] + g * proj["v"],
-    }
+    g = g.astype(rx_stack.k.dtype)
+    return KVStack(
+        k=(1 - g) * rx_stack.k + g * proj.k,
+        v=(1 - g) * rx_stack.v + g * proj.v,
+    )

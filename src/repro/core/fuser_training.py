@@ -22,7 +22,6 @@ from repro.configs.base import ModelConfig
 from repro.core import c2c
 from repro.core import fuser as F
 from repro.models import transformer as T
-from repro.models.cache import attn_kv_stack
 from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state
 
 
@@ -64,7 +63,7 @@ def make_fuser_train_step(cfg_tx: ModelConfig, cfg_rx: ModelConfig,
         S = batch["tx_tokens"].shape[1]
         _, tx_cache = T.prefill(cfg_tx, jax.lax.stop_gradient(params_tx),
                                 batch["tx_tokens"], max_seq=S)
-        tx_stack = jax.lax.stop_gradient(attn_kv_stack(cfg_tx, tx_cache, length=S))
+        tx_stack = jax.lax.stop_gradient(tx_cache.export_stack(cfg_tx, length=S))
         return fused_loss(fuser, cfg_tx, cfg_rx, params_rx, tx_stack,
                           batch["rx_tokens"], batch["labels"],
                           gating if train_gating else None)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
+from repro.models.cache import FusedPrefix
 
 
 def init_gating(cfg_rx: ModelConfig, key, hidden: int = 128,
@@ -27,13 +28,14 @@ def init_gating(cfg_rx: ModelConfig, key, hidden: int = 128,
     }
 
 
-def gate_weight(params: dict, fused_stack: dict) -> jax.Array:
-    """Score one fused stack {"k","v"}: (n_rx, B, Hkv, S, hd) -> weight (B,)."""
-    n, B, H, S, hd = fused_stack["k"].shape
+def gate_weight(params: dict, fused) -> jax.Array:
+    """Score one fused prefix/stack (n_rx, B, Hkv, S, hd) -> weight (B,)."""
+    fused = FusedPrefix.ensure(fused)
+    n, B, H, S, hd = fused.k.shape
     feat = jnp.concatenate(
         [
-            fused_stack["k"].transpose(1, 0, 3, 2, 4).reshape(B, n, S, H * hd),
-            fused_stack["v"].transpose(1, 0, 3, 2, 4).reshape(B, n, S, H * hd),
+            fused.k.transpose(1, 0, 3, 2, 4).reshape(B, n, S, H * hd),
+            fused.v.transpose(1, 0, 3, 2, 4).reshape(B, n, S, H * hd),
         ],
         axis=-1,
     ).mean(axis=(1, 2))  # (B, 2*kv_dim) pooled over layers and positions
@@ -41,14 +43,14 @@ def gate_weight(params: dict, fused_stack: dict) -> jax.Array:
     return jax.nn.sigmoid(L.linear(params["w2"], h))[:, 0]  # (B,)
 
 
-def apply_gates(params: dict, fused_stacks: List[dict]) -> List[dict]:
+def apply_gates(params: dict, fused_stacks: List) -> List[FusedPrefix]:
     """Fold each transmitter's gate into its attention-logit bias: the fused
     tokens' attention mass is scaled by w (log-additive with the per-layer
     fuser gate); w→0 removes the transmitter exactly."""
     out = []
     for st in fused_stacks:
+        st = FusedPrefix.ensure(st)
         w = gate_weight(params, st)  # (B,)
         log_w = jnp.log(jnp.maximum(w, 1e-30))[None, :, None]  # (1, B, 1)
-        bias = st.get("bias", 0.0) + log_w
-        out.append({"k": st["k"], "v": st["v"], "bias": bias})
+        out.append(st.with_bias(st._bias_or_zero() + log_w))
     return out

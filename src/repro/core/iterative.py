@@ -28,7 +28,6 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import c2c
 from repro.models import transformer as T
-from repro.models.cache import attn_kv_stack
 
 
 def iterative_c2c_refine(
@@ -58,7 +57,7 @@ def iterative_c2c_refine(
             S = ctx.shape[1]
             _, cache = T.prefill(cfg_t, p_t, ctx, max_seq=S,
                                  cache_dtype=jnp.float32)
-            stacks.append(attn_kv_stack(cfg_t, cache, length=S))
+            stacks.append(cache.export_stack(cfg_t, length=S))
         fused = c2c.fused_prefix(fusers, cfg_txs, cfg_rx, stacks,
                                  gating=gating)
         rx_ctx = rx_prompt if draft is None else jnp.concatenate(

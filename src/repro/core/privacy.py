@@ -14,6 +14,9 @@ checkpoint) we implement two channels with the same interface:
    transform (token overlap ↓, answer invariant).
 2. ``model_rephrase`` — the paper's own mechanism (receiver model rewrites the
    query) for when a trained rephraser LM is available.
+
+As a *wire* transform (rephrase-before-transmit), this module is adapted into
+the composable channel pipeline by ``core/transport.RephraseChannel``.
 """
 from __future__ import annotations
 

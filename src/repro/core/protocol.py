@@ -1,34 +1,56 @@
-"""Opportunistic protocol selection (paper §Possible Variants: "the decision to
-use cache or token communication could be dynamically determined based on both
-the current network status and the specific QoS requirements").
+"""Federation protocols and opportunistic protocol selection.
 
-An analytic latency/accuracy model per link decides C2C vs T2T vs standalone:
+Paper §Possible Variants: "the decision to use cache or token communication
+could be dynamically determined based on both the current network status and
+the specific QoS requirements".
+
+Each way participants can collaborate is a :class:`FederationProtocol`
+(Standalone / C2C / T2T) bundling the three things that were previously
+scattered across ``choose_protocol`` + ``fedrefine.submit`` +
+``fedrefine.serve_opportunistic``:
+
+  * an analytic **latency estimate** per link (the QoS input),
+  * a **quality rank** (paper Fig. 3a: c2c > t2t > standalone),
+  * **prepare()** — the transmit/prefix construction that turns a raw request
+    into what the receiver's engine decodes (a fused KV prefix for C2C, a
+    combined shared-token prompt for T2T, the prompt itself standalone).
+
+``FedRefineSystem`` and ``launch/engine.py`` consume protocols only through
+this interface, so adding a protocol variant is additive (register it in
+``PROTOCOLS``), not a cross-module edit.
+
+Latency model per link:
 
   latency_c2c = kv_bytes(seq)/bw + rtt + fuser_time + decode_time
   latency_t2t = tx_gen_time + text_bytes/bw + rtt + rx_prefill_time + decode_time
 
-Compute-time terms come from the same TPU-v5e roofline constants the dry-run
-analysis uses (roofline.py), so the protocol's decisions are consistent with the
-§Roofline tables. Properties pinned by tests: decisions are monotone in bandwidth
-(more bandwidth never flips C2C→T2T) and respect QoS feasibility.
+Compute-time terms come from the TPU-v5e roofline constants (repro/hw.py — one
+shared source with roofline.py), so the protocol's decisions stay consistent
+with the §Roofline tables. Properties pinned by tests: decisions are monotone
+in bandwidth (more bandwidth never flips C2C→T2T) and respect QoS feasibility.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Literal
+import abc
+from dataclasses import dataclass, field
+from typing import Dict, List, Literal, Optional
+
+import jax
+import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import commload
-
-# TPU-v5e-class compute constants (shared with roofline.py)
-PEAK_FLOPS = 197e12  # bf16 / chip
-HBM_BW = 819e9  # bytes/s
+from repro.hw import HBM_BW, PEAK_FLOPS  # shared with roofline.py  # noqa: F401
+from repro.models.cache import FusedPrefix
 
 
 @dataclass(frozen=True)
 class LinkModel:
     bandwidth_bps: float  # bytes/s on the federation link
     rtt_s: float = 0.0
+
+    def transfer_time(self, nbytes: float) -> float:
+        return nbytes / self.bandwidth_bps + self.rtt_s
 
 
 @dataclass(frozen=True)
@@ -56,23 +78,160 @@ def _fuser_time(cfg_tx: ModelConfig, cfg_rx: ModelConfig, seq: int,
     return flops / (PEAK_FLOPS * mfu)
 
 
+# ------------------------------------------------------------ prepared form
+
+
+@dataclass
+class PreparedRequest:
+    """A protocol's output: exactly what the receiver engine decodes."""
+
+    prompt: jax.Array  # receiver-side tokens (B, S) — combined for T2T
+    protocol: str
+    fused: Optional[FusedPrefix] = None  # C2C prefix (None otherwise)
+    transmitters: List[str] = field(default_factory=list)
+    wire_bytes: int = 0  # bytes this request put on the federation link
+    meta: dict = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------- protocols
+
+
+class FederationProtocol(abc.ABC):
+    """One way participants collaborate on a request."""
+
+    name: str = "?"
+    quality: int = 0  # higher = better answer quality (paper Fig. 3a)
+
+    @abc.abstractmethod
+    def estimate_latency(self, cfg_txs: List[ModelConfig], cfg_rx: ModelConfig,
+                         seq: int, gen_steps: int, link: LinkModel, *,
+                         shared_tokens: int = 64) -> float:
+        """End-to-end latency of one request under this protocol."""
+
+    @abc.abstractmethod
+    def prepare(self, system, receiver: str, prompt: jax.Array,
+                tx_names: List[str], *, steps: int, key: jax.Array,
+                gated: bool = True,
+                tx_prompts: Optional[Dict[str, jax.Array]] = None
+                ) -> PreparedRequest:
+        """Run the transmit side and build the receiver's decode inputs.
+        ``system`` is a FedRefineSystem (duck-typed to avoid a cycle)."""
+
+    def needs_transmitters(self) -> bool:
+        return True
+
+
+class Standalone(FederationProtocol):
+    name = "standalone"
+    quality = 0
+
+    def estimate_latency(self, cfg_txs, cfg_rx, seq, gen_steps, link, *,
+                         shared_tokens: int = 64) -> float:
+        return _prefill_time(cfg_rx, seq) + _decode_time(cfg_rx, gen_steps)
+
+    def prepare(self, system, receiver, prompt, tx_names, *, steps, key,
+                gated=True, tx_prompts=None) -> PreparedRequest:
+        return PreparedRequest(prompt=prompt, protocol=self.name)
+
+    def needs_transmitters(self) -> bool:
+        return False
+
+
+class C2C(FederationProtocol):
+    """Cache-to-cache: transmitters prefill locally, ship their KV stacks
+    through the system's wire channel, the fuser projects them into receiver
+    space, the receiver decodes over [fused ∘ own] (Eq. 4)."""
+
+    name = "c2c"
+    quality = 2
+
+    def estimate_latency(self, cfg_txs, cfg_rx, seq, gen_steps, link, *,
+                         shared_tokens: int = 64) -> float:
+        xfer = link.transfer_time(commload.c2c_bytes_total(cfg_txs, seq))
+        fuse = sum(_fuser_time(t, cfg_rx, seq) for t in cfg_txs)
+        return xfer + fuse + _decode_time(cfg_rx, gen_steps)
+
+    def prepare(self, system, receiver, prompt, tx_names, *, steps, key,
+                gated=True, tx_prompts=None) -> PreparedRequest:
+        if tx_prompts is None:
+            tx_prompts = {
+                n: system.rephrase(prompt, jax.random.fold_in(key, i))
+                for i, n in enumerate(tx_names)
+            }
+        stacks, wire_bytes = system.transmit_stacks(tx_names, tx_prompts)
+        fused = system.fused_prefix(receiver, tx_names, stacks, gated=gated)
+        return PreparedRequest(prompt=prompt, protocol=self.name, fused=fused,
+                               transmitters=list(tx_names),
+                               wire_bytes=wire_bytes)
+
+
+class T2T(FederationProtocol):
+    """Text-to-text: transmitters answer as generated tokens; the receiver
+    re-prefills [shared ∘ own prompt] — the prefill rebuild C2C avoids."""
+
+    name = "t2t"
+    quality = 1
+
+    def estimate_latency(self, cfg_txs, cfg_rx, seq, gen_steps, link, *,
+                         shared_tokens: int = 64) -> float:
+        tx_gen = (max(_decode_time(t, shared_tokens) for t in cfg_txs)
+                  if cfg_txs else 0.0)
+        xfer = link.transfer_time(
+            commload.t2t_bytes_total(len(cfg_txs), shared_tokens))
+        rx_prefill = _prefill_time(cfg_rx, seq + shared_tokens * len(cfg_txs))
+        return tx_gen + xfer + rx_prefill + _decode_time(cfg_rx, gen_steps)
+
+    def prepare(self, system, receiver, prompt, tx_names, *, steps, key,
+                gated=True, tx_prompts=None) -> PreparedRequest:
+        from repro.core import t2t
+
+        shared = []
+        wire_bytes = 0
+        for i, n in enumerate(tx_names):
+            p = system.participants[n]
+            tp = (tx_prompts[n] if tx_prompts is not None
+                  else system.rephrase(prompt, jax.random.fold_in(key, i)))
+            toks = t2t.t2t_exchange(p.cfg, p.params, tp, steps)
+            shared.append(toks)
+            wire_bytes += int(toks.size) * commload.t2t_bytes_per_token()
+        combined = jnp.concatenate([*shared, prompt], axis=1)
+        return PreparedRequest(prompt=combined, protocol=self.name,
+                               transmitters=list(tx_names),
+                               wire_bytes=wire_bytes)
+
+
+#: Registry consumed by FedRefineSystem / ContinuousBatchingEngine. Adding a
+#: protocol variant == adding an entry here.
+PROTOCOLS: Dict[str, FederationProtocol] = {
+    p.name: p for p in (C2C(), T2T(), Standalone())
+}
+
+#: Names in quality order, best first (paper Fig. 3a).
+QUALITY_ORDER: List[str] = sorted(
+    PROTOCOLS, key=lambda n: -PROTOCOLS[n].quality)
+
+
+# --------------------------------------------------- legacy latency wrappers
+
+
 def latency_c2c(cfg_txs: List[ModelConfig], cfg_rx: ModelConfig, seq: int,
                 gen_steps: int, link: LinkModel) -> float:
-    xfer = commload.c2c_bytes_total(cfg_txs, seq) / link.bandwidth_bps
-    fuse = sum(_fuser_time(t, cfg_rx, seq) for t in cfg_txs)
-    return xfer + link.rtt_s + fuse + _decode_time(cfg_rx, gen_steps)
+    return PROTOCOLS["c2c"].estimate_latency(cfg_txs, cfg_rx, seq, gen_steps,
+                                             link)
 
 
 def latency_t2t(cfg_txs: List[ModelConfig], cfg_rx: ModelConfig, seq: int,
                 gen_steps: int, link: LinkModel, shared_tokens: int) -> float:
-    tx_gen = max(_decode_time(t, shared_tokens) for t in cfg_txs) if cfg_txs else 0.0
-    xfer = commload.t2t_bytes_total(len(cfg_txs), shared_tokens) / link.bandwidth_bps
-    rx_prefill = _prefill_time(cfg_rx, seq + shared_tokens * len(cfg_txs))
-    return tx_gen + xfer + link.rtt_s + rx_prefill + _decode_time(cfg_rx, gen_steps)
+    return PROTOCOLS["t2t"].estimate_latency(cfg_txs, cfg_rx, seq, gen_steps,
+                                             link, shared_tokens=shared_tokens)
 
 
 def latency_standalone(cfg_rx: ModelConfig, seq: int, gen_steps: int) -> float:
-    return _prefill_time(cfg_rx, seq) + _decode_time(cfg_rx, gen_steps)
+    return PROTOCOLS["standalone"].estimate_latency([], cfg_rx, seq, gen_steps,
+                                                    LinkModel(1.0))
+
+
+# ------------------------------------------------------------------ chooser
 
 
 def choose_protocol(
@@ -90,14 +249,13 @@ def choose_protocol(
     Quality order (paper Fig. 3a): c2c > t2t > standalone.
     """
     cands = {
-        "c2c": latency_c2c(cfg_txs, cfg_rx, seq, gen_steps, link),
-        "t2t": latency_t2t(cfg_txs, cfg_rx, seq, gen_steps, link, shared_tokens),
-        "standalone": latency_standalone(cfg_rx, seq, gen_steps),
+        name: PROTOCOLS[name].estimate_latency(
+            cfg_txs, cfg_rx, seq, gen_steps, link, shared_tokens=shared_tokens)
+        for name in QUALITY_ORDER
     }
-    order = ["c2c", "t2t", "standalone"]  # best -> worst quality
-    floor = order.index(qos.min_quality)
+    floor = QUALITY_ORDER.index(qos.min_quality)
     # best quality, down to (and including) the QoS quality floor, that fits
-    for name in order[: floor + 1]:
+    for name in QUALITY_ORDER[: floor + 1]:
         if cands[name] <= qos.max_latency_s:
             return {"protocol": name, "latencies": cands, "qos_met": True}
     # infeasible QoS: degrade to the fastest candidate and flag it

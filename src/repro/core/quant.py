@@ -10,20 +10,44 @@ Scales are computed over the sequence axis (the only axis that grows), so the
 per-token overhead is O(1/S) and the asymptotic compression is exactly 2×.
 Accuracy impact is measured in the case study (tests/test_quant.py pins the
 round-trip error; benchmarks report the end-task delta).
+
+This module is the *codec backend*; the composable wire abstraction lives in
+core/transport.py (``QuantChannel`` wraps these functions into the ``Channel``
+protocol).
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 
+import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.models.cache import KVStack, pytree_dataclass, tree_bytes
 
 
-def quantize_stack(stack: dict) -> dict:
-    """Quantise a KV stack {"k","v": (n, B, H, S, hd)} to int8 + fp32 scales.
+@pytree_dataclass(["k_q", "v_q", "k_scale", "v_scale"])
+@dataclass
+class QuantizedKV:
+    """int8 wire representation of a :class:`KVStack`: int8 payload + fp32
+    per-(layer, head, dim)-channel scales (n, B, H, 1, hd)."""
 
-    Returns {"k_q","v_q": int8, "k_scale","v_scale": (n,B,H,1,hd) fp32}.
-    """
+    k_q: jax.Array
+    v_q: jax.Array
+    k_scale: jax.Array
+    v_scale: jax.Array
+
+    def __getitem__(self, key: str) -> jax.Array:  # legacy dict interop
+        return getattr(self, key)
+
+    @property
+    def nbytes(self) -> int:
+        return tree_bytes(self)
+
+
+def quantize_stack(stack) -> QuantizedKV:
+    """Quantise a KV stack (n, B, H, S, hd) to int8 + fp32 scales."""
+    stack = KVStack.ensure(stack)
     out = {}
     for name in ("k", "v"):
         x = stack[name].astype(jnp.float32)
@@ -32,19 +56,20 @@ def quantize_stack(stack: dict) -> dict:
         q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
         out[f"{name}_q"] = q
         out[f"{name}_scale"] = scale
-    return out
+    return QuantizedKV(**out)
 
 
-def dequantize_stack(qstack: dict, dtype=jnp.bfloat16) -> dict:
-    return {
-        "k": (qstack["k_q"].astype(jnp.float32) * qstack["k_scale"]).astype(dtype),
-        "v": (qstack["v_q"].astype(jnp.float32) * qstack["v_scale"]).astype(dtype),
-    }
+def dequantize_stack(qstack: QuantizedKV, dtype=jnp.bfloat16) -> KVStack:
+    return KVStack(
+        k=(qstack["k_q"].astype(jnp.float32) * qstack["k_scale"]).astype(dtype),
+        v=(qstack["v_q"].astype(jnp.float32) * qstack["v_scale"]).astype(dtype),
+    )
 
 
-def quantized_bytes(stack: dict) -> int:
+def quantized_bytes(stack) -> int:
     """Wire bytes of the quantised stack (int8 payload + fp32 scales)."""
-    n, B, H, S, hd = stack["k"].shape
+    stack = KVStack.ensure(stack)
+    n, B, H, S, hd = stack.k.shape
     payload = 2 * n * B * H * S * hd  # k+v int8
     scales = 2 * n * B * H * hd * 4
     return payload + scales
@@ -57,8 +82,9 @@ def c2c_bytes_per_token_quantized(cfg: ModelConfig) -> float:
     return 2.0 * n_attn * cfg.num_kv_heads * hd  # 1 byte per element
 
 
-def roundtrip_error(stack: dict) -> float:
+def roundtrip_error(stack) -> float:
     """Max relative L2 error of the quantisation round trip (diagnostics)."""
+    stack = KVStack.ensure(stack)
     dq = dequantize_stack(quantize_stack(stack), jnp.float32)
     num = den = 0.0
     for name in ("k", "v"):

@@ -80,22 +80,27 @@ def init_state_fuser(cfg_tx: ModelConfig, cfg_rx: ModelConfig, key, *,
     }
 
 
-def _states_stack(cfg: ModelConfig, cache: dict) -> jax.Array:
+def _states_stack(cfg: ModelConfig, cache) -> jax.Array:
     """Flatten all recurrent-layer states to (n_state_layers, B, state_dim)."""
+    from repro.models.cache import KVCache
     from repro.models.transformer import layer_grouping
     cycles, pattern, tail = layer_grouping(cfg)
+    cache = KVCache.ensure(cache)
     outs = []
     for i, kind in enumerate(pattern + tail):
         if kind in ("ssd", "rec"):
-            h = cache["layers"][i]["h"]  # (C, B, ...) fp32
+            h = cache.layers[i]["h"]  # (C, B, ...) fp32
             outs.append(h.reshape(h.shape[0], h.shape[1], -1))
     return jnp.concatenate(outs, axis=0)
 
 
 def fuse_states(fuser: dict, cfg_tx: ModelConfig, cfg_rx: ModelConfig,
-                tx_cache: dict, rx_cache: dict) -> dict:
+                tx_cache, rx_cache):
     """Gate-mix projected transmitter states into the receiver's decode cache."""
+    from repro.models.cache import KVCache
     from repro.models.transformer import layer_grouping
+
+    rx_cache = KVCache.ensure(rx_cache)
 
     tx_states = _states_stack(cfg_tx, tx_cache)  # (n_tx, B, d_in)
     sel = tx_states[fuser["align"]]  # (n_rx, B, d_in)
@@ -108,7 +113,7 @@ def fuse_states(fuser: dict, cfg_tx: ModelConfig, cfg_rx: ModelConfig,
     g = jax.nn.sigmoid(fuser["gate"])[:, None, None]
 
     cycles, pattern, tail = layer_grouping(cfg_rx)
-    new_layers = list(rx_cache["layers"])
+    new_layers = list(rx_cache.layers)
     off = 0
     for i, kind in enumerate(pattern + tail):
         if kind in ("ssd", "rec"):
@@ -120,7 +125,7 @@ def fuse_states(fuser: dict, cfg_tx: ModelConfig, cfg_rx: ModelConfig,
             e["h"] = (1 - g_i) * h + g_i * p_i
             new_layers[i] = e
             off += n
-    return {"pos": rx_cache["pos"], "layers": new_layers}
+    return KVCache(pos=rx_cache.pos, layers=tuple(new_layers))
 
 
 def state_bytes(cfg: ModelConfig, dtype_bytes: int = 4) -> int:

@@ -5,6 +5,9 @@ shipped as text and the receiver must re-prefill them — rebuilding a KV cache 
 scratch, which is exactly the latency the paper's C2C avoids. Accuracy-wise T2T
 loses the transmitter's internal (cache-level) semantics; the case study measures
 both effects.
+
+These are the generation primitives; the end-to-end request path (latency
+model + transmit + combined-prompt construction) is ``core/protocol.T2T``.
 """
 from __future__ import annotations
 

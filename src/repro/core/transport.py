@@ -1,0 +1,181 @@
+"""Composable federation-transport channels.
+
+The paper treats the KV cache as a *communicated object* — quantised,
+privacy-filtered, and scheduled under QoS — so the wire gets its own
+abstraction. A :class:`Channel` turns a :class:`Message` (KV stack and/or
+token ids) into its on-the-wire form and back:
+
+    encode(msg) -> wire msg        (what the transmitter ships)
+    decode(wire msg) -> msg        (what the receiver reconstructs)
+    bytes_on_wire(wire msg) -> int (what the link model charges)
+
+Channels compose with :class:`Pipeline` (encode left→right, decode
+right→left), so ``Pipeline([RephraseChannel(...), QuantChannel()])`` is
+"privacy-rephrase the tokens, then int8-compress the KV stack" — the full
+FedRefine wire stack in one object. Byte accounting is derived from the
+encoded message itself (every array leaf's nbytes), which makes
+core/commload.py's analytic per-token numbers a *checked* property
+(tests/test_transport.py) instead of a parallel bookkeeping system.
+
+Lossiness is part of the contract: ``QuantChannel`` round-trips values only
+approximately (int8), ``RephraseChannel`` deliberately does not invert (the
+privacy point of rephrasing) — but every channel must round-trip *shapes and
+dtypes* exactly, the invariant the property tests pin.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.privacy import ParaphraseChannel
+from repro.models.cache import KVStack, pytree_dataclass, tree_bytes
+
+# Wire cost of one token id (the paper counts 4 B/token/model; commload.py).
+TOKEN_WIRE_BYTES = 4
+
+
+# ------------------------------------------------------------------ message
+
+
+@pytree_dataclass(["stack", "tokens", "payload"])
+@dataclass
+class Message:
+    """One federation transmission: an optional KV ``stack`` (the C2C medium),
+    optional ``tokens`` (the T2T / prompt medium), and a ``payload`` dict of
+    codec-specific wire tensors (e.g. the int8 form the stack was encoded to).
+    """
+
+    stack: Optional[KVStack] = None
+    tokens: Optional[jax.Array] = None
+    payload: dict = field(default_factory=dict)
+
+    @property
+    def nbytes(self) -> int:
+        """Wire bytes of this message as-is: every array leaf at its dtype
+        width (int32 token ids are exactly commload's 4 B/token)."""
+        return tree_bytes(self)
+
+    def replace(self, **kw) -> "Message":
+        return dataclasses.replace(self, **kw)
+
+
+# ------------------------------------------------------------------ channels
+
+
+class Channel:
+    """Transport codec interface. Subclasses override encode/decode; both
+    must preserve the shapes/dtypes of whatever they reconstruct."""
+
+    def encode(self, msg: Message) -> Message:
+        return msg
+
+    def decode(self, msg: Message) -> Message:
+        return msg
+
+    def bytes_on_wire(self, msg: Message) -> int:
+        """Bytes the link carries for an already-``encode``-d message."""
+        return msg.nbytes
+
+    def transmit(self, msg: Message) -> tuple:
+        """Convenience: encode, account, decode. Returns (received, bytes)."""
+        wire = self.encode(msg)
+        return self.decode(wire), self.bytes_on_wire(wire)
+
+
+class IdentityChannel(Channel):
+    """Raw transmission: stacks ship at their storage dtype, tokens at
+    TOKEN_WIRE_BYTES each. bytes_on_wire reproduces commload.py's analytic
+    c2c/t2t numbers exactly (pinned by tests/test_transport.py)."""
+
+
+class QuantChannel(Channel):
+    """int8 KV-stack codec (wraps core/quant.py): the stack is replaced on the
+    wire by its int8 payload + fp32 scales; decode reconstructs a stack of the
+    original shape AND dtype (the source dtype rides along as a zero-byte
+    marker array; pass ``dtype=`` to force a different reconstruction dtype).
+    Tokens and other payload pass through."""
+
+    def __init__(self, dtype=None):
+        self.dtype = dtype
+
+    def encode(self, msg: Message) -> Message:
+        if msg.stack is None:
+            return msg
+        q = quant.quantize_stack(msg.stack)
+        marker = jnp.zeros((0,), msg.stack.k.dtype)  # 0 wire bytes
+        return msg.replace(stack=None,
+                           payload={**msg.payload, "kv_int8": q,
+                                    "kv_dtype": marker})
+
+    def decode(self, msg: Message) -> Message:
+        q = msg.payload.get("kv_int8")
+        if q is None:
+            return msg
+        dtype = self.dtype
+        if dtype is None:
+            marker = msg.payload.get("kv_dtype")
+            dtype = marker.dtype if marker is not None else jnp.bfloat16
+        payload = {k: v for k, v in msg.payload.items()
+                   if k not in ("kv_int8", "kv_dtype")}
+        return msg.replace(stack=quant.dequantize_stack(q, dtype),
+                           payload=payload)
+
+
+class RephraseChannel(Channel):
+    """Privacy transform on the token medium (wraps core/privacy.py): tokens
+    are rephrased *before* transmission so raw user intent never crosses the
+    link. Deliberately non-invertible — decode is the identity; what the
+    receiver gets IS the privacy-filtered surface form. Shape/dtype and
+    synonym-class semantics are preserved (privacy.py invariants).
+
+    Stateful by design: each encode folds a call counter into the base key,
+    so repeated transmissions (and different transmitters sharing one
+    pipeline) draw *distinct* rephrasings — reusing one draw would collapse
+    the transmitter diversity the gating network is trained against."""
+
+    def __init__(self, paraphraser: ParaphraseChannel, key: jax.Array):
+        self.paraphraser = paraphraser
+        self.key = key
+        self._calls = 0
+
+    def encode(self, msg: Message) -> Message:
+        if msg.tokens is None:
+            return msg
+        self._calls += 1
+        key = jax.random.fold_in(self.key, self._calls)
+        return msg.replace(tokens=self.paraphraser.rephrase(msg.tokens, key))
+
+
+class Pipeline(Channel):
+    """Channel composition: encode applies channels left→right, decode
+    right→left (codec nesting order). bytes_on_wire is the final encoded
+    message's — i.e. what actually crosses the link."""
+
+    def __init__(self, channels: Sequence[Channel]):
+        self.channels = list(channels)
+
+    def encode(self, msg: Message) -> Message:
+        for ch in self.channels:
+            msg = ch.encode(msg)
+        return msg
+
+    def decode(self, msg: Message) -> Message:
+        for ch in reversed(self.channels):
+            msg = ch.decode(msg)
+        return msg
+
+
+# ------------------------------------------------------------------ helpers
+
+
+def stack_message(stack) -> Message:
+    return Message(stack=KVStack.ensure(stack))
+
+
+def token_message(tokens: jax.Array) -> Message:
+    return Message(tokens=jnp.asarray(tokens, jnp.int32))

@@ -1,0 +1,16 @@
+"""Shared accelerator constants (TPU v5e-class, per chip).
+
+Single source of truth for the compute/bandwidth numbers used by BOTH the
+roofline analysis (roofline.py) and the opportunistic-protocol latency model
+(core/protocol.py). They were previously copied into each module, which let
+the protocol's latency estimates silently diverge from the §Roofline tables
+whenever one copy was tuned.
+"""
+from __future__ import annotations
+
+# TPU v5e-class constants (per chip)
+PEAK_FLOPS = 197e12  # bf16 FLOP/s
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+__all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW"]

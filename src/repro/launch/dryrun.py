@@ -34,7 +34,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.serve import make_serve_prefill, make_serve_step
 from repro.launch.train import make_train_step
 from repro.models import transformer as T
-from repro.models.cache import init_cache
+from repro.models.cache import KVCache
 from repro.optim.adamw import AdamWConfig, init_opt_state
 
 OUTDIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -79,7 +79,7 @@ def input_specs(cfg: ModelConfig, shape_name: str, dtype=jnp.bfloat16) -> dict:
     else:  # decode: one token against a seq_len cache
         out["token"] = _struct((B,), jnp.int32)
         cache = jax.eval_shape(
-            functools.partial(init_cache, cfg, B, S, dtype))
+            functools.partial(KVCache.init, cfg, B, S, dtype))
         out["cache"] = cache
     return out
 
@@ -204,7 +204,7 @@ def build_federated_lowered(rx_arch: str, tx_arch: str, shape_name: str, mesh,
     consumes the already-projected stack. §Perf iteration 1 for pair C.
     """
     from repro.core import fuser as F
-    from repro.models.cache import extra_kv_layers
+    from repro.models.cache import FusedPrefix
 
     cfg_rx = get_config(rx_arch)
     cfg_tx = get_config(tx_arch)
@@ -221,7 +221,7 @@ def build_federated_lowered(rx_arch: str, tx_arch: str, shape_name: str, mesh,
     p_struct = params_specs(cfg_rx, dtype)
     p_shard = SH.to_sharding(mesh, SH.param_pspecs(cfg_rx, p_struct, mesh))
     cache_struct = jax.eval_shape(
-        functools.partial(init_cache, cfg_rx, B, S, dtype))
+        functools.partial(KVCache.init, cfg_rx, B, S, dtype))
     cache_shard = SH.to_sharding(
         mesh, SH.cache_pspecs(cfg_rx, cache_struct, mesh, B))
     tok_shard = SH.to_sharding(mesh, SH.batch_pspec(mesh, B, 0))
@@ -249,7 +249,7 @@ def build_federated_lowered(rx_arch: str, tx_arch: str, shape_name: str, mesh,
 
         def step(params, cache, token, fused):
             return T.decode_step(cfg_rx, params, cache, token,
-                                 extra_kv=extra_kv_layers(cfg_rx, fused),
+                                 extra_kv=FusedPrefix.ensure(fused).to_extra_kv(cfg_rx),
                                  extra_kv_mode=extra_kv_mode, unroll=unroll)
 
         fn = jax.jit(step, in_shardings=(p_shard, cache_shard, tok_shard,
@@ -271,7 +271,7 @@ def build_federated_lowered(rx_arch: str, tx_arch: str, shape_name: str, mesh,
     def step(params, cache, token, tx_stack, fuser):
         fused = F.project_cache(fuser, cfg_tx, cfg_rx, tx_stack)
         return T.decode_step(cfg_rx, params, cache, token,
-                             extra_kv=extra_kv_layers(cfg_rx, fused),
+                             extra_kv=FusedPrefix.ensure(fused).to_extra_kv(cfg_rx),
                              extra_kv_mode=extra_kv_mode, unroll=unroll)
 
     fn = jax.jit(step, in_shardings=(p_shard, cache_shard, tok_shard,

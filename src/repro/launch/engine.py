@@ -8,21 +8,41 @@ and T2T requests with different lengths and arrival times share one device.
 
 Design:
 
-- **Slot table** — a fixed-capacity decode cache (``models/cache.init_slot_cache``)
-  whose batch axis is ``max_slots`` request slots, each with its own position
-  (the per-slot ``pos`` vector that ``transformer.decode_step`` now understands).
+- **Slot table** — a fixed-capacity decode cache whose batch axis is
+  ``max_slots`` request slots, each with its own position (the per-slot
+  ``pos`` vector ``transformer.decode_step`` understands). Two layouts:
+
+  * *dense* (default): ``models/cache.KVCache.init_slots`` — every slot owns a
+    full ``max_seq`` row. Simple, and the byte-identity reference.
+  * *paged* (``paged=True``): ``models/cache.SlotTable`` — K/V pages live in a
+    shared pool; each slot maps ``ceil(tokens/page_size)`` physical pages. At
+    a fixed pool budget (``num_pages``) the engine sustains far more
+    concurrent slots than dense whenever requests are shorter than
+    ``max_seq`` — benchmarks/engine_bench.py shows ≥2× at equal HBM with
+    byte-identical decode outputs. Pages are allocated host-side at admission
+    (enough for prompt + max_new_tokens, so decode never allocates) and
+    returned to the free list on completion.
+
 - **Admission queue** — ``submit()`` enqueues; each ``step()`` first admits
-  queued requests into free slots (prefill + ``cache_insert_slot``), so
-  requests join mid-flight without disturbing in-flight neighbours.
-- **Completion path** — a slot is freed the step its request finishes
-  (``cache_evict_slot``); stale K/V are masked by the per-slot position, so no
-  zeroing is needed and the slot is immediately reusable.
+  queued requests into free slots, so requests join mid-flight without
+  disturbing in-flight neighbours. With ``admit_batch > 1``, up to that many
+  same-bucket-length requests share ONE prefill forward (batch-admission
+  prefill); the prefill always runs at batch width ``admit_batch`` (short
+  batches padded with zero-token rows, whose outputs are discarded — safe
+  because inference MoE is dropless, so pad rows can't steal capacity), so
+  it still traces once per prompt bucket.
+
+- **Completion path** — a slot is freed the step its request finishes; stale
+  K/V are masked by the per-slot position, so no zeroing is needed and the
+  slot is immediately reusable.
+
 - **One jitted decode step** — the whole slot array decodes in a single jitted
-  function with *fixed* shapes: ``max_slots`` rows, ``max_seq`` cache, and a
-  per-slot fused C2C prefix padded to a fixed ``max_prefix`` bucket whose
-  absent/inactive positions carry ``PREFIX_MASK_BIAS`` (zero attention mass).
-  The step therefore traces exactly once, no matter how the standalone /
-  C2C-fused / T2T request mix changes (``stats["decode_traces"]`` proves it).
+  function with *fixed* shapes: ``max_slots`` rows, ``max_seq`` cache (paged:
+  the gathered page view), and a per-slot fused C2C prefix padded to a fixed
+  ``max_prefix`` bucket whose absent/inactive positions carry
+  ``PREFIX_MASK_BIAS`` (zero attention mass). The step therefore traces
+  exactly once, no matter how the standalone / C2C-fused / T2T request mix
+  changes (``stats["decode_traces"]`` proves it).
 
 Prefill is bucketed separately (``prompt_bucket``): right-padding a prompt is
 exact for *full-attention* layers (causality — pad keys sit after every real
@@ -30,7 +50,8 @@ query, and the per-slot position mask hides them). It is NOT exact for
 sliding-window ring buffers (pad writes can wrap the ring and evict real
 in-window entries) or recurrent/SSD state (carried left-to-right through
 pads), so models with swa/rec/ssd layers prefill at the exact prompt length
-instead.
+instead. Paged mode likewise requires a pure full-attention model (stateful
+layers have O(1)-per-slot cost — nothing to page).
 
 Quickstart::
 
@@ -39,9 +60,15 @@ Quickstart::
     rid_a = eng.submit(prompt_a, max_new_tokens=16)               # standalone
     rid_b = eng.submit(prompt_b, max_new_tokens=8, fused=prefix)  # C2C-fused
     done = eng.drain()      # or eng.step() per tick for online serving
+
+    # paged: 32 slots over a 16-slot-equivalent page pool
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=32, max_seq=128,
+                                   paged=True, page_size=16,
+                                   num_pages=16 * 128 // 16)
 """
 from __future__ import annotations
 
+import math
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -52,19 +79,19 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
-from repro.models import cache as C
+from repro.models.cache import FusedPrefix, KVCache, SlotTable
 
 
 @dataclass
 class EngineRequest:
-    """One queued request. ``fused`` is an already-projected C2C prefix stack
-    {"k","v"[,"bias"]} of shape (n_attn_rx, 1, Hkv, Sf, hd) with Sf <= the
-    engine's ``max_prefix`` (see core/c2c.fused_prefix)."""
+    """One queued request. ``fused`` is an already-projected C2C prefix
+    (models/cache.FusedPrefix, shapes (n_attn_rx, 1, Hkv, Sf, hd)) with
+    Sf <= the engine's ``max_prefix`` (see core/c2c.fused_prefix)."""
 
     rid: int
     prompt: jax.Array  # (1, S) int32
     max_new_tokens: int
-    fused: Optional[dict] = None
+    fused: Optional[FusedPrefix] = None
     protocol: str = "standalone"
     meta: dict = field(default_factory=dict)
 
@@ -90,27 +117,47 @@ class ContinuousBatchingEngine:
         max_prefix: int = 0,
         cache_dtype=jnp.float32,
         prompt_bucket: Optional[int] = None,
+        admit_batch: int = 1,
+        paged: bool = False,
+        page_size: int = 16,
+        num_pages: Optional[int] = None,
     ):
         if max_prefix and not cfg.attention_layers:
             raise ValueError("fused prefixes need attention layers (C2C medium)")
+        if admit_batch < 1:
+            raise ValueError("admit_batch must be >= 1")
         self.cfg, self.params = cfg, params
         self.max_slots, self.max_seq = max_slots, max_seq
         self.max_prefix = max_prefix
         self.cache_dtype = cache_dtype
+        self.admit_batch = admit_batch
+        self.paged = paged
+        self.page_size = page_size
         # exact-length prefill unless the model is pure full-attention:
         # right-padded prompts pollute rec/ssd left-to-right state, and pad
         # writes can wrap a swa ring buffer and evict real in-window entries
         pad_safe = all(k == "attn" for k in cfg.block_pattern)
         self.prompt_bucket = prompt_bucket if pad_safe else None
 
-        self._table = C.init_slot_cache(cfg, max_slots, max_seq, cache_dtype)
+        if paged:
+            # page pool + per-slot page maps; allocation policy lives here
+            # (host), scatter/gather in models/cache.SlotTable (device)
+            self._table = SlotTable.init(cfg, max_slots, max_seq, cache_dtype,
+                                         page_size=page_size,
+                                         num_pages=num_pages)
+            self._free_pages: List[int] = list(range(self._table.num_pages))
+            self._slot_pages: Dict[int, List[int]] = {}
+        else:
+            self._table = KVCache.init_slots(cfg, max_slots, max_seq,
+                                             cache_dtype)
         self._tok = jnp.zeros((max_slots,), jnp.int32)
-        self._fused = (C.empty_fused_stack(cfg, max_slots, max_prefix, cache_dtype)
+        self._fused = (FusedPrefix.empty(cfg, max_slots, max_prefix,
+                                         cache_dtype)
                        if max_prefix else None)
         # shared all-masked prefix for standalone admissions (identical every
         # time — build once, not per request)
-        self._empty_req_fused = (C.empty_fused_stack(cfg, 1, max_prefix,
-                                                     cache_dtype)
+        self._empty_req_fused = (FusedPrefix.empty(cfg, 1, max_prefix,
+                                                   cache_dtype)
                                  if max_prefix else None)
         self._active = np.zeros(max_slots, bool)
         self._slot_rid: List[Optional[int]] = [None] * max_slots
@@ -121,27 +168,43 @@ class ContinuousBatchingEngine:
         self._ready: List[Completion] = []  # completed at admission (1-token)
         self._next_rid = 0
         self.stats = {"decode_traces": 0, "prefill_traces": 0, "admitted": 0,
-                      "completed": 0, "decode_steps": 0}
+                      "completed": 0, "decode_steps": 0, "admit_batches": 0,
+                      "peak_active": 0}
         self._decode = jax.jit(self._make_decode())
         self._prefill = jax.jit(self._make_prefill())
-        self._insert = jax.jit(C.cache_insert_slot)
-        self._insert_fused = jax.jit(C.fused_stack_insert_slot)
+        if paged:
+            self._insert = jax.jit(
+                lambda table, slot, req, length, pages, bi:
+                table.insert_slot(slot, req, length, pages, batch_index=bi))
+        else:
+            self._insert = jax.jit(
+                lambda table, slot, req, length, bi:
+                table.insert_slot(slot, req, length, batch_index=bi))
+        self._insert_fused = jax.jit(
+            lambda table, slot, req: table.insert_slot(slot, req))
 
     # ------------------------------------------------------------- jitted fns
     def _make_decode(self):
-        cfg = self.cfg
+        cfg, paged = self.cfg, self.paged
 
         def decode(params, table, tok, fused, active):
             self.stats["decode_traces"] += 1  # trace-time: counts compilations
-            ek = C.extra_kv_layers(cfg, fused) if fused is not None else None
-            logits, new_table = T.decode_step(cfg, params, table, tok,
-                                              extra_kv=ek)
+            view = table.dense_view() if paged else table
+            ek = fused.to_extra_kv(cfg) if fused is not None else None
+            logits, new_view = T.decode_step(cfg, params, view, tok,
+                                             extra_kv=ek)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             nxt = jnp.where(active, nxt, tok)
             # hold inactive slots in place so their position never grows past
             # max_seq while they wait for the next occupant
-            pos = jnp.where(active, new_table["pos"], table["pos"])
-            return nxt, {"pos": pos, "layers": new_table["layers"]}
+            pos = jnp.where(active, new_view.pos, table.pos)
+            if paged:
+                # scatter this step's tokens back to their physical pages;
+                # unmapped (inactive) slots are dropped by the scatter
+                new_table = table.commit(new_view, pos)
+            else:
+                new_table = KVCache(pos=pos, layers=new_view.layers)
+            return nxt, new_table
 
         return decode
 
@@ -150,7 +213,7 @@ class ContinuousBatchingEngine:
 
         def prefill(params, tokens, fused):
             self.stats["prefill_traces"] += 1
-            ek = C.extra_kv_layers(cfg, fused) if fused is not None else None
+            ek = fused.to_extra_kv(cfg) if fused is not None else None
             logits, cache = T.prefill(cfg, params, tokens, max_seq=max_seq,
                                       cache_dtype=dtype, extra_kv=ek)
             return logits, cache
@@ -159,7 +222,7 @@ class ContinuousBatchingEngine:
 
     # ------------------------------------------------------------- submission
     def submit(self, prompt, max_new_tokens: int, *,
-               fused: Optional[dict] = None, protocol: Optional[str] = None,
+               fused=None, protocol: Optional[str] = None,
                meta: Optional[dict] = None) -> int:
         """Queue a request; returns its rid. Joins the running batch at the
         next step() with a free slot."""
@@ -174,11 +237,17 @@ class ContinuousBatchingEngine:
         if S + max_new_tokens > self.max_seq:
             raise ValueError(f"prompt({S}) + gen({max_new_tokens}) exceeds "
                              f"max_seq={self.max_seq}")
+        if self.paged and max_new_tokens > 1:  # 1-token: answered at prefill
+            need = math.ceil((S + max_new_tokens - 1) / self.page_size)
+            if need > self._table.num_pages:
+                raise ValueError(
+                    f"request needs {need} pages but the pool only has "
+                    f"{self._table.num_pages}; it could never be admitted")
         if fused is not None:
             if not self.max_prefix:
                 raise ValueError("engine built with max_prefix=0 cannot take "
                                  "fused prefixes")
-            fused = C.pad_fused_stack(fused, self.max_prefix)
+            fused = FusedPrefix.ensure(fused).pad(self.max_prefix)
         proto = protocol or ("c2c" if fused is not None else "standalone")
         rid = self._next_rid
         self._next_rid += 1
@@ -199,34 +268,111 @@ class ContinuousBatchingEngine:
     def _free_slots(self) -> List[int]:
         return [i for i in range(self.max_slots) if not self._active[i]]
 
-    def _admit(self) -> None:
-        free = deque(self._free_slots())
-        while self._queue and free:
-            req = self._queue.popleft()
-            S = int(req.prompt.shape[1])
-            Sb = self._bucket_len(S)
-            toks = jnp.pad(req.prompt, ((0, 0), (0, Sb - S)))
-            fused = req.fused
-            if self.max_prefix and fused is None:
-                # standalone rides the same prefill trace as fused requests
-                fused = self._empty_req_fused
-            logits, cache1 = self._prefill(self.params, toks, fused)
-            first = jnp.argmax(logits[0, S - 1]).astype(jnp.int32)
-            self._outputs[req.rid] = [first]
-            self.stats["admitted"] += 1
-            if req.max_new_tokens == 1:  # done at prefill: never takes a slot
-                self._ready.append(self._finish(req.rid))
+    def _pages_needed(self, req: EngineRequest) -> int:
+        # Highest position ever *written* is S + max_new - 2 (the final
+        # generated token is emitted, never cached), so pages must cover
+        # S + max_new - 1 slots. Bucket padding beyond S never becomes
+        # visible (the position mask hides [S, ·), and decode rewrites each
+        # index — in the gathered view, before attention — the step it first
+        # would be exposed), so unallocated tail pages are never read.
+        S = int(req.prompt.shape[1])
+        return math.ceil((S + req.max_new_tokens - 1) / self.page_size)
+
+    def _take_admission_batch(self, n_free: int) -> List[EngineRequest]:
+        """Pop up to ``admit_batch`` same-bucket-length requests that fit the
+        free slots (and, paged, the free page pool). FIFO at the head: if the
+        front request cannot be placed, nothing is admitted this step."""
+        if not self._queue:
+            return []
+        head = self._queue[0]
+        Sb = self._bucket_len(int(head.prompt.shape[1]))
+        pages_left = len(self._free_pages) if self.paged else None
+        batch: List[EngineRequest] = []
+        taken_idx: List[int] = []
+        for i, req in enumerate(self._queue):
+            if len(batch) == self.admit_batch:
+                break
+            if self._bucket_len(int(req.prompt.shape[1])) != Sb:
+                if i == 0:
+                    return []  # unreachable (head defines Sb), kept for shape
                 continue
-            slot = free.popleft()
-            self._table = self._insert(self._table, jnp.int32(slot), cache1,
-                                       jnp.int32(S))
-            self._tok = self._tok.at[slot].set(first)
-            if self._fused is not None:
-                self._fused = self._insert_fused(self._fused, jnp.int32(slot),
-                                                 fused)
-            self._active[slot] = True
-            self._slot_rid[slot] = req.rid
-            self._remaining[slot] = req.max_new_tokens - 1
+            takes_slot = req.max_new_tokens > 1
+            if takes_slot and n_free - sum(
+                    r.max_new_tokens > 1 for r in batch) <= 0:
+                break
+            if self.paged and takes_slot:
+                need = self._pages_needed(req)
+                if need > pages_left:
+                    if i == 0:
+                        return []  # head-of-line blocked on pages: wait
+                    continue
+                pages_left -= need
+            batch.append(req)
+            taken_idx.append(i)
+        for i in reversed(taken_idx):
+            del self._queue[i]
+        return batch
+
+    def _admit(self) -> None:
+        while self._queue:
+            free = deque(self._free_slots())
+            if not free:
+                break
+            batch = self._take_admission_batch(len(free))
+            if not batch:
+                break
+            Sb = self._bucket_len(int(batch[0].prompt.shape[1]))
+            B = self.admit_batch
+            toks = jnp.concatenate(
+                [jnp.pad(r.prompt, ((0, 0), (0, Sb - r.prompt.shape[1])))
+                 for r in batch]
+                + [jnp.zeros((B - len(batch), Sb), jnp.int32)], axis=0)
+            fused_b = None
+            if self.max_prefix:
+                # standalone members ride the same prefill trace as fused ones
+                per_req = [r.fused if r.fused is not None
+                           else self._empty_req_fused for r in batch]
+                per_req += [self._empty_req_fused] * (B - len(batch))
+                fused_b = FusedPrefix(
+                    k=jnp.concatenate([f.k for f in per_req], axis=1),
+                    v=jnp.concatenate([f.v for f in per_req], axis=1),
+                    bias=jnp.concatenate([f.bias for f in per_req], axis=1))
+            logits, cache_b = self._prefill(self.params, toks, fused_b)
+            self.stats["admit_batches"] += 1
+            for b, req in enumerate(batch):
+                S = int(req.prompt.shape[1])
+                first = jnp.argmax(logits[b, S - 1]).astype(jnp.int32)
+                self._outputs[req.rid] = [first]
+                self.stats["admitted"] += 1
+                if req.max_new_tokens == 1:  # done at prefill: no slot taken
+                    self._ready.append(self._finish(req.rid))
+                    continue
+                slot = free.popleft()
+                if self.paged:
+                    need = self._pages_needed(req)
+                    pages = [self._free_pages.pop() for _ in range(need)]
+                    self._slot_pages[slot] = pages
+                    page_ids = np.full((self._table.pages_per_slot,),
+                                       self._table.invalid_page, np.int32)
+                    page_ids[:need] = pages
+                    self._table = self._insert(
+                        self._table, jnp.int32(slot), cache_b, jnp.int32(S),
+                        jnp.asarray(page_ids), jnp.int32(b))
+                else:
+                    self._table = self._insert(
+                        self._table, jnp.int32(slot), cache_b, jnp.int32(S),
+                        jnp.int32(b))
+                self._tok = self._tok.at[slot].set(first)
+                if self._fused is not None:
+                    req_fused = (req.fused if req.fused is not None
+                                 else self._empty_req_fused)
+                    self._fused = self._insert_fused(
+                        self._fused, jnp.int32(slot), req_fused)
+                self._active[slot] = True
+                self._slot_rid[slot] = req.rid
+                self._remaining[slot] = req.max_new_tokens - 1
+            self.stats["peak_active"] = max(self.stats["peak_active"],
+                                            int(self._active.sum()))
 
     # ------------------------------------------------------------- completion
     def _finish(self, rid: int) -> Completion:
@@ -234,6 +380,11 @@ class ContinuousBatchingEngine:
         toks = np.asarray(jnp.stack(self._outputs.pop(rid)), np.int32)
         self.stats["completed"] += 1
         return Completion(rid, toks, req.protocol, req.meta)
+
+    def _evict(self, slot: int) -> None:
+        self._table = self._table.evict_slot(slot)
+        if self.paged:
+            self._free_pages.extend(self._slot_pages.pop(slot, []))
 
     # ------------------------------------------------------------------ step
     def step(self) -> List[Completion]:
@@ -255,7 +406,7 @@ class ContinuousBatchingEngine:
             if self._remaining[s] == 0:
                 self._active[s] = False
                 self._slot_rid[s] = None
-                self._table = C.cache_evict_slot(self._table, int(s))
+                self._evict(int(s))
                 done.append(self._finish(rid))
         return done
 
@@ -277,3 +428,12 @@ class ContinuousBatchingEngine:
     @property
     def num_queued(self) -> int:
         return len(self._queue)
+
+    @property
+    def kv_table_bytes(self) -> int:
+        """HBM held by the slot table's K/V payload (the capacity-vs-budget
+        bench metric: dense = slots × max_seq rows; paged = the page pool).
+        Excludes the int32 bookkeeping (pos / page map — KBs, not MBs)."""
+        from repro.models.cache import tree_bytes
+
+        return tree_bytes(self._table.layers)

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
-from repro.models.cache import extra_kv_layers
+from repro.models.cache import FusedPrefix
 
 
 def make_serve_step(cfg: ModelConfig, *, window_override: int = 0,
@@ -37,8 +37,8 @@ def make_serve_prefill(cfg: ModelConfig, max_seq: int, *,
 def make_fedrefine_serve_step(cfg_rx: ModelConfig):
     """Decode step with a fused transmitter prefix (the C2C serving hot path)."""
     def serve_step(params, cache, token, fused):
-        return T.decode_step(cfg_rx, params, cache, token,
-                             extra_kv=extra_kv_layers(cfg_rx, fused))
+        ek = FusedPrefix.ensure(fused).to_extra_kv(cfg_rx)
+        return T.decode_step(cfg_rx, params, cache, token, extra_kv=ek)
     return serve_step
 
 
@@ -60,7 +60,7 @@ class BatchedServer:
         assert B <= self.max_batch and S + gen_steps <= self.max_seq
         if fused is not None:
             step = jax.jit(make_fedrefine_serve_step(self.cfg))
-            ek = extra_kv_layers(self.cfg, fused)
+            ek = FusedPrefix.ensure(fused).to_extra_kv(self.cfg)
             logits, cache = T.prefill(self.cfg, self.params, prompts,
                                       max_seq=self.max_seq,
                                       cache_dtype=jnp.float32, extra_kv=ek)

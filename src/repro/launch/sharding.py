@@ -39,6 +39,8 @@ def _path_str(path) -> str:
             parts.append(str(p.key))
         elif hasattr(p, "idx"):
             parts.append(str(p.idx))
+        elif hasattr(p, "name"):  # GetAttrKey (registered dataclass pytrees)
+            parts.append(str(p.name))
         else:
             parts.append(str(p))
     return "/".join(parts)
@@ -199,7 +201,7 @@ def opt_pspecs(param_specs, opt_state, mesh: Optional[Mesh] = None):
 
 
 def cache_pspecs(cfg: ModelConfig, cache, mesh: Mesh, batch: int):
-    """Specs for a decode cache pytree (init_cache structure)."""
+    """Specs for a decode cache pytree (models/cache.KVCache structure)."""
     msize = axis_size(mesh, "model")
     baxes = batch_axes(mesh)
     bsz = 1

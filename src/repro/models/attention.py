@@ -6,6 +6,12 @@ One implementation serves every assigned family:
   - decode paths attend over a cache, optionally the *concatenation* of the
     receiver's own cache with fused transmitter caches (the paper's Eq. 1/4) —
     ``attend`` is deliberately cache-layout agnostic so core/c2c.py can reuse it.
+
+Layer-local contract: ``extra_kv`` here is one *per-layer slice* of a
+``models/cache.FusedPrefix`` (a {"k","v"[,"bias"]} dict produced by
+``FusedPrefix.to_extra_kv``) — this module never sees the whole typed prefix,
+so it works unchanged for dense rows, paged gather views, and any channel
+codec upstream.
 """
 from __future__ import annotations
 

@@ -1,31 +1,71 @@
-"""Decode-state pytrees: KV caches (full + sliding-window ring) and recurrent states.
+"""Typed decode-state pytrees: KV caches, communicated stacks, fused prefixes,
+and the paged slot table.
 
-The cache is the *medium of federation* in this paper (C2C communicates KV caches),
-so its layout is a first-class design object:
+The cache is the *medium of federation* in this paper (C2C communicates KV
+caches), so its layout is a first-class design object. This module defines the
+four typed pytrees the whole stack is built on (each registered with
+``jax.tree_util`` so it jits/vmaps/scans like any dict, but with a closed,
+documented field set):
+
+- :class:`KVCache`   — a model's full decode state (``pos`` + per-layer
+  entries). Subsumes the old free functions ``init_cache``/``attn_kv_stack``/
+  ``cache_insert_slot``/``cache_evict_slot``/``init_slot_cache``.
+- :class:`KVStack`   — the tensor C2C communicates: all attention-layer k/v
+  collected into one (n_attn, B, Hkv, S, hd) stack. Subsumes ``concat_kv``.
+- :class:`FusedPrefix` — a projected (receiver-space) stack plus its
+  attention-logit bias. Subsumes ``empty_fused_stack``/``pad_fused_stack``/
+  ``fused_stack_insert_slot``/``extra_kv_layers``.
+- :class:`SlotTable` — a *paged* engine slot table: fixed-size KV pages in a
+  shared pool plus a per-slot page map, so concurrent slot capacity is bound
+  by pages actually used, not by ``slots × max_seq`` padding.
+
+Per-layer entry layouts (unchanged from the dict era — entries stay plain
+dicts because they are heterogeneous by block kind):
 
 - ``full`` attention layers: k/v of shape (batch, kv_heads, max_seq, head_dim);
   valid entries are positions [0, pos).
-- ``swa`` layers: ring buffer of length ``window`` — slot = position % window, plus a
-  per-slot ``slot_pos`` array so masking survives wrap-around. This is what makes
-  long_500k (524 288-token decode) memory-feasible for windowed layers.
-- ``rec`` layers (RG-LRU): hidden state (batch, width) + conv tail (batch, K-1, width).
-- ``ssd`` layers (Mamba-2): state (batch, nheads, head_dim, d_state) + conv tail.
+- ``swa`` layers: ring buffer of length ``window`` — slot = position % window,
+  plus a per-slot ``slot_pos`` array so masking survives wrap-around.
+- ``rec`` layers (RG-LRU): hidden state (batch, width) + conv tail.
+- ``ssd`` layers (Mamba-2): state (batch, nheads, head_dim, d_state) + conv.
 
-A model cache is ``{"pos": int32[], "layers": [per-pattern-position stacked pytrees]}``
-— stacked along a leading cycle axis to match the scan-over-layers execution
-(see transformer.py).
+Entries are stacked along a leading cycle axis to match the scan-over-layers
+execution (see transformer.py).
 """
 from __future__ import annotations
 
-from typing import Optional
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 
+# Additive attention-logit bias that masks an absent/inactive fused-prefix key.
+# exp(PREFIX_MASK_BIAS - m) underflows to exactly 0 in fp32 softmax, so a fully
+# masked prefix is *identical* to decoding with no prefix at all — the property
+# that lets launch/engine.py keep one fixed-shape fused bucket per slot.
+PREFIX_MASK_BIAS = -1e30
 
-# -------------------------------------------------------------------- builders
+
+def pytree_dataclass(data_fields: Sequence[str], meta_fields: Sequence[str] = ()):
+    """Register a dataclass as a jax pytree (data vs. static fields)."""
+    return partial(jax.tree_util.register_dataclass,
+                   data_fields=list(data_fields),
+                   meta_fields=list(meta_fields))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of every array leaf in ``tree`` (HBM/wire accounting)."""
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(tree)
+               if hasattr(leaf, "dtype"))
+
+
+# ------------------------------------------------------- per-layer builders
 
 
 def init_attn_kv(
@@ -50,7 +90,7 @@ def init_swa_kv(
 
 def init_rec_state(cycles: int, batch: int, width: int, conv_k: int, dtype) -> dict:
     return {
-        "h": jnp.zeros((cycles, batch, width), jnp.float32),  # recurrence kept fp32
+        "h": jnp.zeros((cycles, batch, width), jnp.float32),  # recurrence fp32
         "conv": jnp.zeros((cycles, batch, conv_k - 1, width), dtype),
     }
 
@@ -65,219 +105,533 @@ def init_ssd_state(
     }
 
 
-def init_cache(
-    cfg: ModelConfig,
-    batch: int,
-    max_seq: int,
-    dtype=jnp.bfloat16,
-    *,
-    window_override: Optional[int] = None,
-) -> dict:
-    """Build the full decode cache for ``cfg`` (see transformer.py layer grouping)."""
-    from repro.models.transformer import layer_grouping  # cycle structure
-
-    cycles, pattern, tail = layer_grouping(cfg)
-    hd = cfg.resolved_head_dim
-    layers = []
-    for pos, kind in enumerate(pattern + tail):
-        n = cycles if pos < len(pattern) else 1
-        if kind == "attn":
-            layers.append(init_attn_kv(n, batch, cfg.num_kv_heads, max_seq, hd, dtype))
-        elif kind == "swa":
-            w = min(window_override or cfg.sliding_window or cfg.long_context_window,
-                    max_seq)
-            layers.append(init_swa_kv(n, batch, cfg.num_kv_heads, w, hd, dtype))
-        elif kind == "rec":
-            width = cfg.rglru_width or cfg.d_model
-            layers.append(init_rec_state(n, batch, width, cfg.conv_kernel, dtype))
-        elif kind == "ssd":
-            conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
-            layers.append(
-                init_ssd_state(n, batch, cfg.ssm_nheads, cfg.ssm_head_dim,
-                               cfg.ssm_state, conv_dim, cfg.conv_kernel, dtype)
-            )
-        else:
-            raise ValueError(f"unknown layer kind {kind!r}")
-    return {"pos": jnp.zeros((), jnp.int32), "layers": layers}
-
-
-# ----------------------------------------------------------------- concat (C2C)
-
-
-def concat_kv(own: dict, fused: dict) -> dict:
-    """Sequence-wise concatenation ``C(F_ij, M_i) ∘ C(M_j)`` of Eq. 1/4.
-
-    Both operands are per-layer full-attention KV dicts with k/v of shape
-    (..., kv_heads, seq, head_dim); the fused (projected transmitter) cache is
-    *prepended*, matching the paper's decode equation where the receiver's own
-    running cache stays contiguous at the tail.
-    """
-    return {
-        "k": jnp.concatenate([fused["k"], own["k"]], axis=-2),
-        "v": jnp.concatenate([fused["v"], own["v"]], axis=-2),
-    }
-
-
-def attn_kv_stack(cfg: ModelConfig, cache: dict, length: int | None = None) -> dict:
-    """Collect all attention-layer k/v into one stack (n_attn, B, Hkv, S, hd).
-
-    This is the tensor C2C communicates: the transmitter exports it, the fuser
-    projects it, the receiver prepends it. Pattern positions + tail are
-    concatenated in layer order along the leading axis.
-    """
+def _grouping(cfg: ModelConfig):
     from repro.models.transformer import layer_grouping
 
-    cycles, pattern, tail = layer_grouping(cfg)
-    ks, vs = [], []
-    for i, kind in enumerate(pattern + tail):
-        if kind in ("attn", "swa"):
-            e = cache["layers"][i]
-            ks.append(e["k"])
-            vs.append(e["v"])
-    k = jnp.concatenate(ks, axis=0)
-    v = jnp.concatenate(vs, axis=0)
-    if length is not None:
-        k, v = k[..., :length, :], v[..., :length, :]
-    return {"k": k, "v": v}
+    return layer_grouping(cfg)
 
 
-def extra_kv_layers(cfg: ModelConfig, fused_stack: dict) -> list:
-    """Turn a fused stack (n_attn, B, Hkv, Sf, hd) into the per-position
-    ``extra_kv`` list that transformer.forward / decode_step consume."""
-    from repro.models.transformer import layer_grouping
-
-    cycles, pattern, tail = layer_grouping(cfg)
-    out = []
-    off = 0
-
-    def slice_at(o, n):
-        e = {"k": fused_stack["k"][o : o + n], "v": fused_stack["v"][o : o + n]}
-        if "bias" in fused_stack:
-            e["bias"] = fused_stack["bias"][o : o + n]
-        return e
-
-    for i, kind in enumerate(pattern):
-        if kind in ("attn", "swa"):
-            out.append(slice_at(off, cycles))
-            off += cycles
-        else:
-            out.append(None)
-    for kind in tail:
-        if kind in ("attn", "swa"):
-            out.append(slice_at(off, 1))
-            off += 1
-        else:
-            out.append(None)
-    return out
+# ----------------------------------------------------------------- KVStack
 
 
-# ------------------------------------------------------- slot table (engine)
+@pytree_dataclass(["k", "v"])
+@dataclass
+class KVStack:
+    """The communicated KV tensor: k/v of shape (n_attn, B, Hkv, S, hd).
 
-# Additive attention-logit bias that masks an absent/inactive fused-prefix key.
-# exp(PREFIX_MASK_BIAS - m) underflows to exactly 0 in fp32 softmax, so a fully
-# masked prefix is *identical* to decoding with no prefix at all — the property
-# that lets launch/engine.py keep one fixed-shape fused bucket per slot.
-PREFIX_MASK_BIAS = -1e30
+    This is what C2C ships over the wire: the transmitter exports it
+    (:meth:`KVCache.export_stack`), a channel encodes it (core/transport.py),
+    the fuser projects it, the receiver prepends it.
+    """
+
+    k: jax.Array
+    v: jax.Array
+
+    def __getitem__(self, key: str) -> jax.Array:  # legacy dict interop
+        return getattr(self, key)
+
+    @property
+    def seq_len(self) -> int:
+        return self.k.shape[-2]
+
+    @property
+    def nbytes(self) -> int:
+        return tree_bytes(self)
+
+    def astype(self, dtype) -> "KVStack":
+        return KVStack(self.k.astype(dtype), self.v.astype(dtype))
+
+    def slice_length(self, length: int) -> "KVStack":
+        return KVStack(self.k[..., :length, :], self.v[..., :length, :])
+
+    def prepend(self, fused: "KVStack") -> "KVStack":
+        """Sequence-wise concatenation ``C(F_ij, M_i) ∘ C(M_j)`` of Eq. 1/4:
+        the fused (projected transmitter) stack is *prepended*, matching the
+        paper's decode equation where the receiver's own running cache stays
+        contiguous at the tail."""
+        return KVStack(
+            k=jnp.concatenate([fused.k, self.k], axis=-2),
+            v=jnp.concatenate([fused.v, self.v], axis=-2),
+        )
+
+    @classmethod
+    def ensure(cls, obj) -> "KVStack":
+        if isinstance(obj, cls):
+            return obj
+        return cls(k=obj["k"], v=obj["v"])
 
 
-def init_slot_cache(
-    cfg: ModelConfig,
-    slots: int,
-    max_seq: int,
-    dtype=jnp.bfloat16,
-    *,
-    window_override: Optional[int] = None,
-) -> dict:
-    """A decode cache whose batch axis is a *slot table*: ``pos`` is per-slot
-    (slots,) int32 so every slot decodes at its own position (continuous
-    batching — launch/engine.py). Consumed by transformer.decode_step's
-    vector-``pos`` path."""
-    c = init_cache(cfg, slots, max_seq, dtype, window_override=window_override)
-    c["pos"] = jnp.zeros((slots,), jnp.int32)
-    return c
+# -------------------------------------------------------------- FusedPrefix
+
+
+@pytree_dataclass(["k", "v", "bias"])
+@dataclass
+class FusedPrefix:
+    """A receiver-space fused prefix: k/v (n_rx, B, Hkv, Sf, hd) plus a
+    per-layer, per-position attention-logit ``bias`` (n_rx, B, Sf) fp32.
+
+    The bias carries the fuser/gating attention-mass gates AND the padding
+    mask: a position with bias :data:`PREFIX_MASK_BIAS` contributes exactly
+    zero attention mass, which is what keeps the engine's fixed-bucket decode
+    step exact for any request mix."""
+
+    k: jax.Array
+    v: jax.Array
+    bias: Optional[jax.Array] = None
+
+    def __getitem__(self, key: str) -> jax.Array:  # legacy dict interop
+        return getattr(self, key)
+
+    @property
+    def seq_len(self) -> int:
+        return self.k.shape[-2]
+
+    @property
+    def nbytes(self) -> int:
+        return tree_bytes(self)
+
+    def with_bias(self, bias: jax.Array) -> "FusedPrefix":
+        return dataclasses.replace(self, bias=bias)
+
+    def _bias_or_zero(self) -> jax.Array:
+        if self.bias is not None:
+            return self.bias.astype(jnp.float32)
+        n, B, _, S, _ = self.k.shape
+        return jnp.zeros((n, B, S), jnp.float32)
+
+    @classmethod
+    def ensure(cls, obj) -> "FusedPrefix":
+        if isinstance(obj, cls):
+            return obj
+        if isinstance(obj, KVStack):
+            return cls(k=obj.k, v=obj.v)
+        return cls(k=obj["k"], v=obj["v"], bias=obj.get("bias"))
+
+    # ----------------------------------------------------------- builders
+    @classmethod
+    def empty(cls, cfg: ModelConfig, batch: int, max_prefix: int,
+              dtype=jnp.float32) -> "FusedPrefix":
+        """All-masked prefix: k/v zeros and bias PREFIX_MASK_BIAS everywhere.
+        Decoding against it equals standalone decoding exactly."""
+        n = len(cfg.attention_layers)
+        hd = cfg.resolved_head_dim
+        shape = (n, batch, cfg.num_kv_heads, max_prefix, hd)
+        return cls(
+            k=jnp.zeros(shape, dtype),
+            v=jnp.zeros(shape, dtype),
+            bias=jnp.full((n, batch, max_prefix), PREFIX_MASK_BIAS, jnp.float32),
+        )
+
+    @classmethod
+    def concat(cls, prefixes: Sequence["FusedPrefix"]) -> "FusedPrefix":
+        """Eq. 4's sequence-wise concatenation C(F_{j1 i}) ∘ … ∘ C(F_{js i})."""
+        ps = [cls.ensure(p) for p in prefixes]
+        return cls(
+            k=jnp.concatenate([p.k for p in ps], axis=-2),
+            v=jnp.concatenate([p.v for p in ps], axis=-2),
+            bias=jnp.concatenate([p._bias_or_zero() for p in ps], axis=-1),
+        )
+
+    # --------------------------------------------------------- transforms
+    def pad(self, max_prefix: int) -> "FusedPrefix":
+        """Right-pad to the fixed ``max_prefix`` bucket; padded positions get
+        bias PREFIX_MASK_BIAS (zero attention mass). This is what keeps the
+        engine's decode step shape-stable across request mixes."""
+        n, B, H, S, hd = self.k.shape
+        if S > max_prefix:
+            raise ValueError(
+                f"fused prefix length {S} exceeds max_prefix {max_prefix}")
+        pad = max_prefix - S
+        return FusedPrefix(
+            k=jnp.pad(self.k, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
+            v=jnp.pad(self.v, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
+            bias=jnp.pad(self._bias_or_zero(), ((0, 0), (0, 0), (0, pad)),
+                         constant_values=PREFIX_MASK_BIAS),
+        )
+
+    def insert_slot(self, slot, req: "FusedPrefix") -> "FusedPrefix":
+        """Scatter a single request's padded prefix (n, 1, Hkv, P, hd) into
+        batch index ``slot`` of a per-slot fused table."""
+        slot = jnp.asarray(slot, jnp.int32)
+        z = jnp.zeros((), jnp.int32)
+        req = FusedPrefix.ensure(req)
+        return FusedPrefix(
+            k=jax.lax.dynamic_update_slice(
+                self.k, req.k.astype(self.k.dtype), (z, slot, z, z, z)),
+            v=jax.lax.dynamic_update_slice(
+                self.v, req.v.astype(self.v.dtype), (z, slot, z, z, z)),
+            bias=jax.lax.dynamic_update_slice(
+                self._bias_or_zero(), req._bias_or_zero(), (z, slot, z)),
+        )
+
+    def to_extra_kv(self, cfg: ModelConfig) -> list:
+        """Slice into the per-position ``extra_kv`` list that
+        transformer.forward / decode_step consume (one stacked entry per
+        pattern position, then tail positions; non-attention positions None).
+        """
+        cycles, pattern, tail = _grouping(cfg)
+        bias = self.bias
+        out: List[Optional[dict]] = []
+        off = 0
+
+        def slice_at(o, n):
+            e = {"k": self.k[o: o + n], "v": self.v[o: o + n]}
+            if bias is not None:
+                e["bias"] = bias[o: o + n]
+            return e
+
+        for kind in pattern:
+            if kind in ("attn", "swa"):
+                out.append(slice_at(off, cycles))
+                off += cycles
+            else:
+                out.append(None)
+        for kind in tail:
+            if kind in ("attn", "swa"):
+                out.append(slice_at(off, 1))
+                off += 1
+            else:
+                out.append(None)
+        return out
+
+
+def extra_kv_layers(cfg: ModelConfig, fused) -> list:
+    """Back-compat shim: ``FusedPrefix.ensure(fused).to_extra_kv(cfg)``."""
+    return FusedPrefix.ensure(fused).to_extra_kv(cfg)
+
+
+# ------------------------------------------------------------------ KVCache
 
 
 def _insert_slot_leaf(table_leaf: jax.Array, req_leaf: jax.Array,
-                      slot: jax.Array) -> jax.Array:
-    # every cache leaf is (cycles, batch, ...): scatter the request's batch=1
-    # block at batch index ``slot``
+                      slot: jax.Array, batch_index: jax.Array) -> jax.Array:
+    # every cache leaf is (cycles, batch, ...): scatter the request's block at
+    # batch index ``batch_index`` of ``req_leaf`` into row ``slot``
+    blk = jax.lax.dynamic_slice_in_dim(req_leaf, batch_index, 1, axis=1)
     start = (jnp.zeros((), jnp.int32), slot) + tuple(
         jnp.zeros((), jnp.int32) for _ in range(table_leaf.ndim - 2))
     return jax.lax.dynamic_update_slice(
-        table_leaf, req_leaf.astype(table_leaf.dtype), start)
+        table_leaf, blk.astype(table_leaf.dtype), start)
 
 
-def cache_insert_slot(table: dict, slot: jax.Array, req: dict,
-                      length: jax.Array) -> dict:
-    """Insert a single-request cache (batch 1, same ``max_seq``) into slot
-    ``slot`` of a slot-table cache and set that slot's position to ``length``.
+@pytree_dataclass(["pos", "layers"])
+@dataclass
+class KVCache:
+    """A model's decode state: ``pos`` (scalar, or per-slot (B,) vector for
+    continuous batching) + per-pattern-position stacked layer entries."""
 
-    Stale K/V beyond ``length`` (from a previous occupant) never need zeroing:
-    the per-slot position mask hides them, and decode overwrites each index
-    before it first becomes visible."""
-    slot = jnp.asarray(slot, jnp.int32)
-    layers = [
-        jax.tree.map(lambda t, r: _insert_slot_leaf(t, r, slot), tl, rl)
-        for tl, rl in zip(table["layers"], req["layers"])
-    ]
-    pos = table["pos"].at[slot].set(jnp.asarray(length, jnp.int32))
-    return {"pos": pos, "layers": layers}
+    pos: jax.Array
+    layers: Tuple
+
+    def __getitem__(self, key: str):  # legacy dict interop
+        return getattr(self, key)
+
+    @property
+    def nbytes(self) -> int:
+        return tree_bytes(self)
+
+    def with_pos(self, pos) -> "KVCache":
+        return KVCache(pos=jnp.asarray(pos, jnp.int32), layers=self.layers)
+
+    @classmethod
+    def ensure(cls, obj) -> "KVCache":
+        if isinstance(obj, cls):
+            return obj
+        return cls(pos=obj["pos"], layers=tuple(obj["layers"]))
+
+    # ----------------------------------------------------------- builders
+    @classmethod
+    def init(
+        cls,
+        cfg: ModelConfig,
+        batch: int,
+        max_seq: int,
+        dtype=jnp.bfloat16,
+        *,
+        window_override: Optional[int] = None,
+    ) -> "KVCache":
+        """Build the full decode cache for ``cfg`` (transformer.py grouping)."""
+        cycles, pattern, tail = _grouping(cfg)
+        hd = cfg.resolved_head_dim
+        layers = []
+        for pos, kind in enumerate(pattern + tail):
+            n = cycles if pos < len(pattern) else 1
+            if kind == "attn":
+                layers.append(
+                    init_attn_kv(n, batch, cfg.num_kv_heads, max_seq, hd, dtype))
+            elif kind == "swa":
+                w = min(window_override or cfg.sliding_window
+                        or cfg.long_context_window, max_seq)
+                layers.append(
+                    init_swa_kv(n, batch, cfg.num_kv_heads, w, hd, dtype))
+            elif kind == "rec":
+                width = cfg.rglru_width or cfg.d_model
+                layers.append(
+                    init_rec_state(n, batch, width, cfg.conv_kernel, dtype))
+            elif kind == "ssd":
+                conv_dim = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+                layers.append(
+                    init_ssd_state(n, batch, cfg.ssm_nheads, cfg.ssm_head_dim,
+                                   cfg.ssm_state, conv_dim, cfg.conv_kernel,
+                                   dtype))
+            else:
+                raise ValueError(f"unknown layer kind {kind!r}")
+        return cls(pos=jnp.zeros((), jnp.int32), layers=tuple(layers))
+
+    @classmethod
+    def init_slots(
+        cls,
+        cfg: ModelConfig,
+        slots: int,
+        max_seq: int,
+        dtype=jnp.bfloat16,
+        *,
+        window_override: Optional[int] = None,
+    ) -> "KVCache":
+        """A decode cache whose batch axis is a *dense slot table*: ``pos`` is
+        per-slot (slots,) int32 so every slot decodes at its own position
+        (continuous batching — launch/engine.py; the paged alternative is
+        :class:`SlotTable`). Consumed by transformer.decode_step's
+        vector-``pos`` path."""
+        c = cls.init(cfg, slots, max_seq, dtype, window_override=window_override)
+        return c.with_pos(jnp.zeros((slots,), jnp.int32))
+
+    # ------------------------------------------------------------- export
+    def export_stack(self, cfg: ModelConfig,
+                     length: Optional[int] = None) -> KVStack:
+        """Collect all attention-layer k/v into one (n_attn, B, Hkv, S, hd)
+        stack — the tensor C2C communicates. Pattern positions + tail are
+        concatenated in layer order along the leading axis."""
+        cycles, pattern, tail = _grouping(cfg)
+        ks, vs = [], []
+        for i, kind in enumerate(pattern + tail):
+            if kind in ("attn", "swa"):
+                e = self.layers[i]
+                ks.append(e["k"])
+                vs.append(e["v"])
+        stack = KVStack(k=jnp.concatenate(ks, axis=0),
+                        v=jnp.concatenate(vs, axis=0))
+        if length is not None:
+            stack = stack.slice_length(length)
+        return stack
+
+    # ------------------------------------------------- dense slot lifecycle
+    def insert_slot(self, slot, req: "KVCache", length, *,
+                    batch_index=0) -> "KVCache":
+        """Insert one request of a (possibly batched) prefill cache into slot
+        ``slot`` and set that slot's position to ``length``.
+
+        Stale K/V beyond ``length`` (from a previous occupant) never need
+        zeroing: the per-slot position mask hides them, and decode overwrites
+        each index before it first becomes visible."""
+        slot = jnp.asarray(slot, jnp.int32)
+        bi = jnp.asarray(batch_index, jnp.int32)
+        req = KVCache.ensure(req)
+        layers = tuple(
+            jax.tree.map(lambda t, r: _insert_slot_leaf(t, r, slot, bi), tl, rl)
+            for tl, rl in zip(self.layers, req.layers)
+        )
+        pos = self.pos.at[slot].set(jnp.asarray(length, jnp.int32))
+        return KVCache(pos=pos, layers=layers)
+
+    def evict_slot(self, slot) -> "KVCache":
+        """Free a slot immediately: reset its position (stale K/V stay but are
+        masked — see insert_slot)."""
+        return self.with_pos(
+            self.pos.at[jnp.asarray(slot, jnp.int32)].set(0))
 
 
-def cache_evict_slot(table: dict, slot) -> dict:
-    """Free a slot immediately: reset its position (stale K/V stay but are
-    masked — see cache_insert_slot)."""
-    return {"pos": table["pos"].at[jnp.asarray(slot, jnp.int32)].set(0),
-            "layers": table["layers"]}
+# ---------------------------------------------------------------- SlotTable
 
 
-def empty_fused_stack(cfg: ModelConfig, batch: int, max_prefix: int,
-                      dtype=jnp.float32) -> dict:
-    """All-masked fused-prefix stack: k/v zeros (n_attn, batch, Hkv, max_prefix,
-    hd) and bias PREFIX_MASK_BIAS everywhere. Decoding against it equals
-    standalone decoding exactly."""
-    n = len(cfg.attention_layers)
-    hd = cfg.resolved_head_dim
-    shape = (n, batch, cfg.num_kv_heads, max_prefix, hd)
-    return {
-        "k": jnp.zeros(shape, dtype),
-        "v": jnp.zeros(shape, dtype),
-        "bias": jnp.full((n, batch, max_prefix), PREFIX_MASK_BIAS, jnp.float32),
-    }
+@pytree_dataclass(["pos", "page_map", "layers"], ["page_size"])
+@dataclass
+class SlotTable:
+    """Paged engine slot table: block/paged KV layout.
+
+    Instead of a dense (slots, max_seq) row per slot, attention K/V live in a
+    shared *page pool* of fixed-size pages — per layer entry,
+    k/v: (n, num_pages, Hkv, page_size, hd) — and each slot owns an ordered
+    ``page_map`` row (slots, pages_per_slot) of physical page ids. A slot's
+    HBM cost is the pages it actually needs (ceil(tokens/page_size)), so at a
+    fixed pool budget the table sustains far more concurrent slots than the
+    dense layout whenever requests are shorter than ``max_seq``.
+
+    ``INVALID_PAGE`` (== num_pages, an out-of-bounds id) marks unallocated
+    map entries: scatters through it are dropped and gathers clamp to an
+    arbitrary page whose content is hidden by the per-slot position mask —
+    exactly the mask that already hides a dense slot's stale K/V, so paged
+    decode is *byte-identical* to dense decode (engine_bench verifies).
+
+    Page allocation/free is host-side policy (launch/engine.py keeps the free
+    list); this class only does the device-side scatter/gather.
+    """
+
+    pos: jax.Array  # (slots,) int32
+    page_map: jax.Array  # (slots, pages_per_slot) int32 physical page ids
+    layers: Tuple  # per position: {"k","v"} pools (n, num_pages, Hkv, pg, hd)
+    page_size: int
+
+    @property
+    def num_slots(self) -> int:
+        return self.pos.shape[0]
+
+    @property
+    def pages_per_slot(self) -> int:
+        return self.page_map.shape[1]
+
+    @property
+    def num_pages(self) -> int:
+        return self.layers[0]["k"].shape[1]
+
+    @property
+    def view_seq(self) -> int:
+        """Per-slot logical sequence length of the gathered dense view."""
+        return self.pages_per_slot * self.page_size
+
+    @property
+    def invalid_page(self) -> int:
+        return self.num_pages
+
+    @property
+    def nbytes(self) -> int:
+        return tree_bytes(self)
+
+    @classmethod
+    def init(
+        cls,
+        cfg: ModelConfig,
+        slots: int,
+        max_seq: int,
+        dtype=jnp.bfloat16,
+        *,
+        page_size: int = 16,
+        num_pages: Optional[int] = None,
+    ) -> "SlotTable":
+        """Pool-backed slot table. Requires a pure full-attention model (ring
+        buffers and recurrent state have O(1)-per-slot cost and no paging
+        upside; they keep the dense layout)."""
+        if any(k != "attn" for k in cfg.block_pattern):
+            raise ValueError(
+                f"paged SlotTable requires a pure full-attention pattern; "
+                f"{cfg.name} has {cfg.block_pattern}")
+        if max_seq % page_size:
+            raise ValueError(f"max_seq={max_seq} not divisible by "
+                             f"page_size={page_size}")
+        pages_per_slot = max_seq // page_size
+        num_pages = num_pages if num_pages is not None else slots * pages_per_slot
+        cycles, pattern, tail = _grouping(cfg)
+        hd = cfg.resolved_head_dim
+        layers = []
+        for pos, _ in enumerate(pattern + tail):
+            n = cycles if pos < len(pattern) else 1
+            shape = (n, num_pages, cfg.num_kv_heads, page_size, hd)
+            layers.append({"k": jnp.zeros(shape, dtype),
+                           "v": jnp.zeros(shape, dtype)})
+        return cls(
+            pos=jnp.zeros((slots,), jnp.int32),
+            page_map=jnp.full((slots, pages_per_slot), num_pages, jnp.int32),
+            layers=tuple(layers),
+            page_size=page_size,
+        )
+
+    # ------------------------------------------------------------- views
+    def dense_view(self) -> KVCache:
+        """Gather each slot's pages into a contiguous per-slot cache
+        (n, slots, Hkv, view_seq, hd) — the layout transformer.decode_step
+        consumes. Unallocated pages clamp to an arbitrary pool page; the
+        per-slot position mask hides their content (exact-zero attention
+        mass), so the view decodes byte-identically to a dense table."""
+        pm = jnp.minimum(self.page_map, self.num_pages - 1)  # clamp sentinel
+        slots, pps = pm.shape
+
+        def gather(pool):
+            n, _, H, pg, hd = pool.shape
+            v = pool[:, pm]  # (n, slots, pps, Hkv, pg, hd)
+            v = v.transpose(0, 1, 3, 2, 4, 5)
+            return v.reshape(n, slots, H, pps * pg, hd)
+
+        layers = tuple({"k": gather(e["k"]), "v": gather(e["v"])}
+                       for e in self.layers)
+        return KVCache(pos=self.pos, layers=layers)
+
+    # --------------------------------------------------------- lifecycle
+    def insert_slot(self, slot, req: KVCache, length, page_ids,
+                    *, batch_index=0) -> "SlotTable":
+        """Insert one request of a prefill cache (row layout, seq length ==
+        ``view_seq``) into slot ``slot``: scatter its pages into the pool at
+        ``page_ids`` ((pages_per_slot,) int32, INVALID_PAGE-padded beyond the
+        allocated count) and point the slot's page map at them."""
+        slot = jnp.asarray(slot, jnp.int32)
+        bi = jnp.asarray(batch_index, jnp.int32)
+        page_ids = jnp.asarray(page_ids, jnp.int32)
+        req = KVCache.ensure(req)
+        pps, pg = self.pages_per_slot, self.page_size
+
+        def scatter(pool, row):
+            # row: (n, B, Hkv, view_seq, hd) -> request bi's pages
+            n, _, H, S, hd = row.shape
+            blk = jax.lax.dynamic_slice_in_dim(row, bi, 1, axis=1)[:, 0]
+            pages = blk.reshape(n, H, pps, pg, hd).transpose(0, 2, 1, 3, 4)
+            # scatter (n, pps, Hkv, pg, hd) at pool axis 1; INVALID ids drop
+            return pool.at[:, page_ids].set(pages.astype(pool.dtype),
+                                            mode="drop")
+
+        layers = tuple(
+            {"k": scatter(e["k"], r["k"]), "v": scatter(e["v"], r["v"])}
+            for e, r in zip(self.layers, req.layers)
+        )
+        return SlotTable(
+            pos=self.pos.at[slot].set(jnp.asarray(length, jnp.int32)),
+            page_map=self.page_map.at[slot].set(page_ids),
+            layers=layers,
+            page_size=self.page_size,
+        )
+
+    def evict_slot(self, slot) -> "SlotTable":
+        """Free a slot: reset its position and unmap its pages. (Returning the
+        physical pages to the free pool is the host-side allocator's job.)"""
+        slot = jnp.asarray(slot, jnp.int32)
+        return SlotTable(
+            pos=self.pos.at[slot].set(0),
+            page_map=self.page_map.at[slot].set(self.invalid_page),
+            layers=self.layers,
+            page_size=self.page_size,
+        )
+
+    def commit(self, new_view: KVCache, pos_out: jax.Array) -> "SlotTable":
+        """Fold one decode step back into the pool: decode_step wrote exactly
+        one token per slot (at the slot's pre-step position) into the gathered
+        dense view; scatter those tokens to their physical pages and adopt
+        ``pos_out`` (the engine's activity-masked position vector). Slots
+        whose page map entry is INVALID_PAGE (inactive/evicted) are dropped by
+        the scatter, so they can never corrupt pages reassigned to others."""
+        old_pos = self.pos  # position each slot's new token was written at
+        slots = self.num_slots
+        page_idx = jnp.clip(old_pos // self.page_size, 0,
+                            self.pages_per_slot - 1)
+        phys = jnp.take_along_axis(self.page_map, page_idx[:, None],
+                                   axis=1)[:, 0]  # (slots,)
+        off = old_pos % self.page_size
+        rows = jnp.arange(slots)
+
+        def scatter(pool, view):
+            # token written this step: view[(n, slots, Hkv, view_seq, hd)] at
+            # [:, s, :, old_pos[s], :] -> (slots, n, Hkv, hd) (adv-idx moves
+            # the indexed axes to the front)
+            tok = view[:, rows, :, old_pos, :]
+            return pool.at[:, phys, :, off].set(tok.astype(pool.dtype),
+                                                mode="drop")
+
+        layers = tuple(
+            {"k": scatter(e["k"], ve["k"]), "v": scatter(e["v"], ve["v"])}
+            for e, ve in zip(self.layers, new_view.layers)
+        )
+        return SlotTable(pos=pos_out, page_map=self.page_map, layers=layers,
+                         page_size=self.page_size)
 
 
-def pad_fused_stack(fused: dict, max_prefix: int) -> dict:
-    """Right-pad a fused prefix stack to the fixed ``max_prefix`` bucket; padded
-    positions get bias PREFIX_MASK_BIAS (zero attention mass). This is what
-    keeps the engine's decode step shape-stable across request mixes."""
-    n, B, H, S, hd = fused["k"].shape
-    if S > max_prefix:
-        raise ValueError(f"fused prefix length {S} exceeds max_prefix {max_prefix}")
-    pad = max_prefix - S
-    bias = fused.get("bias")
-    if bias is None:
-        bias = jnp.zeros((n, B, S), jnp.float32)
-    return {
-        "k": jnp.pad(fused["k"], ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
-        "v": jnp.pad(fused["v"], ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))),
-        "bias": jnp.pad(bias.astype(jnp.float32), ((0, 0), (0, 0), (0, pad)),
-                        constant_values=PREFIX_MASK_BIAS),
-    }
-
-
-def fused_stack_insert_slot(table: dict, slot, req: dict) -> dict:
-    """Scatter a single request's padded fused stack (n_attn, 1, Hkv, P, hd)
-    into batch index ``slot`` of the engine's per-slot fused table."""
-    slot = jnp.asarray(slot, jnp.int32)
-    z = jnp.zeros((), jnp.int32)
-    out = {}
-    for name in ("k", "v"):
-        out[name] = jax.lax.dynamic_update_slice(
-            table[name], req[name].astype(table[name].dtype),
-            (z, slot, z, z, z))
-    out["bias"] = jax.lax.dynamic_update_slice(
-        table["bias"], req["bias"].astype(jnp.float32), (z, slot, z))
-    return out
+# ----------------------------------------------------------------- helpers
 
 
 def n_attn_layers(cfg: ModelConfig) -> int:

@@ -1,10 +1,18 @@
 """Mixture-of-Experts FFN: routed top-k experts + optional always-on shared experts.
 
-Baseline implementation is the classic capacity-bounded one-hot dispatch einsum
-(Switch/GShard style) — fully GSPMD-shardable: token dims follow the ``data`` axis,
-the expert dim shards over ``model`` (expert parallelism). The §Perf hillclimb
-replaces the dispatch einsum with an explicit shard_map all-to-all (see
-EXPERIMENTS.md); this module is the paper-faithful-era baseline.
+Two dispatch implementations share one router:
+
+- **capacity-bounded one-hot einsum** (Switch/GShard style) — the training
+  baseline: fully GSPMD-shardable (token dims follow ``data``, the expert dim
+  shards over ``model``), capacity competition and drops included.
+- **sorted-scatter dropless** (``dropless=True``, the serving path): the
+  (token, slot) assignments are stably argsorted by expert id and the experts
+  run as one grouped GEMM (``jax.lax.ragged_dot``); outputs scatter-add back
+  per token. Memory is O(T·K) assignment rows instead of the O(g²) capacity
+  buffers the one-hot dropless form needed (the §Perf follow-up the old
+  docstring promised). Every routed token gets capacity, so a token's output
+  depends only on itself — the invariant continuous batching needs (a slot's
+  logits must not depend on its batch neighbours).
 
 Router follows Qwen-MoE: softmax over all experts, take top-k, renormalise the
 top-k probabilities. Load-balance auxiliary loss is the standard Switch form
@@ -82,6 +90,30 @@ def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
+def _dropless_sorted(params: dict, x2: jax.Array, top_p: jax.Array,
+                     top_i: jax.Array, E: int) -> jax.Array:
+    """Dropless dispatch via stable sort + grouped GEMM.
+
+    x2 (T, d); top_p/top_i (T, K). Assignments are sorted by expert id so each
+    expert's tokens are contiguous; ``ragged_dot`` runs all expert FFNs as one
+    grouped matmul over those segments; a scatter-add combines the K weighted
+    expert outputs per token. No capacity buffers, no drops.
+    """
+    T_, d = x2.shape
+    K = top_i.shape[-1]
+    e_flat = top_i.reshape(T_ * K)
+    tok = jnp.arange(T_ * K, dtype=jnp.int32) // K
+    order = jnp.argsort(e_flat)  # stable: ties keep token-major priority
+    tok_sorted = tok[order]
+    xs = jnp.take(x2, tok_sorted, axis=0)  # (T·K, d) expert-contiguous
+    group_sizes = jnp.bincount(e_flat, length=E).astype(jnp.int32)
+    h = jax.nn.silu(jax.lax.ragged_dot(xs, params["w_gate"], group_sizes))
+    h = h * jax.lax.ragged_dot(xs, params["w_up"], group_sizes)
+    ys = jax.lax.ragged_dot(h, params["w_down"], group_sizes)  # (T·K, d)
+    w = top_p.reshape(T_ * K)[order].astype(ys.dtype)
+    return jnp.zeros((T_, d), ys.dtype).at[tok_sorted].add(ys * w[:, None])
+
+
 def moe_ffn(
     cfg: ModelConfig,
     params: dict,
@@ -93,13 +125,16 @@ def moe_ffn(
 ) -> Tuple[jax.Array, jax.Array]:
     """Returns (y (B,S,d), aux_loss scalar fp32).
 
-    ``dropless=True`` gives every routed token capacity (C = g): routing then
-    depends only on the token itself, never on how many tokens share the
-    dispatch group. Serving needs this — capacity competition makes a request's
-    logits depend on batch packing (prefill vs teacher-forced lengths disagree,
-    and a continuous-batching slot would depend on its neighbours). Training
-    keeps the capacity-bounded Switch/GShard baseline. A sorted-scatter
-    dropless dispatch (capacity buffers are O(g²) here) is a §Perf follow-up.
+    ``dropless=True`` gives every routed token capacity: routing then depends
+    only on the token itself, never on how many tokens share the dispatch
+    group. Serving needs this — capacity competition makes a request's logits
+    depend on batch packing (prefill vs teacher-forced lengths disagree, and a
+    continuous-batching slot would depend on its neighbours). The dropless
+    path dispatches by sorted-scatter grouped GEMM (O(T·K) rows — see
+    ``_dropless_sorted``); under an active ``expert_sharding`` mesh it falls
+    back to the GSPMD-shardable one-hot C=g form (sorted dispatch needs a
+    shard_map all-to-all to expert-parallelize — future §Perf work). Training
+    keeps the capacity-bounded Switch/GShard baseline.
     """
     group_size = group_size or cfg.moe_group_size
     capacity_factor = capacity_factor or cfg.moe_capacity_factor
@@ -116,46 +151,62 @@ def moe_ffn(
     top_p, top_i = jax.lax.top_k(probs, K)  # (G, g, K)
     top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalise (Qwen)
 
-    if dropless:
-        C = g
+    # Sorted-scatter needs a shard_map all-to-all to stay expert-parallel;
+    # under an active expert mesh keep the GSPMD-shardable one-hot dropless
+    # form (C = g) so multi-chip serving doesn't silently replicate experts.
+    if dropless and _MOE_MESH[0] is None:
+        # Sorted-scatter grouped-GEMM dispatch: every assignment gets
+        # capacity, memory O(T·K) rows (vs the O(g²) one-hot buffers).
+        y = _dropless_sorted(params, x.reshape(T, d),
+                             top_p.reshape(T, K), top_i.reshape(T, K), E)
+        y = y.reshape(Bq, S, d).astype(x.dtype)
+        # fraction routed per expert (pre-drop == post-drop: dropless)
+        frac_tokens = (jnp.bincount(top_i.reshape(T * K), length=E)
+                       .astype(jnp.float32) / T)
     else:
-        C = _round_up(max(int(g * K / E * capacity_factor), 4), 4)
-        C = min(C, g)
+        if dropless:
+            C = g  # every token keeps capacity; one-hot but drop-free
+        else:
+            C = _round_up(max(int(g * K / E * capacity_factor), 4), 4)
+            C = min(C, g)
 
-    # Position of each (token, slot) within its expert's capacity buffer.
-    # Token-major priority: earlier tokens (and earlier top-k slots) win capacity.
-    onehot = jax.nn.one_hot(top_i, E, dtype=jnp.float32)  # (G, g, K, E)
-    flat = onehot.reshape(G, g * K, E)
-    pos_in_e = (jnp.cumsum(flat, axis=1) - flat).reshape(G, g, K, E)  # (G,g,K,E)
+        # Position of each (token, slot) within its expert's capacity buffer.
+        # Token-major priority: earlier tokens (and earlier top-k slots) win
+        # capacity.
+        onehot = jax.nn.one_hot(top_i, E, dtype=jnp.float32)  # (G, g, K, E)
+        flat = onehot.reshape(G, g * K, E)
+        pos_in_e = (jnp.cumsum(flat, axis=1) - flat).reshape(G, g, K, E)
 
-    # Build dispatch/combine by accumulating over the K (small, static) slots —
-    # never materialising the (G,g,K,E,C) 5-D tensor.
-    dispatch = jnp.zeros((G, g, E, C), jnp.float32)
-    combine = jnp.zeros((G, g, E, C), jnp.float32)
-    for k in range(K):
-        e_k = top_i[:, :, k]  # (G, g)
-        p_k = jnp.take_along_axis(pos_in_e[:, :, k], e_k[..., None], axis=-1)[..., 0]
-        keep_k = (p_k < C).astype(jnp.float32)
-        eh = jax.nn.one_hot(e_k, E, dtype=jnp.float32) * keep_k[..., None]
-        ph = jax.nn.one_hot(p_k.astype(jnp.int32), C, dtype=jnp.float32)
-        d_k = jnp.einsum("gse,gsc->gsec", eh, ph)
-        dispatch = dispatch + d_k
-        combine = combine + d_k * top_p[:, :, k][..., None, None]
+        # Build dispatch/combine by accumulating over the K (small, static)
+        # slots — never materialising the (G,g,K,E,C) 5-D tensor.
+        dispatch = jnp.zeros((G, g, E, C), jnp.float32)
+        combine = jnp.zeros((G, g, E, C), jnp.float32)
+        for k in range(K):
+            e_k = top_i[:, :, k]  # (G, g)
+            p_k = jnp.take_along_axis(pos_in_e[:, :, k], e_k[..., None],
+                                      axis=-1)[..., 0]
+            keep_k = (p_k < C).astype(jnp.float32)
+            eh = jax.nn.one_hot(e_k, E, dtype=jnp.float32) * keep_k[..., None]
+            ph = jax.nn.one_hot(p_k.astype(jnp.int32), C, dtype=jnp.float32)
+            d_k = jnp.einsum("gse,gsc->gsec", eh, ph)
+            dispatch = dispatch + d_k
+            combine = combine + d_k * top_p[:, :, k][..., None, None]
 
-    # Expert compute on capacity buffers (E sharded over `model`,
-    # token-groups over `data`; see expert_sharding above).
-    dispatch = _constrain_ep(dispatch, ("B", None, "M", None))
-    combine = _constrain_ep(combine, ("B", None, "M", None))
-    xe = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xg)  # (G,E,C,d)
-    xe = _constrain_ep(xe, ("B", "M", None, None))
-    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, params["w_gate"]))
-    h = h * jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
-    ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"])  # (G,E,C,d)
-    ye = _constrain_ep(ye, ("B", "M", None, None))
-    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye).reshape(Bq, S, d)
+        # Expert compute on capacity buffers (E sharded over `model`,
+        # token-groups over `data`; see expert_sharding above).
+        dispatch = _constrain_ep(dispatch, ("B", None, "M", None))
+        combine = _constrain_ep(combine, ("B", None, "M", None))
+        xe = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xg)
+        xe = _constrain_ep(xe, ("B", "M", None, None))
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, params["w_gate"]))
+        h = h * jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+        ye = jnp.einsum("gecf,efd->gecd", h, params["w_down"])  # (G,E,C,d)
+        ye = _constrain_ep(ye, ("B", "M", None, None))
+        y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype),
+                       ye).reshape(Bq, S, d)
+        frac_tokens = jnp.mean(onehot.sum(2), axis=(0, 1))  # (E,) pre-drop
 
     # Switch load-balance aux loss.
-    frac_tokens = jnp.mean(onehot.sum(2), axis=(0, 1))  # (E,) fraction routed (pre-drop)
     frac_probs = jnp.mean(probs, axis=(0, 1))  # (E,)
     aux = E * jnp.sum(frac_tokens / K * frac_probs)
 

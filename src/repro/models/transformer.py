@@ -30,7 +30,7 @@ from repro.models import layers as L
 from repro.models import moe as MOE
 from repro.models import rglru as RG
 from repro.models import ssd as SSD
-from repro.models.cache import init_cache
+from repro.models.cache import KVCache
 
 
 # ------------------------------------------------------------ act sharding
@@ -343,7 +343,7 @@ def prefill(
     window_override: int = 0,
     extra_kv: Optional[list] = None,  # C2C fused prefix, as in ``forward``
     unroll: bool = False,
-) -> Tuple[jax.Array, dict]:
+) -> Tuple[jax.Array, KVCache]:
     """Full forward that also fills a decode cache. Returns (logits, cache)."""
     cycles, pattern, tail = layer_grouping(cfg)
     x = _embed_in(cfg, params, tokens, embeds)
@@ -351,8 +351,8 @@ def prefill(
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
     cos, sin = rope_tables(cfg, positions, positions_3d)
     window = window_override or cfg.sliding_window
-    cache = init_cache(cfg, B, max_seq, cache_dtype,
-                       window_override=window_override or None)
+    cache = KVCache.init(cfg, B, max_seq, cache_dtype,
+                         window_override=window_override or None)
     ek = extra_kv or [None] * (len(pattern) + len(tail))
     ek_cycle = tuple(
         ek[i] if ek[i] is not None else jnp.zeros((max(cycles, 1),), jnp.float32)
@@ -379,7 +379,7 @@ def prefill(
 
     aux = jnp.zeros((), jnp.float32)
     if cycles > 0:
-        xs_all = (tuple(params["cycle"]), tuple(cache["layers"][: len(pattern)]),
+        xs_all = (tuple(params["cycle"]), tuple(cache.layers[: len(pattern)]),
                   ek_cycle)
         if unroll:
             ys = []
@@ -395,7 +395,7 @@ def prefill(
     else:
         new_layers = []
     for i, kind in enumerate(tail):
-        entry = jax.tree.map(lambda a: a[0], cache["layers"][len(pattern) + i])
+        entry = jax.tree.map(lambda a: a[0], cache.layers[len(pattern) + i])
         e = ek[len(pattern) + i]
         e = jax.tree.map(lambda a: a[0], e) if e is not None else None
         x, kv, st, aux = _apply_layer_full(cfg, kind, params["tail"][i], x, cos,
@@ -407,31 +407,30 @@ def prefill(
         else:
             new_e = st
         new_layers.append(jax.tree.map(lambda a: a[None], new_e))
-    return _logits_out(cfg, params, x), {
-        "pos": jnp.asarray(S, jnp.int32),
-        "layers": new_layers,
-    }
+    return _logits_out(cfg, params, x), KVCache(
+        pos=jnp.asarray(S, jnp.int32), layers=tuple(new_layers))
 
 
 def decode_step(
     cfg: ModelConfig,
     params: dict,
-    cache: dict,
+    cache: KVCache,
     token: jax.Array,  # (B,) int32 — last generated token
     *,
     window_override: int = 0,
     extra_kv: Optional[list] = None,  # C2C fused prefix, as in ``forward``
     extra_kv_mode: str = "concat",  # "concat" (Eq.1 literal) | "split" (LSE)
     unroll: bool = False,
-) -> Tuple[jax.Array, dict]:
+) -> Tuple[jax.Array, KVCache]:
     """One decode step (the serve_step the decode shapes lower).
 
-    ``cache["pos"]`` may be a scalar (lockstep batch) or a per-row (B,) vector
+    ``cache.pos`` may be a scalar (lockstep batch) or a per-row (B,) vector
     (continuous batching: each slot at its own position — launch/engine.py).
 
     Returns (logits (B, V), updated cache)."""
     cycles, pattern, tail = layer_grouping(cfg)
-    pos = cache["pos"]
+    cache = KVCache.ensure(cache)  # accepts legacy {"pos","layers"} dicts
+    pos = cache.pos
     x = L.embed(params["embed"], token[:, None])
     B = x.shape[0]
     if pos.ndim == 1:  # per-slot positions
@@ -458,7 +457,7 @@ def decode_step(
         return x, tuple(new_entries)
 
     if cycles > 0:
-        xs_all = (tuple(params["cycle"]), tuple(cache["layers"][: len(pattern)]),
+        xs_all = (tuple(params["cycle"]), tuple(cache.layers[: len(pattern)]),
                   ek_cycle)
         if unroll:
             ys = []
@@ -472,7 +471,7 @@ def decode_step(
     else:
         new_layers = []
     for i, kind in enumerate(tail):
-        entry = jax.tree.map(lambda a: a[0], cache["layers"][len(pattern) + i])
+        entry = jax.tree.map(lambda a: a[0], cache.layers[len(pattern) + i])
         e = ek[len(pattern) + i]
         e = jax.tree.map(lambda a: a[0], e) if e is not None else None
         x, new_e = _apply_layer_decode(cfg, kind, params["tail"][i], x, cos, sin,
@@ -480,7 +479,7 @@ def decode_step(
                                        extra_kv_mode=extra_kv_mode)
         new_layers.append(jax.tree.map(lambda a: a[None], new_e))
     logits = _logits_out(cfg, params, x)[:, 0]
-    return logits, {"pos": pos + 1, "layers": new_layers}
+    return logits, KVCache(pos=pos + 1, layers=tuple(new_layers))
 
 
 # ---------------------------------------------------------------- loss

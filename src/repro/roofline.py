@@ -17,10 +17,9 @@ import re
 from dataclasses import asdict, dataclass, field
 from typing import Optional
 
-# TPU v5e-class constants (per chip)
-PEAK_FLOPS = 197e12  # bf16
-HBM_BW = 819e9  # B/s
-ICI_BW = 50e9  # B/s per link
+# TPU v5e-class constants (per chip) — single source shared with
+# core/protocol.py so latency estimates can't diverge from these tables.
+from repro.hw import HBM_BW, ICI_BW, PEAK_FLOPS  # noqa: F401
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,

@@ -8,7 +8,6 @@ from repro.configs.case_study import tiny_zoo
 from repro.core import c2c, commload, fuser as F, protocol
 from repro.core.fedrefine import FedRefineSystem, Participant
 from repro.models import transformer as T
-from repro.models.cache import attn_kv_stack
 
 KEY = jax.random.PRNGKey(3)
 
@@ -41,7 +40,7 @@ def test_fuser_heterogeneous_dims(system, zoo):
         prompt = jnp.zeros((2, S), jnp.int32)
         _, cache = T.prefill(tx.cfg, tx.params, prompt, max_seq=S,
                              cache_dtype=jnp.float32)
-        st = attn_kv_stack(tx.cfg, cache, length=S)
+        st = cache.export_stack(tx.cfg, length=S)
         out = F.project_cache(fz, tx.cfg, rx.cfg, st)
         n_rx = len(rx.cfg.attention_layers)
         assert out["k"].shape == (n_rx, 2, rx.cfg.num_kv_heads, S,
@@ -74,7 +73,7 @@ def test_closed_gate_is_standalone(system, zoo):
     fz["gate"] = jnp.full_like(fz["gate"], -200.0)
     _, cache = T.prefill(tx.cfg, tx.params, prompt % tx.cfg.vocab_size,
                          max_seq=10, cache_dtype=jnp.float32)
-    st = attn_kv_stack(tx.cfg, cache, length=10)
+    st = cache.export_stack(tx.cfg, length=10)
     fused = F.project_cache(fz, tx.cfg, rx.cfg, st)
     lg_c2c, _ = c2c.c2c_forward(rx.cfg, rx.params, prompt, fused)
     lg_solo, _ = T.forward(rx.cfg, rx.params, prompt)
@@ -88,7 +87,7 @@ def test_open_gate_changes_logits(system, zoo):
     fz["gate"] = jnp.full_like(fz["gate"], 5.0)
     _, cache = T.prefill(tx.cfg, tx.params, prompt % tx.cfg.vocab_size,
                          max_seq=10, cache_dtype=jnp.float32)
-    st = attn_kv_stack(tx.cfg, cache, length=10)
+    st = cache.export_stack(tx.cfg, length=10)
     fused = F.project_cache(fz, tx.cfg, rx.cfg, st)
     lg_c2c, _ = c2c.c2c_forward(rx.cfg, rx.params, prompt, fused)
     lg_solo, _ = T.forward(rx.cfg, rx.params, prompt)
@@ -100,7 +99,7 @@ def test_eq1_equals_eq4_single_transmitter(system, zoo):
     prompt = jnp.zeros((1, 6), jnp.int32)
     _, cache = T.prefill(tx.cfg, tx.params, prompt, max_seq=6,
                          cache_dtype=jnp.float32)
-    st = attn_kv_stack(tx.cfg, cache, length=6)
+    st = cache.export_stack(tx.cfg, length=6)
     fz = system.registry.get(tx.name, rx.name)
     one = F.project_cache(fz, tx.cfg, rx.cfg, st)
     multi = c2c.fused_prefix([fz], [tx.cfg], rx.cfg, [st])
@@ -116,7 +115,7 @@ def test_multi_transmitter_concat_order(system, zoo):
     for tx in txs:
         _, cache = T.prefill(tx.cfg, tx.params, prompt, max_seq=5,
                              cache_dtype=jnp.float32)
-        stacks.append(attn_kv_stack(tx.cfg, cache, length=5))
+        stacks.append(cache.export_stack(tx.cfg, length=5))
         fusers.append(system.registry.get(tx.name, rx.name))
         cfgs.append(tx.cfg)
     fused = c2c.fused_prefix(fusers, cfgs, rx.cfg, stacks)

@@ -10,10 +10,7 @@ from repro.configs.case_study import tiny_zoo
 from repro.core import fuser as F
 from repro.launch.engine import ContinuousBatchingEngine
 from repro.models import transformer as T
-from repro.models.cache import (attn_kv_stack, cache_evict_slot,
-                                cache_insert_slot, empty_fused_stack,
-                                extra_kv_layers, init_slot_cache,
-                                pad_fused_stack, PREFIX_MASK_BIAS)
+from repro.models.cache import FusedPrefix, KVCache, PREFIX_MASK_BIAS
 
 VOCAB = 64
 
@@ -36,7 +33,8 @@ def _prompt(key, n):
 
 def _solo(cfg, params, prompt, steps, max_seq, fused=None):
     """Reference greedy run on the plain (scalar-pos) decode path."""
-    ek = extra_kv_layers(cfg, fused) if fused is not None else None
+    ek = (FusedPrefix.ensure(fused).to_extra_kv(cfg)
+          if fused is not None else None)
     logits, cache = T.prefill(cfg, params, prompt, max_seq=max_seq,
                               cache_dtype=jnp.float32, extra_kv=ek)
     tok = jnp.argmax(logits[:, prompt.shape[1] - 1], -1)
@@ -68,16 +66,16 @@ def test_slot_admission_eviction_reuse(cfg, params):
 
 
 def test_slot_insert_evict_roundtrip(cfg, params):
-    """cache_insert_slot/evict_slot: inserted slot carries the request's
+    """KVCache.insert_slot/evict_slot: inserted slot carries the request's
     position; evicted slot resets to 0 and hides its stale keys."""
-    table = init_slot_cache(cfg, 3, 32, jnp.float32)
+    table = KVCache.init_slots(cfg, 3, 32, jnp.float32)
     p = _prompt(jax.random.PRNGKey(2), 6)
     _, req = T.prefill(cfg, params, p, max_seq=32, cache_dtype=jnp.float32)
-    table = cache_insert_slot(table, 1, req, 6)
-    assert table["pos"].shape == (3,)
-    assert table["pos"].tolist() == [0, 6, 0]
-    table = cache_evict_slot(table, 1)
-    assert table["pos"].tolist() == [0, 0, 0]
+    table = table.insert_slot(1, req, 6)
+    assert table.pos.shape == (3,)
+    assert table.pos.tolist() == [0, 6, 0]
+    table = table.evict_slot(1)
+    assert table.pos.tolist() == [0, 0, 0]
 
 
 def test_completion_at_prefill_never_occupies_slot(cfg, params):
@@ -133,7 +131,7 @@ def test_mixed_standalone_c2c_batch():
     pb = _prompt(jax.random.fold_in(key, 1), 5)
     S = pa.shape[1]
     _, txc = T.prefill(tx, p_tx, pa, max_seq=S, cache_dtype=jnp.float32)
-    fused = F.project_cache(fz, tx, rx, attn_kv_stack(tx, txc, length=S))
+    fused = F.project_cache(fz, tx, rx, txc.export_stack(tx, length=S))
 
     eng = ContinuousBatchingEngine(rx, p_rx, max_slots=2, max_seq=40,
                                    max_prefix=8)
@@ -147,20 +145,20 @@ def test_mixed_standalone_c2c_batch():
 
 
 def test_padded_prefix_mask_is_exact():
-    """pad_fused_stack / empty_fused_stack: masked positions carry zero
+    """FusedPrefix.pad / FusedPrefix.empty: masked positions carry zero
     attention mass, so a padded prefix equals the unpadded one and an empty
     prefix equals no prefix."""
     rx, p_rx, tx, p_tx, fz = _tiny_c2c()
     p = _prompt(jax.random.PRNGKey(7), 6)
     _, txc = T.prefill(tx, p_tx, p, max_seq=6, cache_dtype=jnp.float32)
-    fused = F.project_cache(fz, tx, rx, attn_kv_stack(tx, txc, length=6))
-    padded = pad_fused_stack(fused, 11)
-    assert padded["k"].shape[-2] == 11
-    assert float(padded["bias"][..., -1].max()) == float(
+    fused = F.project_cache(fz, tx, rx, txc.export_stack(tx, length=6))
+    padded = fused.pad(11)
+    assert padded.k.shape[-2] == 11
+    assert float(padded.bias[..., -1].max()) == float(
         jnp.float32(PREFIX_MASK_BIAS))
     assert np.array_equal(_solo(rx, p_rx, p, 5, 32, fused),
                           _solo(rx, p_rx, p, 5, 32, padded))
-    empty = empty_fused_stack(rx, 1, 4, jnp.float32)
+    empty = FusedPrefix.empty(rx, 1, 4, jnp.float32)
     assert np.array_equal(_solo(rx, p_rx, p, 5, 32),
                           _solo(rx, p_rx, p, 5, 32, empty))
 
@@ -179,7 +177,7 @@ def test_decode_jits_exactly_once_across_mixes():
     def fused_for(p):
         S = p.shape[1]
         _, c = T.prefill(tx, p_tx, p, max_seq=S, cache_dtype=jnp.float32)
-        return F.project_cache(fz, tx, rx, attn_kv_stack(tx, c, length=S))
+        return F.project_cache(fz, tx, rx, c.export_stack(tx, length=S))
 
     # wave 1: standalone only
     eng.submit(_prompt(key, 5), 4)
@@ -275,7 +273,139 @@ def test_per_slot_positions_decode_parity(cfg, params):
     _, cache = T.prefill(cfg, params, toks[:, :S], max_seq=S + 2,
                          cache_dtype=jnp.float32)
     lg_scalar, _ = T.decode_step(cfg, params, cache, toks[:, S])
-    vec_cache = dict(cache, pos=jnp.full((B,), cache["pos"], jnp.int32))
+    vec_cache = cache.with_pos(jnp.full((B,), cache.pos, jnp.int32))
     lg_vec, new_cache = T.decode_step(cfg, params, vec_cache, toks[:, S])
     assert float(jnp.abs(lg_scalar - lg_vec).max()) < 1e-5
-    assert new_cache["pos"].tolist() == [S + 1] * B
+    assert new_cache.pos.tolist() == [S + 1] * B
+
+
+# ------------------------------------------------------------- paged slots
+
+
+def test_paged_engine_matches_dense_byte_identical(cfg, params):
+    """Paged SlotTable decode == dense-slot decode, token for token: paging is
+    a pure layout change (gather view + per-slot mask), never numerics."""
+    key = jax.random.PRNGKey(20)
+    reqs = [(_prompt(jax.random.fold_in(key, i), 4 + i), 3 + i)
+            for i in range(5)]
+    dense = ContinuousBatchingEngine(cfg, params, max_slots=2, max_seq=48)
+    paged = ContinuousBatchingEngine(cfg, params, max_slots=2, max_seq=48,
+                                     paged=True, page_size=8)
+    rd = [dense.submit(p, n) for p, n in reqs]
+    rp = [paged.submit(p, n) for p, n in reqs]
+    out_d = {c.rid: c.tokens for c in dense.drain()}
+    out_p = {c.rid: c.tokens for c in paged.drain()}
+    for a, b in zip(rd, rp):
+        assert np.array_equal(out_d[a], out_p[b])
+    assert paged.stats["decode_traces"] == 1
+
+
+def test_paged_capacity_beyond_dense_budget(cfg, params):
+    """A paged pool sized for 2 dense slots serves 4 concurrent short
+    requests (the ROADMAP paged-KV capacity win), and frees pages on
+    completion."""
+    max_seq, page = 32, 8
+    dense_slots = 2
+    eng = ContinuousBatchingEngine(
+        cfg, params, max_slots=4, max_seq=max_seq, paged=True,
+        page_size=page, num_pages=dense_slots * max_seq // page)
+    key = jax.random.PRNGKey(21)
+    prompts = [_prompt(jax.random.fold_in(key, i), 5) for i in range(4)]
+    rids = [eng.submit(p, 6) for p in prompts]  # 11 tok -> 2 pages each
+    done = {c.rid: c.tokens for c in eng.drain()}
+    assert eng.stats["peak_active"] == 4  # 2x the dense-slot equivalent
+    assert len(eng._free_pages) == eng._table.num_pages  # all pages returned
+    for rid, p in zip(rids, prompts):
+        assert np.array_equal(done[rid], _solo(cfg, params, p, 6, max_seq))
+
+
+def test_paged_blocks_admission_until_pages_free(cfg, params):
+    """When the pool is exhausted the head request waits (FIFO) and is
+    admitted as soon as a completion returns pages."""
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=4, max_seq=32,
+                                   paged=True, page_size=8, num_pages=4)
+    key = jax.random.PRNGKey(22)
+    p1, p2 = _prompt(key, 5), _prompt(jax.random.fold_in(key, 1), 5)
+    r1 = eng.submit(p1, 6)   # 11 tok -> 2 pages
+    r2 = eng.submit(p2, 10)  # 15 tok -> 2 pages
+    eng.step()
+    assert eng.num_active == 2 and eng.num_queued == 0
+    r3 = eng.submit(p1, 3)   # pool full: must wait for r1/r2 to finish
+    eng.step()
+    assert eng.num_queued == 1
+    done = {c.rid: c.tokens for c in eng.drain()}
+    assert set(done) == {r1, r2, r3}
+    assert np.array_equal(done[r3], _solo(cfg, params, p1, 3, 32))
+
+
+def test_paged_requires_pure_attention():
+    from repro.configs.base import get_smoke_config
+
+    cfg = get_smoke_config("recurrentgemma_9b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    with pytest.raises(ValueError, match="pure full-attention"):
+        ContinuousBatchingEngine(cfg, params, max_slots=2, max_seq=32,
+                                 paged=True, page_size=8)
+
+
+# -------------------------------------------------------- batch admission
+
+
+def test_batch_admission_matches_solo_and_traces_once(cfg, params):
+    """admit_batch>1 prefills same-bucket requests together: outputs equal
+    solo runs and the prefill still traces once per bucket length."""
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=4, max_seq=48,
+                                   admit_batch=4, prompt_bucket=8)
+    key = jax.random.PRNGKey(23)
+    reqs = [(_prompt(jax.random.fold_in(key, i), 3 + i), 4 + i)
+            for i in range(4)]  # lengths 3..6 share the 8-bucket
+    rids = [eng.submit(p, n) for p, n in reqs]
+    done = {c.rid: c.tokens for c in eng.drain()}
+    for rid, (p, n) in zip(rids, reqs):
+        assert np.array_equal(done[rid], _solo(cfg, params, p, n, 48))
+    assert eng.stats["prefill_traces"] == 1
+    assert eng.stats["admit_batches"] == 1  # one forward admitted all four
+    assert eng.stats["decode_traces"] == 1
+
+
+def test_batch_admission_mixed_protocols():
+    """Batched admission keeps per-request fused prefixes separated: a C2C
+    and a standalone request admitted in one prefill each match their solo
+    references."""
+    rx, p_rx, tx, p_tx, fz = _tiny_c2c()
+    key = jax.random.PRNGKey(24)
+    pa = _prompt(key, 6)
+    pb = _prompt(jax.random.fold_in(key, 1), 6)
+    _, txc = T.prefill(tx, p_tx, pa, max_seq=6, cache_dtype=jnp.float32)
+    fused = F.project_cache(fz, tx, rx, txc.export_stack(tx, length=6))
+    eng = ContinuousBatchingEngine(rx, p_rx, max_slots=2, max_seq=40,
+                                   max_prefix=8, admit_batch=2)
+    ra = eng.submit(pa, 7, fused=fused)
+    rb = eng.submit(pb, 7)
+    done = {c.rid: c for c in eng.drain()}
+    assert eng.stats["admit_batches"] == 1
+    assert np.array_equal(done[ra].tokens, _solo(rx, p_rx, pa, 7, 40, fused))
+    assert np.array_equal(done[rb].tokens, _solo(rx, p_rx, pb, 7, 40))
+
+
+def test_paged_rejects_never_admittable_request(cfg, params):
+    """A request whose page demand exceeds the whole pool fails at submit()
+    instead of hanging drain() forever."""
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2, max_seq=32,
+                                   paged=True, page_size=8, num_pages=2)
+    with pytest.raises(ValueError, match="could never be admitted"):
+        eng.submit(_prompt(jax.random.PRNGKey(30), 12), 10)  # 3 pages > 2
+
+
+def test_paged_pages_sized_by_request_not_bucket(cfg, params):
+    """Bucket padding must not inflate page reservations: a 5+3-token request
+    under a large prompt bucket takes ceil(8/8)=1 page, not bucket/page."""
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2, max_seq=32,
+                                   paged=True, page_size=8, num_pages=4,
+                                   prompt_bucket=32)
+    p = _prompt(jax.random.PRNGKey(31), 5)
+    rid = eng.submit(p, 3)
+    eng.step()
+    assert len(eng._slot_pages[0]) == 1  # one page, despite the 32-bucket
+    done = {c.rid: c.tokens for c in eng.drain()}
+    assert np.array_equal(done[rid], _solo(cfg, params, p, 3, 32))

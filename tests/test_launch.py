@@ -33,10 +33,10 @@ def test_long_context_variant(arch):
 
 def test_long_500k_cache_is_windowed():
     """The 524k decode cache must be O(window), not O(seq)."""
-    from repro.models.cache import init_cache
+    from repro.models.cache import KVCache
     cfg = _variant(get_config("qwen2.5-32b"), "long_500k")
-    cache = jax.eval_shape(lambda: init_cache(cfg, 1, 524_288, jnp.bfloat16))
-    k = cache["layers"][0]["k"]
+    cache = jax.eval_shape(lambda: KVCache.init(cfg, 1, 524_288, jnp.bfloat16))
+    k = cache.layers[0]["k"]
     assert k.shape[-2] == cfg.long_context_window  # ring buffer, not 524288
     total = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
     assert total < 2 * 2**30  # whole decode state ≪ naive 137 GB

@@ -67,16 +67,16 @@ def test_shape_bytes(dt, dims):
 
 @given(st.integers(1, 3), st.integers(1, 4), st.integers(2, 8))
 def test_cache_concat_associative(n, b, s):
-    from repro.models.cache import concat_kv
+    from repro.models.cache import KVStack
     shapes = (n, b, 2, s, 4)
     rng = np.random.default_rng(42)
-    mk = lambda: {"k": jnp.asarray(rng.normal(size=shapes), jnp.float32),
-                  "v": jnp.asarray(rng.normal(size=shapes), jnp.float32)}
+    mk = lambda: KVStack(k=jnp.asarray(rng.normal(size=shapes), jnp.float32),
+                         v=jnp.asarray(rng.normal(size=shapes), jnp.float32))
     a, b_, c = mk(), mk(), mk()
-    left = concat_kv(concat_kv(a, b_), c)
-    right = concat_kv(a, concat_kv(b_, c))
-    # concat_kv(own, fused) prepends fused: ((a∘b)∘c) vs (a∘(b∘c)) equal
-    assert jnp.array_equal(left["k"], right["k"])
+    left = a.prepend(b_).prepend(c)
+    right = a.prepend(b_.prepend(c))
+    # own.prepend(fused) prepends fused: (c∘(b∘a)) vs ((c∘b)∘a) equal
+    assert jnp.array_equal(left.k, right.k)
 
 
 # ------------------------------------------------------------------ privacy

@@ -5,6 +5,7 @@ import jax.numpy as jnp
 from repro.configs.base import get_config
 from repro.core import quant
 from repro.core import commload
+from repro.models.cache import FusedPrefix
 
 KEY = jax.random.PRNGKey(9)
 
@@ -56,7 +57,6 @@ def test_quantized_prefix_decode_close():
     from repro.configs.case_study import tiny_zoo
     from repro.core import c2c, fuser as F
     from repro.models import transformer as T
-    from repro.models.cache import attn_kv_stack
 
     z = tiny_zoo()
     tx, rx = z["transmitters"][0], z["receiver"]
@@ -65,11 +65,11 @@ def test_quantized_prefix_decode_close():
     prompt = jax.random.randint(KEY, (1, 8), 8, 200)
     _, cache = T.prefill(tx, p_tx, prompt % tx.vocab_size, max_seq=8,
                          cache_dtype=jnp.float32)
-    st = attn_kv_stack(tx, cache, length=8)
+    st = cache.export_stack(tx, length=8)
     fz = F.init_fuser(tx, rx, KEY)
     fused = F.project_cache(fz, tx, rx, st)
-    fused_q = dict(quant.dequantize_stack(quant.quantize_stack(fused),
-                                          jnp.float32), bias=fused["bias"])
+    dq = quant.dequantize_stack(quant.quantize_stack(fused), jnp.float32)
+    fused_q = FusedPrefix(k=dq.k, v=dq.v, bias=fused.bias)
     a, _ = c2c.c2c_forward(rx, p_rx, prompt, fused)
     b, _ = c2c.c2c_forward(rx, p_rx, prompt, fused_q)
     # logits differ by less than typical logit gaps

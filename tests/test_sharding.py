@@ -70,9 +70,10 @@ def test_param_specs_divisible(arch, mesh, fsdp):
 @pytest.mark.parametrize("arch", ["qwen2_5_32b", "granite_20b", "mamba2_130m",
                                   "recurrentgemma_9b"])
 def test_cache_specs_divisible(arch):
-    from repro.models.cache import init_cache
+    from repro.models.cache import KVCache
     cfg = get_config(arch)
-    cache = jax.eval_shape(lambda: init_cache(cfg, 128, 32_768, jnp.bfloat16))
+    cache = jax.eval_shape(
+        lambda: KVCache.init(cfg, 128, 32_768, jnp.bfloat16))
     specs = SH.cache_pspecs(cfg, cache, PROD, 128)
     jax.tree.map(
         lambda s, l: _spec_valid(s, l.shape, PROD), specs, cache,

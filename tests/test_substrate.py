@@ -168,7 +168,6 @@ def test_batched_server_fused_path(key):
     from repro.core import fuser as F
     from repro.launch.serve import BatchedServer
     from repro.models import transformer as T
-    from repro.models.cache import attn_kv_stack
     z = tiny_zoo()
     tx, rx = z["transmitters"][0], z["receiver"]
     p_tx = T.init_params(tx, key, jnp.float32)
@@ -176,7 +175,7 @@ def test_batched_server_fused_path(key):
     prompts = jax.random.randint(key, (2, 10), 8, 200)
     _, cache = T.prefill(tx, p_tx, prompts % tx.vocab_size, max_seq=10,
                          cache_dtype=jnp.float32)
-    st = attn_kv_stack(tx, cache, length=10)
+    st = cache.export_stack(tx, length=10)
     fused = F.project_cache(F.init_fuser(tx, rx, key), tx, rx, st)
     srv = BatchedServer(rx, p_rx, max_batch=4, max_seq=32)
     out_fused = srv.serve(prompts, gen_steps=4, fused=fused)

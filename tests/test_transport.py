@@ -1,0 +1,202 @@
+"""Transport-channel & paged-slot-table invariants (core/transport.py,
+models/cache.py SlotTable).
+
+Property style (hypothesis when installed, repro.testing.propcheck shim
+otherwise): channels must round-trip shapes/dtypes exactly even when lossy in
+values; measured bytes_on_wire must reproduce commload.py's analytic numbers;
+the paged SlotTable must be byte-for-byte equivalent to the dense slot
+reference wherever the per-slot position mask exposes content.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # hermetic env: boundary-first deterministic shim
+    from repro.testing.propcheck import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.core import commload, quant
+from repro.core import transport as TR
+from repro.core.privacy import synonym_channel
+from repro.models import transformer as T
+from repro.models.cache import KVCache, KVStack, SlotTable
+
+KEY = jax.random.PRNGKey(13)
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+
+def _stack(n=2, B=1, H=2, S=6, hd=8, dtype=jnp.float32) -> KVStack:
+    k1, k2 = jax.random.split(KEY)
+    return KVStack(k=jax.random.normal(k1, (n, B, H, S, hd), dtype),
+                   v=jax.random.normal(k2, (n, B, H, S, hd), dtype))
+
+
+# ------------------------------------------------------------- round trips
+
+
+@given(st.integers(1, 3), st.integers(1, 3), st.integers(2, 10))
+def test_pipeline_roundtrips_shapes_dtypes(n, B, S):
+    """Pipeline([RephraseChannel, QuantChannel]): lossy in values (int8,
+    paraphrase) but exact in shapes and dtypes — the channel contract."""
+    stack = _stack(n=n, B=B, S=S)
+    tokens = jax.random.randint(KEY, (B, S), 0, 64)
+    pipe = TR.Pipeline([
+        TR.RephraseChannel(synonym_channel(64, 4, KEY), KEY),
+        TR.QuantChannel(jnp.float32),
+    ])
+    out, nbytes = pipe.transmit(TR.Message(stack=stack, tokens=tokens))
+    assert out.stack.k.shape == stack.k.shape
+    assert out.stack.v.shape == stack.v.shape
+    assert out.stack.k.dtype == stack.k.dtype
+    assert out.tokens.shape == tokens.shape
+    assert out.tokens.dtype == tokens.dtype
+    assert nbytes > 0
+
+
+def test_quant_channel_reconstruction_close():
+    stack = _stack(S=32)
+    out, _ = TR.QuantChannel(jnp.float32).transmit(TR.stack_message(stack))
+    rel = float(jnp.abs(out.stack.k - stack.k).max()
+                / jnp.abs(stack.k).max())
+    assert rel < 0.02  # int8 per-channel round trip
+
+
+def test_rephrase_channel_preserves_synonym_class():
+    ch = synonym_channel(64, 4, KEY)
+    tokens = jax.random.randint(KEY, (2, 8), 0, 64)
+    out, _ = TR.RephraseChannel(ch, KEY).transmit(TR.token_message(tokens))
+    assert (ch.class_of[tokens] == ch.class_of[out.tokens]).all()
+
+
+# ---------------------------------------------------------- byte accounting
+
+
+def test_identity_bytes_match_commload_c2c():
+    """Measured IdentityChannel bytes over a real exported stack == the
+    analytic c2c_bytes_total the protocol model uses."""
+    cfg = ModelConfig(name="bytes-tiny", family="dense", num_layers=2,
+                      d_model=32, num_heads=2, num_kv_heads=2, head_dim=8,
+                      d_ff=64, vocab_size=64, tie_embeddings=True)
+    params = T.init_params(cfg, KEY, jnp.float32)
+    S = 10
+    prompt = jax.random.randint(KEY, (1, S), 0, 64)
+    _, cache = T.prefill(cfg, params, prompt, max_seq=S,
+                         cache_dtype=jnp.bfloat16)
+    stack = cache.export_stack(cfg, length=S)
+    wire = TR.IdentityChannel().encode(TR.stack_message(stack))
+    measured = TR.IdentityChannel().bytes_on_wire(wire)
+    assert measured == commload.c2c_bytes_total([cfg], S, dtype_bytes=2)
+    assert measured == commload.measured_bytes(stack)
+
+
+@given(st.integers(1, 4), st.integers(1, 64))
+def test_identity_bytes_match_commload_t2t(B, S):
+    tokens = jnp.zeros((B, S), jnp.int32)
+    wire = TR.IdentityChannel().encode(TR.token_message(tokens))
+    assert (TR.IdentityChannel().bytes_on_wire(wire)
+            == B * S * commload.t2t_bytes_per_token())
+
+
+def test_quant_bytes_match_quantized_bytes():
+    stack = _stack(n=3, B=2, S=16)
+    wire = TR.QuantChannel().encode(TR.stack_message(stack))
+    assert TR.QuantChannel().bytes_on_wire(wire) == quant.quantized_bytes(stack)
+
+
+# --------------------------------------------------------- paged slot table
+
+
+def _tiny_cfg():
+    return ModelConfig(name="paged-tiny", family="dense", num_layers=3,
+                       d_model=32, num_heads=2, num_kv_heads=1, head_dim=16,
+                       d_ff=64, vocab_size=64, tie_embeddings=True)
+
+
+def _visible(table_cache: KVCache, slot: int, upto: int):
+    """K/V content the position mask exposes for ``slot``."""
+    return [(np.asarray(e["k"][:, slot, :, :upto]),
+             np.asarray(e["v"][:, slot, :, :upto]))
+            for e in table_cache.layers]
+
+
+@given(st.integers(2, 4), st.integers(1, 12))
+@settings(max_examples=8)
+def test_paged_insert_evict_equals_dense_reference(slots, length):
+    """SlotTable insert/evict == the dense KVCache slot reference on every
+    position the mask exposes, for random slots/lengths."""
+    cfg = _tiny_cfg()
+    params = T.init_params(cfg, KEY, jnp.float32)
+    max_seq, page = 16, 4
+    dense = KVCache.init_slots(cfg, slots, max_seq, jnp.float32)
+    paged = SlotTable.init(cfg, slots, max_seq, jnp.float32, page_size=page)
+    prompt = jax.random.randint(jax.random.fold_in(KEY, length),
+                                (1, length), 0, 64)
+    _, req = T.prefill(cfg, params, prompt, max_seq=max_seq,
+                       cache_dtype=jnp.float32)
+    slot = length % slots
+    need = -(-length // page)
+    page_ids = np.full((max_seq // page,), paged.invalid_page, np.int32)
+    page_ids[:need] = np.arange(need)
+    dense = dense.insert_slot(slot, req, length)
+    paged = paged.insert_slot(slot, req, length, jnp.asarray(page_ids))
+    assert paged.pos.tolist() == dense.pos.tolist()
+    for (dk, dv), (pk, pv) in zip(_visible(dense, slot, length),
+                                  _visible(paged.dense_view(), slot, length)):
+        assert np.array_equal(dk, pk) and np.array_equal(dv, pv)
+    # evict resets position and unmaps every page
+    dense = dense.evict_slot(slot)
+    paged = paged.evict_slot(slot)
+    assert paged.pos.tolist() == dense.pos.tolist() == [0] * slots
+    assert (np.asarray(paged.page_map[slot]) == paged.invalid_page).all()
+
+
+def test_paged_commit_scatters_decode_token():
+    """One decode step through the gathered view lands in the right physical
+    page, and the refreshed view equals a dense decode's cache content."""
+    cfg = _tiny_cfg()
+    params = T.init_params(cfg, KEY, jnp.float32)
+    max_seq, page, S = 16, 4, 6
+    prompt = jax.random.randint(KEY, (1, S), 0, 64)
+    _, req = T.prefill(cfg, params, prompt, max_seq=max_seq,
+                       cache_dtype=jnp.float32)
+    dense = KVCache.init_slots(cfg, 2, max_seq, jnp.float32)
+    paged = SlotTable.init(cfg, 2, max_seq, jnp.float32, page_size=page)
+    page_ids = np.full((max_seq // page,), paged.invalid_page, np.int32)
+    page_ids[:2] = [3, 1]  # deliberately non-contiguous physical pages
+    dense = dense.insert_slot(0, req, S)
+    paged = paged.insert_slot(0, req, S, jnp.asarray(page_ids))
+    tok = jnp.asarray([7, 0], jnp.int32)
+    lg_d, dense2 = T.decode_step(cfg, params, dense, tok)
+    lg_p, view2 = T.decode_step(cfg, params, paged.dense_view(), tok)
+    assert np.array_equal(np.asarray(lg_d[0]), np.asarray(lg_p[0]))
+    paged2 = paged.commit(view2, view2.pos)
+    for (dk, dv), (pk, pv) in zip(_visible(dense2, 0, S + 1),
+                                  _visible(paged2.dense_view(), 0, S + 1)):
+        assert np.array_equal(dk, pk) and np.array_equal(dv, pv)
+
+
+def test_quant_channel_restores_source_dtype_by_default():
+    """QuantChannel() with no dtype reconstructs at the ENCODED stack's dtype
+    (the round-trip contract), via the zero-byte dtype marker."""
+    for dtype in (jnp.float32, jnp.bfloat16):
+        stack = _stack(dtype=dtype)
+        wire = TR.QuantChannel().encode(TR.stack_message(stack))
+        assert TR.QuantChannel().bytes_on_wire(wire) == quant.quantized_bytes(
+            stack)  # the marker adds zero wire bytes
+        out = TR.QuantChannel().decode(wire)
+        assert out.stack.k.dtype == dtype
+
+
+def test_rephrase_channel_distinct_draws_per_transmit():
+    """Repeated encodes fold a call counter into the key: two transmissions
+    of one prompt get different rephrasings (transmitter diversity)."""
+    ch = synonym_channel(64, 2, KEY)
+    tokens = jax.random.randint(KEY, (4, 16), 0, 64)
+    rc = TR.RephraseChannel(ch, KEY)
+    a, _ = rc.transmit(TR.token_message(tokens))
+    b, _ = rc.transmit(TR.token_message(tokens))
+    assert not np.array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+    assert (ch.class_of[a.tokens] == ch.class_of[b.tokens]).all()
