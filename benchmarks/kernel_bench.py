@@ -51,6 +51,24 @@ def run() -> list:
     qstack = {kk: qs[kk][0] for kk in ("k_q", "v_q", "k_scale", "v_scale")}
     rows.append(("decode_attn_q8_pallas_interp",
                  _timed(lambda: ops.decode_attention_q8(q, qstack, bias))))
+    # paged flash-decode: in-place page-map walk vs gather-then-attend oracle
+    # (half-occupied slots: the in-place walk touches half the pool pages)
+    pg, pps, slots = 64, S // 64, B
+    num_pages = slots * pps
+    k_pool = k.transpose(0, 2, 1, 3).reshape(num_pages, pg, Hkv, hd
+                                             ).transpose(0, 2, 1, 3)
+    v_pool = v.transpose(0, 2, 1, 3).reshape(num_pages, pg, Hkv, hd
+                                             ).transpose(0, 2, 1, 3)
+    pm = jnp.arange(num_pages, dtype=jnp.int32).reshape(slots, pps)
+    pm = jnp.where(jnp.arange(pps)[None, :] < pps // 2, pm, num_pages)
+    lengths = jnp.full((slots,), S // 2, jnp.int32)
+    rows.append(("paged_decode_pallas_interp",
+                 _timed(lambda: ops.paged_decode_attention(
+                     q, k_pool, v_pool, pm, lengths))))
+    rows.append(("paged_decode_gather_jnp", _timed(
+        jax.jit(lambda qq: ref.paged_decode_attention_ref(
+            qq.reshape(B, Hkv, H // Hkv, hd), k_pool, v_pool, pm, lengths)),
+        q)))
     # banded SWA prefill vs dense-masked reference at window << S
     Sb, w = 2048, 256
     qb = jax.random.normal(key, (1, 4, Sb, 64), jnp.float32)

@@ -76,9 +76,10 @@ def banded_attention_pallas(
     block: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
+    from repro.kernels.decode_attention import _check_block
     BH, S, hd = q.shape
     blk = min(block, S)
-    assert S % blk == 0, (S, blk)
+    _check_block(S, blk, "banded_attention_pallas")
     nq = S // blk
     # band width in blocks: the diagonal block + enough to cover the window
     nband = min(-(-window // blk) + 1, nq)

@@ -22,7 +22,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-_NEG = -1e30  # python scalar: jnp constants would be captured as kernel consts
+# THE mask constant, shared by every kernel module (ops._MASK and
+# paged_attention import it): a python scalar (jnp constants would be captured
+# as kernel consts) whose value is coupled to the hardened-finish dead-row
+# test ``m > _NEG / 2`` — change it only in this one place.
+_NEG = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref, acc_ref):
@@ -51,8 +55,13 @@ def _kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref, acc_ref):
 
     @pl.when(s_idx == n_s - 1)
     def _finish():
-        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
-            o_ref.dtype)
+        # Fully-masked rows (bias all _NEG — e.g. an empty engine slot) would
+        # otherwise yield scores ≈ m ≈ _NEG, p = exp(0) = 1: *uniform*
+        # attention over uninitialized KV. Emit exact zeros instead so garbage
+        # can never leak past the slot mask.
+        seen = m_ref[...] > _NEG / 2
+        o = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = jnp.where(seen, o, 0.0).astype(o_ref.dtype)
 
 
 def _kernel_q8(q_ref, k_ref, v_ref, ks_ref, vs_ref, bias_ref, o_ref,
@@ -85,8 +94,19 @@ def _kernel_q8(q_ref, k_ref, v_ref, ks_ref, vs_ref, bias_ref, o_ref,
 
     @pl.when(s_idx == n_s - 1)
     def _finish():
-        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
-            o_ref.dtype)
+        seen = m_ref[...] > _NEG / 2  # see _kernel._finish
+        o = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = jnp.where(seen, o, 0.0).astype(o_ref.dtype)
+
+
+def _check_block(S: int, bs: int, caller: str) -> None:
+    """A bare ``assert`` here vanishes under ``python -O`` and turns a shape
+    bug into silent BlockSpec corruption — fail loudly instead."""
+    if bs < 1 or S % bs:
+        raise ValueError(
+            f"{caller}: sequence length S={S} is not divisible by "
+            f"block_s={bs}; pad S to a block multiple (ops._seq_tile) or "
+            f"pass a dividing block_s")
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
@@ -104,7 +124,7 @@ def decode_attention_q8_pallas(
     B, Hkv, G, hd = q.shape
     S = k_q.shape[2]
     bs = min(block_s, S)
-    assert S % bs == 0, (S, bs)
+    _check_block(S, bs, "decode_attention_q8_pallas")
     grid = (B, Hkv, S // bs)
 
     return pl.pallas_call(
@@ -142,7 +162,7 @@ def decode_attention_pallas(
     B, Hkv, G, hd = q.shape
     S = k.shape[2]
     bs = min(block_s, S)
-    assert S % bs == 0, (S, bs)
+    _check_block(S, bs, "decode_attention_pallas")
     grid = (B, Hkv, S // bs)
 
     return pl.pallas_call(

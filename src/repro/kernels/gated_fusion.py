@@ -37,9 +37,10 @@ def gated_fusion_pallas(
     block_s: int = 256,
     interpret: bool = False,
 ) -> tuple:
+    from repro.kernels.decode_attention import _check_block
     n, R, S, hd = k_own.shape
     bs = min(block_s, S)
-    assert S % bs == 0, (S, bs)
+    _check_block(S, bs, "gated_fusion_pallas")
     grid = (n, R, S // bs)
     specs = pl.BlockSpec((1, 1, bs, hd), lambda l, r, s: (l, r, s, 0))
     gspec = pl.BlockSpec((1,), lambda l, r, s: (l,))

@@ -13,6 +13,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.decode_attention import _NEG as _MASK  # shared mask const
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.fuser_mlp import fuser_mlp_pallas
 from repro.kernels.gated_fusion import gated_fusion_pallas
@@ -23,6 +24,29 @@ def _interpret() -> bool:
     if env is not None:
         return env not in ("0", "false")
     return jax.default_backend() != "tpu"
+
+
+def _seq_tile(S: int, block: int) -> tuple[int, int]:
+    """Pick a sequence block size and the padded length it implies.
+
+    Preference order: (1) ``min(block, S)`` when it divides S — no padding;
+    (2) a halved power-of-two divisor, but only down to 64 (the old
+    ``while S % bs: bs //= 2`` fallback degraded all the way to ``bs = 1``
+    for odd/prime S — e.g. an unpadded fused-prefix length — launching an
+    S-program grid); (3) otherwise keep a lane-aligned power-of-two block
+    and pad the tail instead (callers mask padded keys with ``_MASK`` bias /
+    positional masks and un-pad the output).
+    """
+    bs = min(block, S)
+    if S % bs == 0:
+        return bs, S
+    b = bs
+    while b > 64 and S % b:
+        b //= 2
+    if S % b == 0:
+        return b, S
+    bs = max(8, min(block, 1 << (S - 1).bit_length()))
+    return bs, S + (-S) % bs
 
 
 def fuser_mlp(mlp_params: dict, x: jax.Array, *, block_t: int = 128) -> jax.Array:
@@ -50,13 +74,26 @@ def fuser_mlp(mlp_params: dict, x: jax.Array, *, block_t: int = 128) -> jax.Arra
 def gated_fusion(k_own, v_own, k_proj, v_proj, gate, *, block_s: int = 256):
     """Gated mix over stacked caches (n, B, Hkv, S, hd) + gate (n,)."""
     n, B, H, S, hd = k_own.shape
-    rs = lambda a: a.reshape(n, B * H, S, hd)
-    bs = min(block_s, S)
-    while S % bs:
-        bs //= 2
+    bs, Sp = _seq_tile(S, block_s)
+    pad5 = ((0, 0), (0, 0), (0, 0), (0, Sp - S), (0, 0))
+    rs = lambda a: jnp.pad(a, pad5).reshape(n, B * H, Sp, hd)
     k, v = gated_fusion_pallas(rs(k_own), rs(v_own), rs(k_proj), rs(v_proj),
                                gate, block_s=bs, interpret=_interpret())
-    return k.reshape(k_own.shape), v.reshape(v_own.shape)
+    k = k.reshape(n, B, H, Sp, hd)[..., :S, :]
+    v = v.reshape(n, B, H, Sp, hd)[..., :S, :]
+    return k, v
+
+
+def _pad_keys(k, v, bias, S: int, Sp: int):
+    """Right-pad k/v (B,Hkv,S,hd) with zero keys and bias (B,S) with _MASK so
+    the padded tail carries exactly zero attention mass."""
+    if Sp == S:
+        return k, v, bias
+    pad = Sp - S
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    bias = jnp.pad(bias, ((0, 0), (0, pad)), constant_values=_MASK)
+    return k, v, bias
 
 
 def decode_attention(q, k, v, bias, *, block_s: int = 512):
@@ -66,11 +103,10 @@ def decode_attention(q, k, v, bias, *, block_s: int = 512):
     G = H // Hkv
     qg = q.reshape(B, Hkv, G, hd)
     S = k.shape[2]
-    bs = min(block_s, S)
-    while S % bs:
-        bs //= 2
-    out = decode_attention_pallas(qg, k, v, bias.astype(jnp.float32),
-                                  block_s=bs, interpret=_interpret())
+    bs, Sp = _seq_tile(S, block_s)
+    k, v, bias = _pad_keys(k, v, bias.astype(jnp.float32), S, Sp)
+    out = decode_attention_pallas(qg, k, v, bias, block_s=bs,
+                                  interpret=_interpret())
     return out.reshape(B, H, hd)
 
 
@@ -78,13 +114,14 @@ def banded_attention(q, k, v, *, window: int, block: int = 256):
     """Sliding-window prefill attention, O(S·window). q/k/v (B, H, S, hd)."""
     from repro.kernels.banded_attention import banded_attention_pallas
     B, H, S, hd = q.shape
-    rs = lambda a: a.reshape(B * H, S, hd)
-    blk = min(block, S)
-    while S % blk:
-        blk //= 2
+    blk, Sp = _seq_tile(S, block)
+    pad4 = ((0, 0), (0, 0), (0, Sp - S), (0, 0))
+    # padded queries land after every real key (sliced off below); padded keys
+    # sit at positions > every real query, so causality already masks them
+    rs = lambda a: jnp.pad(a, pad4).reshape(B * H, Sp, hd)
     out = banded_attention_pallas(rs(q), rs(k), rs(v), window=window,
                                   block=blk, interpret=_interpret())
-    return out.reshape(B, H, S, hd)
+    return out.reshape(B, H, Sp, hd)[..., :S, :]
 
 
 def decode_attention_q8(q, qstack, bias, *, block_s: int = 512):
@@ -95,12 +132,53 @@ def decode_attention_q8(q, qstack, bias, *, block_s: int = 512):
     Hkv = qstack["k_q"].shape[1]
     G = H // Hkv
     S = qstack["k_q"].shape[2]
-    bs = min(block_s, S)
-    while S % bs:
-        bs //= 2
+    bs, Sp = _seq_tile(S, block_s)
+    k_q, v_q, bias = _pad_keys(qstack["k_q"], qstack["v_q"],
+                               bias.astype(jnp.float32), S, Sp)
     out = decode_attention_q8_pallas(
-        q.reshape(B, Hkv, G, hd), qstack["k_q"], qstack["v_q"],
+        q.reshape(B, Hkv, G, hd), k_q, v_q,
         qstack["k_scale"].astype(jnp.float32),
         qstack["v_scale"].astype(jnp.float32),
-        bias.astype(jnp.float32), block_s=bs, interpret=_interpret())
+        bias, block_s=bs, interpret=_interpret())
     return out.reshape(B, H, hd)
+
+
+# ------------------------------------------------------------------ paged
+
+
+def paged_decode_attention(q, k_pool, v_pool, page_map, lengths):
+    """Flash decode that walks a paged KV pool in-place (no gathered view).
+
+    q (slots, H, hd) with GQA heads; k_pool/v_pool (num_pages, Hkv,
+    page_size, hd); page_map (slots, pages_per_slot) int32 physical page ids
+    (num_pages == INVALID_PAGE); lengths (slots,) int32 live tokens per slot.
+
+    Returns ``(out (slots, H, hd), m (slots, H), l (slots, H))`` — the online
+    softmax statistics let the caller LSE-merge a fused C2C prefix segment
+    (models/attention.merge_attention) without concatenating caches. Rows with
+    no live page (evicted slots) return zeros with l == 0.
+    """
+    from repro.kernels.paged_attention import paged_decode_attention_pallas
+    B, H, hd = q.shape
+    Hkv = k_pool.shape[1]
+    G = H // Hkv
+    out, m, l = paged_decode_attention_pallas(
+        q.reshape(B, Hkv, G, hd), k_pool, v_pool, page_map, lengths,
+        interpret=_interpret())
+    return out.reshape(B, H, hd), m.reshape(B, H), l.reshape(B, H)
+
+
+def paged_decode_attention_q8(q, qpool, page_map, lengths):
+    """int8-pool twin of :func:`paged_decode_attention`: qpool is
+    {"k_q","v_q" int8 (num_pages,Hkv,page_size,hd),
+    "k_scale","v_scale" fp32 (num_pages,Hkv,1,hd)} (per-page scales)."""
+    from repro.kernels.paged_attention import paged_decode_attention_q8_pallas
+    B, H, hd = q.shape
+    Hkv = qpool["k_q"].shape[1]
+    G = H // Hkv
+    out, m, l = paged_decode_attention_q8_pallas(
+        q.reshape(B, Hkv, G, hd), qpool["k_q"], qpool["v_q"],
+        qpool["k_scale"].astype(jnp.float32),
+        qpool["v_scale"].astype(jnp.float32),
+        page_map, lengths, interpret=_interpret())
+    return out.reshape(B, H, hd), m.reshape(B, H), l.reshape(B, H)

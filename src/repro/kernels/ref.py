@@ -4,6 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.decode_attention import _NEG  # the one shared mask const
+
 
 def fuser_mlp_ref(x, w1, b1, w2, b2, w3, b3):
     """3-layer SiLU MLP, fp32 accumulation to match the kernel."""
@@ -23,13 +25,43 @@ def gated_fusion_ref(k_own, v_own, k_proj, v_proj, gate):
 
 
 def decode_attention_ref(q, k, v, bias):
-    """q (B,Hkv,G,hd), k/v (B,Hkv,S,hd), bias (B,S) additive fp32."""
+    """q (B,Hkv,G,hd), k/v (B,Hkv,S,hd), bias (B,S) additive fp32.
+
+    Matches the hardened kernel contract: a row whose bias masks every key
+    returns exact zeros (softmax alone would return uniform attention over
+    the garbage values)."""
     scores = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32),
                         k.astype(jnp.float32)) * (q.shape[-1] ** -0.5)
     scores = scores + bias[:, None, None, :].astype(jnp.float32)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgs,bhsd->bhgd", w, v.astype(jnp.float32))
-    return out.astype(q.dtype)
+    any_live = (bias > _NEG / 2).any(axis=-1)[:, None, None, None]
+    return jnp.where(any_live, out, 0.0).astype(q.dtype)
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, page_map, lengths):
+    """Gather-then-attend oracle for the paged flash-decode kernel.
+
+    q (slots, Hkv, G, hd); k_pool/v_pool (num_pages, Hkv, page_size, hd);
+    page_map (slots, pages_per_slot) int32 with num_pages == INVALID;
+    lengths (slots,) int32. Mirrors SlotTable.dense_view(): clamp-gather every
+    mapped page, then mask unmapped pages and beyond-length positions; rows
+    with no live key return zeros (the hardened kernel contract)."""
+    num_pages, Hkv, pg, hd = k_pool.shape
+    slots, pps = page_map.shape
+    pm = jnp.minimum(page_map, num_pages - 1)
+
+    def gather(pool):
+        v = pool[pm]  # (slots, pps, Hkv, pg, hd)
+        return v.transpose(0, 2, 1, 3, 4).reshape(slots, Hkv, pps * pg, hd)
+
+    t = jnp.arange(pps * pg)
+    mapped = jnp.repeat(page_map < num_pages, pg, axis=1)  # (slots, pps*pg)
+    live = mapped & (t[None, :] < lengths[:, None])
+    bias = jnp.where(live, 0.0, _NEG)
+    out = decode_attention_ref(q, gather(k_pool), gather(v_pool), bias)
+    any_live = live.any(axis=-1)[:, None, None, None]
+    return jnp.where(any_live, out, 0.0).astype(q.dtype)
 
 
 def banded_attention_ref(q, k, v, *, window: int):
@@ -40,6 +72,6 @@ def banded_attention_ref(q, k, v, *, window: int):
     qpos = jnp.arange(S)[:, None]
     kpos = jnp.arange(S)[None, :]
     mask = (kpos <= qpos) & (kpos > qpos - window)
-    s = jnp.where(mask[None], s, -1e30)
+    s = jnp.where(mask[None], s, _NEG)
     w = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("rst,rtd->rsd", w, v.astype(jnp.float32)).astype(q.dtype)

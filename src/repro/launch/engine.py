@@ -21,7 +21,13 @@ Design:
     ``max_seq`` — benchmarks/engine_bench.py shows ≥2× at equal HBM with
     byte-identical decode outputs. Pages are allocated host-side at admission
     (enough for prompt + max_new_tokens, so decode never allocates) and
-    returned to the free list on completion.
+    returned to the free list on completion. The decode step attends
+    **in place**: the paged Pallas kernel (kernels/paged_attention.py) walks
+    each slot's page map with scalar prefetch, reading only the pages that
+    hold live tokens — no per-step ``dense_view()`` gather, no ``commit()``
+    scatter-back (``paged_attention="gather"`` keeps the old gathered-view
+    path as the debug/parity reference; engine_bench pins the two paths
+    token-identical and reports the HBM bytes saved).
 
 - **Admission queue** — ``submit()`` enqueues; each ``step()`` first admits
   queued requests into free slots, so requests join mid-flight without
@@ -121,11 +127,16 @@ class ContinuousBatchingEngine:
         paged: bool = False,
         page_size: int = 16,
         num_pages: Optional[int] = None,
+        paged_attention: str = "kernel",
     ):
         if max_prefix and not cfg.attention_layers:
             raise ValueError("fused prefixes need attention layers (C2C medium)")
         if admit_batch < 1:
             raise ValueError("admit_batch must be >= 1")
+        if paged_attention not in ("kernel", "gather"):
+            raise ValueError(f"paged_attention must be 'kernel' (in-place "
+                             f"Pallas walk) or 'gather' (dense_view "
+                             f"reference), got {paged_attention!r}")
         self.cfg, self.params = cfg, params
         self.max_slots, self.max_seq = max_slots, max_seq
         self.max_prefix = max_prefix
@@ -133,6 +144,7 @@ class ContinuousBatchingEngine:
         self.admit_batch = admit_batch
         self.paged = paged
         self.page_size = page_size
+        self.paged_attention = paged_attention
         # exact-length prefill unless the model is pure full-attention:
         # right-padded prompts pollute rec/ssd left-to-right state, and pad
         # writes can wrap a swa ring buffer and evict real in-window entries
@@ -169,7 +181,7 @@ class ContinuousBatchingEngine:
         self._next_rid = 0
         self.stats = {"decode_traces": 0, "prefill_traces": 0, "admitted": 0,
                       "completed": 0, "decode_steps": 0, "admit_batches": 0,
-                      "peak_active": 0}
+                      "peak_active": 0, "decode_view_gathers": 0}
         self._decode = jax.jit(self._make_decode())
         self._prefill = jax.jit(self._make_prefill())
         if paged:
@@ -186,17 +198,30 @@ class ContinuousBatchingEngine:
     # ------------------------------------------------------------- jitted fns
     def _make_decode(self):
         cfg, paged = self.cfg, self.paged
+        in_place = paged and self.paged_attention == "kernel"
 
         def decode(params, table, tok, fused, active):
             self.stats["decode_traces"] += 1  # trace-time: counts compilations
-            view = table.dense_view() if paged else table
             ek = fused.to_extra_kv(cfg) if fused is not None else None
+            if in_place:
+                # paged hot loop: decode_step dispatches on the SlotTable and
+                # walks page maps inside the Pallas kernel — no dense_view()
+                # gather, no commit() scatter-back
+                logits, new_table = T.decode_step(cfg, params, table, tok,
+                                                  extra_kv=ek)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                nxt = jnp.where(active, nxt, tok)
+                # hold inactive slots in place so their position never grows
+                # past max_seq while they wait for the next occupant
+                return nxt, new_table.with_pos(
+                    jnp.where(active, new_table.pos, table.pos))
+            if paged:  # gather reference path (debug/parity)
+                self.stats["decode_view_gathers"] += 1
+            view = table.dense_view() if paged else table
             logits, new_view = T.decode_step(cfg, params, view, tok,
                                              extra_kv=ek)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             nxt = jnp.where(active, nxt, tok)
-            # hold inactive slots in place so their position never grows past
-            # max_seq while they wait for the next occupant
             pos = jnp.where(active, new_view.pos, table.pos)
             if paged:
                 # scatter this step's tokens back to their physical pages;
@@ -437,3 +462,28 @@ class ContinuousBatchingEngine:
         from repro.models.cache import tree_bytes
 
         return tree_bytes(self._table.layers)
+
+    def kv_read_bytes_per_step(self) -> Dict[str, int]:
+        """Analytic KV HBM bytes one decode step reads, at the engine's
+        *current* occupancy (call it mid-flight).
+
+        ``paged_kernel`` counts only the pages that hold live tokens — what
+        the in-place kernel DMAs (Σ_active ceil((pos+1)/page_size) pages).
+        ``dense_gather`` counts every slot's full row — what the
+        ``dense_view()`` gather path reads no matter how little of each slot
+        is live (slots × view_seq for paged-gather, slots × max_seq dense).
+        k + v, summed over all stacked attention layer entries."""
+        itemsize = jnp.dtype(self.cache_dtype).itemsize
+        n_entries = sum(int(e["k"].shape[0]) for e in self._table.layers)
+        row_bytes = 2 * self.cfg.num_kv_heads * self.cfg.resolved_head_dim \
+            * itemsize * n_entries  # k+v bytes per cached token
+        pos = np.asarray(self._table.pos)
+        if self.paged:
+            pg = self.page_size
+            live = pos[self._active] + 1
+            pages = int(np.sum(-(-live // pg)))  # ceil
+            view_seq = self._table.view_seq
+            return {"paged_kernel": pages * pg * row_bytes,
+                    "dense_gather": self.max_slots * view_seq * row_bytes}
+        return {"paged_kernel": 0,
+                "dense_gather": self.max_slots * self.max_seq * row_bytes}

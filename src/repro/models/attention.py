@@ -378,3 +378,46 @@ def decode_forward(
 
     out = attend(q, k, v, mask, extra_bias)
     return L.linear(params["wo"], out), new_kv
+
+
+def decode_forward_paged(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,  # (slots, 1, d)
+    cos: jax.Array,  # (slots, 1, hd//2)
+    sin: jax.Array,
+    entry: dict,  # {"k","v"} page pools (num_pages, Hkv, page_size, hd)
+    page_map: jax.Array,  # (slots, pages_per_slot) int32
+    pos: jax.Array,  # (slots,) int32 per-slot decode position
+    *,
+    page_size: int,
+    extra_kv: Optional[dict] = None,  # fused C2C prefix, always visible
+) -> Tuple[jax.Array, dict]:
+    """Single-token decode straight against a paged page pool — the hot loop
+    never gathers a dense view. The new token's k/v scatter to their physical
+    page (SlotTable.write_token), the paged Pallas kernel walks the page map
+    in place, and a fused prefix is LSE-merged from the kernel's online
+    softmax statistics (no concatenated cache is ever formed).
+
+    Returns (out (slots, 1, d), updated {"k","v"} pools)."""
+    from repro.models.cache import SlotTable
+
+    q, k_new, v_new = project_qkv(cfg, params, x, cos, sin)  # q (B,H,1,hd)
+    k_pool = SlotTable.write_token(entry["k"], k_new[:, :, 0], page_map, pos,
+                                   page_size)
+    v_pool = SlotTable.write_token(entry["v"], v_new[:, :, 0], page_map, pos,
+                                   page_size)
+    o, m, l = SlotTable.attend(q[:, :, 0], k_pool, v_pool, page_map, pos + 1)
+    new_kv = {"k": k_pool, "v": v_pool}
+    if extra_kv is not None:
+        own = (o.astype(jnp.float32) * l[..., None])[:, :, None, :]
+        pb = (extra_kv["bias"][:, None, None, :]
+              if "bias" in extra_kv else None)
+        pre = attend_stats(q, extra_kv["k"].astype(k_pool.dtype),
+                           extra_kv["v"].astype(v_pool.dtype), None, pb)
+        out = merge_attention([(own, m[:, :, None], l[:, :, None]), pre])
+        out = out.astype(x.dtype)
+    else:
+        B, H, hd = o.shape
+        out = o.reshape(B, 1, H * hd)
+    return L.linear(params["wo"], out), new_kv

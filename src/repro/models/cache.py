@@ -497,6 +497,9 @@ class SlotTable:
     def nbytes(self) -> int:
         return tree_bytes(self)
 
+    def with_pos(self, pos) -> "SlotTable":
+        return dataclasses.replace(self, pos=jnp.asarray(pos, jnp.int32))
+
     @classmethod
     def init(
         cls,
@@ -535,13 +538,47 @@ class SlotTable:
             page_size=page_size,
         )
 
+    # ----------------------------------------------------- paged attention
+    @staticmethod
+    def write_token(pool: jax.Array, tok: jax.Array, page_map: jax.Array,
+                    pos: jax.Array, page_size: int) -> jax.Array:
+        """Scatter one new K (or V) token per slot straight into its physical
+        page — the in-place write the paged decode path uses instead of
+        writing into a gathered view and committing back.
+
+        ``pool`` (num_pages, Hkv, page_size, hd); ``tok`` (slots, Hkv, hd);
+        ``pos`` (slots,) absolute write position. Slots whose covering page
+        map entry is INVALID_PAGE (inactive/evicted) are dropped by the
+        scatter, so they can never corrupt pages reassigned to others."""
+        pps = page_map.shape[1]
+        page_idx = jnp.clip(pos // page_size, 0, pps - 1)
+        phys = jnp.take_along_axis(page_map, page_idx[:, None], axis=1)[:, 0]
+        off = pos % page_size
+        return pool.at[phys, :, off].set(tok.astype(pool.dtype), mode="drop")
+
+    @staticmethod
+    def attend(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+               page_map: jax.Array, lengths: jax.Array):
+        """GQA flash-decode over the page pool *in place* — the hot-loop path
+        that replaces ``dense_view()`` gathering (kernels/paged_attention.py
+        walks the page map with scalar prefetch and skips INVALID pages).
+
+        q (slots, H, hd); pools (num_pages, Hkv, page_size, hd); lengths
+        (slots,) live tokens. Returns (out (slots, H, hd), m, l) online
+        softmax stats so callers can LSE-merge a fused C2C prefix segment."""
+        from repro.kernels import ops
+
+        return ops.paged_decode_attention(q, k_pool, v_pool, page_map, lengths)
+
     # ------------------------------------------------------------- views
     def dense_view(self) -> KVCache:
         """Gather each slot's pages into a contiguous per-slot cache
-        (n, slots, Hkv, view_seq, hd) — the layout transformer.decode_step
-        consumes. Unallocated pages clamp to an arbitrary pool page; the
-        per-slot position mask hides their content (exact-zero attention
-        mass), so the view decodes byte-identically to a dense table."""
+        (n, slots, Hkv, view_seq, hd) — the layout transformer.decode_step's
+        dense path consumes. Unallocated pages clamp to an arbitrary pool
+        page; the per-slot position mask hides their content (exact-zero
+        attention mass), so the view decodes byte-identically to a dense
+        table. The decode hot loop now attends in place (:meth:`attend`);
+        this gather survives for export, debugging and parity checks."""
         pm = jnp.minimum(self.page_map, self.num_pages - 1)  # clamp sentinel
         slots, pps = pm.shape
 

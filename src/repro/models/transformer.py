@@ -30,7 +30,7 @@ from repro.models import layers as L
 from repro.models import moe as MOE
 from repro.models import rglru as RG
 from repro.models import ssd as SSD
-from repro.models.cache import KVCache
+from repro.models.cache import KVCache, SlotTable
 
 
 # ------------------------------------------------------------ act sharding
@@ -206,14 +206,21 @@ def _write_prefill_kv(entry: dict, kv: dict, window: int) -> dict:
 
 
 def _apply_layer_decode(cfg, kind, p, x, cos, sin, entry, pos, window,
-                        extra_kv=None, extra_kv_mode="concat"):
+                        extra_kv=None, extra_kv_mode="concat", paged=None):
     if kind in ("attn", "swa"):
         w = window if kind == "swa" else 0
-        h, new_kv = A.decode_forward(cfg, p["attn"],
-                                     L.rmsnorm(p["norm1"], x, cfg.norm_eps),
-                                     cos, sin, entry, pos, window=w,
-                                     extra_kv=extra_kv,
-                                     extra_kv_mode=extra_kv_mode)
+        xn = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        if paged is not None:  # entry is a page pool; attend in place
+            page_map, page_size = paged
+            h, new_kv = A.decode_forward_paged(cfg, p["attn"], xn, cos, sin,
+                                               entry, page_map, pos,
+                                               page_size=page_size,
+                                               extra_kv=extra_kv)
+        else:
+            h, new_kv = A.decode_forward(cfg, p["attn"], xn,
+                                         cos, sin, entry, pos, window=w,
+                                         extra_kv=extra_kv,
+                                         extra_kv_mode=extra_kv_mode)
         x = x + h
         h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
         if cfg.num_experts:
@@ -426,10 +433,16 @@ def decode_step(
 
     ``cache.pos`` may be a scalar (lockstep batch) or a per-row (B,) vector
     (continuous batching: each slot at its own position — launch/engine.py).
+    ``cache`` may also be a paged :class:`repro.models.cache.SlotTable`; the
+    step then dispatches to the in-place paged-attention path (per-layer page
+    pools + page map, no ``dense_view()`` gather on the hot loop).
 
     Returns (logits (B, V), updated cache)."""
     cycles, pattern, tail = layer_grouping(cfg)
-    cache = KVCache.ensure(cache)  # accepts legacy {"pos","layers"} dicts
+    paged = isinstance(cache, SlotTable)
+    paged_info = (cache.page_map, cache.page_size) if paged else None
+    if not paged:
+        cache = KVCache.ensure(cache)  # accepts legacy {"pos","layers"} dicts
     pos = cache.pos
     x = L.embed(params["embed"], token[:, None])
     B = x.shape[0]
@@ -452,7 +465,8 @@ def decode_step(
             e = ekx[i] if isinstance(ekx[i], dict) else None
             x, new_e = _apply_layer_decode(cfg, kind, p_stack[i], x, cos, sin,
                                            entries[i], pos, window, extra_kv=e,
-                                           extra_kv_mode=extra_kv_mode)
+                                           extra_kv_mode=extra_kv_mode,
+                                           paged=paged_info)
             new_entries.append(new_e)
         return x, tuple(new_entries)
 
@@ -476,9 +490,14 @@ def decode_step(
         e = jax.tree.map(lambda a: a[0], e) if e is not None else None
         x, new_e = _apply_layer_decode(cfg, kind, params["tail"][i], x, cos, sin,
                                        entry, pos, window, extra_kv=e,
-                                       extra_kv_mode=extra_kv_mode)
+                                       extra_kv_mode=extra_kv_mode,
+                                       paged=paged_info)
         new_layers.append(jax.tree.map(lambda a: a[None], new_e))
     logits = _logits_out(cfg, params, x)[:, 0]
+    if paged:
+        return logits, SlotTable(pos=pos + 1, page_map=cache.page_map,
+                                 layers=tuple(new_layers),
+                                 page_size=cache.page_size)
     return logits, KVCache(pos=pos + 1, layers=tuple(new_layers))
 
 

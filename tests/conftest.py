@@ -1,3 +1,4 @@
+import importlib.util
 import os
 
 # Tests must see the real (1-device) CPU platform — the 512-device override is
@@ -7,6 +8,42 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax
 import jax.numpy as jnp
 import pytest
+
+# ---------------------------------------------------------------- timeouts
+# CI installs pytest-timeout (requirements.txt) and the ``timeout`` ini key in
+# pyproject.toml gives every test a hard ceiling. Hermetic environments
+# without the plugin get this SIGALRM fallback so a hung interpret-mode
+# kernel still fails fast instead of stalling the whole gate. (Same spirit as
+# the hypothesis fallback shim in repro/testing/propcheck.py.)
+_HAVE_TIMEOUT_PLUGIN = importlib.util.find_spec("pytest_timeout") is not None
+
+if not _HAVE_TIMEOUT_PLUGIN:
+    def pytest_addoption(parser):
+        parser.addini("timeout", "per-test ceiling in seconds (fallback shim "
+                      "for pytest-timeout)", default="0")
+
+    @pytest.hookimpl(wrapper=True)
+    def pytest_runtest_call(item):
+        import signal
+
+        limit = float(item.config.getini("timeout") or 0)
+        marker = item.get_closest_marker("timeout")
+        if marker and marker.args:
+            limit = float(marker.args[0])
+        if limit <= 0 or not hasattr(signal, "SIGALRM"):
+            return (yield)
+
+        def _alarm(signum, frame):
+            pytest.fail(f"test exceeded the {limit:.0f}s per-test ceiling "
+                        f"(conftest pytest-timeout shim)", pytrace=False)
+
+        old = signal.signal(signal.SIGALRM, _alarm)
+        signal.setitimer(signal.ITIMER_REAL, limit)
+        try:
+            return (yield)
+        finally:
+            signal.setitimer(signal.ITIMER_REAL, 0)
+            signal.signal(signal.SIGALRM, old)
 
 
 @pytest.fixture(scope="session")

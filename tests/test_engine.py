@@ -338,6 +338,90 @@ def test_paged_blocks_admission_until_pages_free(cfg, params):
     assert np.array_equal(done[r3], _solo(cfg, params, p1, 3, 32))
 
 
+def test_paged_kernel_path_matches_gather_path(cfg, params):
+    """The in-place paged-attention kernel (default) and the dense_view()
+    gather reference produce identical tokens; the kernel path never gathers
+    a dense view during decode."""
+    key = jax.random.PRNGKey(25)
+    reqs = [(_prompt(jax.random.fold_in(key, i), 4 + i), 3 + i)
+            for i in range(4)]
+    mk = lambda mode: ContinuousBatchingEngine(
+        cfg, params, max_slots=2, max_seq=48, paged=True, page_size=8,
+        paged_attention=mode)
+    kern, gath = mk("kernel"), mk("gather")
+    rk = [kern.submit(p, n) for p, n in reqs]
+    rg = [gath.submit(p, n) for p, n in reqs]
+    out_k = {c.rid: c.tokens for c in kern.drain()}
+    out_g = {c.rid: c.tokens for c in gath.drain()}
+    for a, b in zip(rk, rg):
+        assert np.array_equal(out_k[a], out_g[b])
+    assert kern.stats["decode_view_gathers"] == 0
+    assert gath.stats["decode_view_gathers"] == 1  # trace-time: once
+    assert kern.stats["decode_traces"] == 1
+
+
+def test_paged_kernel_with_fused_prefix_matches_dense():
+    """C2C through the paged kernel: the fused prefix is LSE-merged from the
+    kernel's online-softmax stats, and still matches the dense engine's
+    concat-path tokens."""
+    rx, p_rx, tx, p_tx, fz = _tiny_c2c()
+    key = jax.random.PRNGKey(26)
+    pa, pb = _prompt(key, 6), _prompt(jax.random.fold_in(key, 1), 5)
+    _, txc = T.prefill(tx, p_tx, pa, max_seq=6, cache_dtype=jnp.float32)
+    fused = F.project_cache(fz, tx, rx, txc.export_stack(tx, length=6))
+    outs = {}
+    for name, kw in (("dense", {}), ("paged", dict(paged=True, page_size=8))):
+        eng = ContinuousBatchingEngine(rx, p_rx, max_slots=2, max_seq=40,
+                                       max_prefix=8, **kw)
+        ra = eng.submit(pa, 7, fused=fused)
+        rb = eng.submit(pb, 7)
+        done = {c.rid: c.tokens for c in eng.drain()}
+        outs[name] = (done[ra], done[rb])
+    assert np.array_equal(outs["dense"][0], outs["paged"][0])
+    assert np.array_equal(outs["dense"][1], outs["paged"][1])
+
+
+def test_paged_kernel_decode_step_direct(cfg, params):
+    """transformer.decode_step dispatches on the SlotTable type: one step on a
+    paged table == one step on its dense_view, and the new token lands on the
+    right physical page (in-place write, no commit)."""
+    from repro.models.cache import SlotTable
+
+    table = SlotTable.init(cfg, 2, 32, jnp.float32, page_size=8)
+    p = _prompt(jax.random.PRNGKey(27), 6)
+    _, req = T.prefill(cfg, params, p, max_seq=32, cache_dtype=jnp.float32)
+    pages = np.full((4,), table.invalid_page, np.int32)
+    pages[:2] = [3, 1]  # out-of-order physical pages
+    table = table.insert_slot(0, req, 6, jnp.asarray(pages))
+    tok = jnp.array([7, 0], jnp.int32)
+    lg_paged, new_table = T.decode_step(cfg, params, table, tok)
+    lg_dense, _ = T.decode_step(cfg, params, table.dense_view(), tok)
+    assert isinstance(new_table, SlotTable)
+    assert jnp.argmax(lg_paged[0]) == jnp.argmax(lg_dense[0])
+    assert float(jnp.abs(lg_paged[0] - lg_dense[0]).max()) < 1e-4
+    # token at pos 6 -> page idx 0 -> physical page 3, offset 6
+    e_new, e_old = new_table.layers[0], table.layers[0]
+    assert float(jnp.abs(e_new["k"][:, 3, :, 6] - e_old["k"][:, 3, :, 6]).max()) > 0.0
+    assert np.array_equal(new_table.page_map, table.page_map)
+    assert new_table.pos.tolist() == [7, 1]
+
+
+def test_kv_read_bytes_per_step_accounting(cfg, params):
+    """The analytic HBM metric: in-place kernel bytes scale with live tokens,
+    gather bytes with slots x view_seq (the engine_bench acceptance metric)."""
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=4, max_seq=32,
+                                   paged=True, page_size=8)
+    for i in range(4):
+        eng.submit(_prompt(jax.random.fold_in(jax.random.PRNGKey(28), i), 5), 4)
+    eng.step()  # all admitted, pos == 5 -> 1 page each
+    b = eng.kv_read_bytes_per_step()
+    n_entries = sum(int(e["k"].shape[0]) for e in eng._table.layers)
+    row = 2 * cfg.num_kv_heads * cfg.resolved_head_dim * 4 * n_entries
+    assert b["paged_kernel"] == 4 * 8 * row       # 4 slots x 1 live page
+    assert b["dense_gather"] == 4 * 32 * row      # 4 slots x view_seq
+    assert b["paged_kernel"] < b["dense_gather"]
+
+
 def test_paged_requires_pure_attention():
     from repro.configs.base import get_smoke_config
 

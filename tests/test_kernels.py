@@ -56,7 +56,8 @@ def test_gated_fusion_sweep(n, B, H, S, hd, dt):
 
 
 @pytest.mark.parametrize("B,H,Hkv,S,hd", [
-    (2, 8, 2, 256, 64), (1, 4, 4, 128, 32), (2, 16, 1, 512, 128),
+    (2, 8, 2, 256, 64), (1, 4, 4, 128, 32),
+    pytest.param(2, 16, 1, 512, 128, marks=pytest.mark.slow),  # largest interp case
     (1, 8, 8, 96, 64),
 ])
 @pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
@@ -120,8 +121,239 @@ def test_project_cache_kernel_path_exact():
         assert float(jnp.abs(a[kk] - b[kk]).max()) == 0.0
 
 
+# ------------------------------------------------- odd/prime S (padded tail)
+
+
+@pytest.mark.parametrize("S", [13, 97, 251])
+def test_decode_attention_odd_prime_S(S):
+    """Odd/prime S (an unpadded fused-prefix length) must not degrade the
+    block size to 1 (an S-program grid): ops pads to a lane-aligned block
+    with -inf bias on the tail and unpads the output."""
+    B, H, Hkv, hd = 2, 4, 2, 32
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd))
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd))
+    bias = jnp.where(jax.random.uniform(ks[3], (B, S)) < 0.25, -1e30, 0.0)
+    o1 = ops.decode_attention(q, k, v, bias)
+    o2 = ref.decode_attention_ref(q.reshape(B, Hkv, H // Hkv, hd), k, v,
+                                  bias).reshape(B, H, hd)
+    assert o1.shape == (B, H, hd)
+    assert float(jnp.abs(o1 - o2).max()) < 1e-4
+
+
+def test_decode_attention_q8_odd_S():
+    B, H, Hkv, S, hd = 1, 4, 2, 37, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kf = jax.random.normal(ks[1], (B, Hkv, S, hd))
+    vf = jax.random.normal(ks[2], (B, Hkv, S, hd))
+    scale = jnp.full((B, Hkv, 1, hd), 0.02, jnp.float32)
+    qstack = {"k_q": jnp.clip(jnp.round(kf / 0.02), -127, 127).astype(jnp.int8),
+              "v_q": jnp.clip(jnp.round(vf / 0.02), -127, 127).astype(jnp.int8),
+              "k_scale": scale, "v_scale": scale}
+    o1 = ops.decode_attention_q8(q, qstack, jnp.zeros((B, S)))
+    o2 = ref.decode_attention_ref(
+        q.reshape(B, Hkv, H // Hkv, hd),
+        qstack["k_q"] * scale, qstack["v_q"] * scale,
+        jnp.zeros((B, S))).reshape(B, H, hd)
+    assert float(jnp.abs(o1 - o2).max()) < 1e-4
+
+
+def test_banded_attention_odd_S():
+    B, H, S, hd, w = 1, 2, 101, 16, 17
+    ks = jax.random.split(KEY, 3)
+    q, k, v = (jax.random.normal(kk, (B, H, S, hd)) for kk in ks)
+    o1 = ops.banded_attention(q, k, v, window=w, block=32)
+    o2 = ref.banded_attention_ref(
+        q.reshape(B * H, S, hd), k.reshape(B * H, S, hd),
+        v.reshape(B * H, S, hd), window=w).reshape(B, H, S, hd)
+    assert o1.shape == (B, H, S, hd)
+    assert float(jnp.abs(o1 - o2).max()) < 1e-4
+
+
+def test_gated_fusion_odd_S():
+    n, B, H, S, hd = 2, 1, 2, 37, 16
+    ks = jax.random.split(KEY, 5)
+    args = [jax.random.normal(k, (n, B, H, S, hd)) for k in ks[:4]]
+    gate = jax.random.normal(ks[4], (n,))
+    k1, v1 = ops.gated_fusion(*args, gate)
+    k2, v2 = ref.gated_fusion_ref(*args, gate)
+    assert k1.shape == (n, B, H, S, hd)
+    assert float(jnp.abs(k1 - k2).max()) < 1e-6
+    assert float(jnp.abs(v1 - v2).max()) < 1e-6
+
+
+# ------------------------------------------------------ fully-masked rows
+
+
+def test_decode_attention_fully_masked_rows_are_zero():
+    """A row whose bias is all -inf (an empty engine slot) must emit exact
+    zeros — not uniform attention over whatever garbage sits in the cache."""
+    B, H, Hkv, S, hd = 2, 4, 2, 64, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd)) * 1e6  # "uninitialized"
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd)) * 1e6
+    bias = jnp.stack([jnp.full((S,), -1e30), jnp.zeros((S,))])  # row 0 masked
+    out = ops.decode_attention(q, k, v, bias)
+    assert float(jnp.abs(out[0]).max()) == 0.0
+    assert float(jnp.abs(out[1]).max()) > 0.0  # live row unaffected
+
+
+def test_decode_attention_q8_fully_masked_rows_are_zero():
+    B, H, Hkv, S, hd = 1, 2, 1, 32, 16
+    q = jax.random.normal(KEY, (B, H, hd))
+    scale = jnp.full((B, Hkv, 1, hd), 1e4, jnp.float32)  # huge garbage KV
+    qstack = {"k_q": jnp.full((B, Hkv, S, hd), 127, jnp.int8),
+              "v_q": jnp.full((B, Hkv, S, hd), 127, jnp.int8),
+              "k_scale": scale, "v_scale": scale}
+    out = ops.decode_attention_q8(q, qstack, jnp.full((B, S), -1e30))
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_decode_attention_pallas_bad_block_raises():
+    """The shape precondition must survive python -O: ValueError, not assert."""
+    from repro.kernels.decode_attention import (decode_attention_pallas,
+                                                decode_attention_q8_pallas)
+    B, Hkv, G, S, hd = 1, 1, 2, 24, 16
+    q = jnp.zeros((B, Hkv, G, hd))
+    k = jnp.zeros((B, Hkv, S, hd))
+    bias = jnp.zeros((B, S))
+    with pytest.raises(ValueError, match="not divisible"):
+        decode_attention_pallas(q, k, k, bias, block_s=16, interpret=True)
+    scale = jnp.zeros((B, Hkv, 1, hd))
+    with pytest.raises(ValueError, match="not divisible"):
+        decode_attention_q8_pallas(q, k.astype(jnp.int8), k.astype(jnp.int8),
+                                   scale, scale, bias, block_s=16,
+                                   interpret=True)
+
+
+# ------------------------------------------------------- paged attention
+
+
+def _paged_case(page_size, *, dt=jnp.float32):
+    """Pool + page maps exercising partial final pages, interleaved
+    INVALID_PAGE entries and a fully-evicted slot."""
+    Hkv, G, hd = 2, 4, 32
+    pps = 4
+    num_pages = 3 * pps
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (5, Hkv * G, hd), jnp.float32).astype(dt)
+    k_pool = jax.random.normal(
+        ks[1], (num_pages, Hkv, page_size, hd), jnp.float32).astype(dt)
+    v_pool = jax.random.normal(
+        ks[2], (num_pages, Hkv, page_size, hd), jnp.float32).astype(dt)
+    INV = num_pages
+    pm = jnp.array([
+        [3, 7, INV, INV],        # partial final page
+        [0, INV, 5, INV],        # INVALID interleaved inside the map
+        [1, 2, 4, 6],            # fully mapped
+        [INV, INV, INV, INV],    # evicted slot
+        [8, 9, INV, 11],         # INVALID inside the live length
+    ], jnp.int32)
+    lengths = jnp.array([page_size + 3, page_size - 2, 4 * page_size,
+                         2, 2 * page_size + 1], jnp.int32)
+    return q, k_pool, v_pool, pm, lengths
+
+
+@pytest.mark.parametrize("page_size", [8, 16, 64])
+def test_paged_decode_attention_matches_gather_ref(page_size):
+    """In-place page-map walk == gather-then-attend oracle, across page sizes,
+    partial final pages and interleaved INVALID_PAGE entries."""
+    q, k_pool, v_pool, pm, lengths = _paged_case(page_size)
+    slots, H, hd = q.shape
+    Hkv = k_pool.shape[1]
+    out, m, l = ops.paged_decode_attention(q, k_pool, v_pool, pm, lengths)
+    oref = ref.paged_decode_attention_ref(
+        q.reshape(slots, Hkv, H // Hkv, hd), k_pool, v_pool, pm,
+        lengths).reshape(slots, H, hd)
+    assert float(jnp.abs(out - oref).max()) < 1e-4
+    # evicted slot: zeros with zero attention mass (hardened finish)
+    assert float(jnp.abs(out[3]).max()) == 0.0
+    assert float(l[3].max()) == 0.0
+    assert bool((l[:3] > 0).all())
+
+
+@pytest.mark.parametrize("page_size", [8, 16])
+def test_paged_decode_attention_q8_matches_ref(page_size):
+    q, k_pool, v_pool, pm, lengths = _paged_case(page_size)
+    slots, H, hd = q.shape
+    Hkv = k_pool.shape[1]
+    num_pages = k_pool.shape[0]
+    sk = jnp.max(jnp.abs(k_pool), axis=2, keepdims=True) / 127.0
+    sv = jnp.max(jnp.abs(v_pool), axis=2, keepdims=True) / 127.0
+    qpool = {
+        "k_q": jnp.clip(jnp.round(k_pool / sk), -127, 127).astype(jnp.int8),
+        "v_q": jnp.clip(jnp.round(v_pool / sv), -127, 127).astype(jnp.int8),
+        "k_scale": sk, "v_scale": sv,
+    }
+    assert qpool["k_scale"].shape == (num_pages, Hkv, 1, hd)
+    out, _, l = ops.paged_decode_attention_q8(q, qpool, pm, lengths)
+    oref = ref.paged_decode_attention_ref(
+        q.reshape(slots, Hkv, H // Hkv, hd), qpool["k_q"] * sk,
+        qpool["v_q"] * sv, pm, lengths).reshape(slots, H, hd)
+    assert float(jnp.abs(out - oref).max()) < 1e-4
+    assert float(l[3].max()) == 0.0
+
+
+def test_paged_decode_attention_lse_stats_merge():
+    """The kernel's (m, l) statistics LSE-merge two disjoint page sets to the
+    same result as attending over their union — the property the fused-prefix
+    merge path relies on."""
+    from repro.models.attention import merge_attention
+    page_size, Hkv, G, hd = 8, 2, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, Hkv * G, hd))
+    k_pool = jax.random.normal(ks[1], (4, Hkv, page_size, hd))
+    v_pool = jax.random.normal(ks[2], (4, Hkv, page_size, hd))
+    pm_all = jnp.array([[0, 1, 2, 3]], jnp.int32)
+    both = ops.paged_decode_attention(q, k_pool, v_pool, pm_all,
+                                      jnp.array([32], jnp.int32))[0]
+    INV = 4
+    parts = []
+    for pm in ([[0, 1, INV, INV]], [[INV, INV, 2, 3]]):
+        o, m, l = ops.paged_decode_attention(q, k_pool, v_pool,
+                                             jnp.array(pm, jnp.int32),
+                                             jnp.array([32], jnp.int32))
+        parts.append(((o * l[..., None])[:, :, None, :], m[:, :, None],
+                      l[:, :, None]))
+    merged = merge_attention(parts).reshape(both.shape)
+    assert float(jnp.abs(merged - both).max()) < 1e-4
+
+
+def test_paged_decode_attention_bad_shapes_raise():
+    q = jnp.zeros((2, 2, 2, 16))
+    pool = jnp.zeros((4, 2, 8, 16))
+    with pytest.raises(ValueError, match="page_map"):
+        from repro.kernels.paged_attention import paged_decode_attention_pallas
+        paged_decode_attention_pallas(q, pool, pool,
+                                      jnp.zeros((3, 2), jnp.int32),
+                                      jnp.zeros((2,), jnp.int32),
+                                      interpret=True)
+
+
+def test_slot_table_write_token_respects_invalid_pages():
+    """SlotTable.write_token scatters each slot's token to its physical page
+    and drops writes through INVALID_PAGE (evicted slots can't corrupt the
+    pool)."""
+    from repro.models.cache import SlotTable
+    Hkv, pg, hd = 2, 8, 16
+    pool = jnp.zeros((4, Hkv, pg, hd))
+    pm = jnp.array([[2, 0], [4, 4]], jnp.int32)  # slot 1 evicted (INVALID=4)
+    tok = jnp.ones((2, Hkv, hd))
+    out = SlotTable.write_token(pool, tok, pm, jnp.array([9, 3]), pg)
+    # slot 0: pos 9 -> page_idx 1 -> phys pm[0,1] == 0, offset 1
+    assert float(jnp.abs(out[0, :, 1] - 1.0).max()) == 0.0
+    out = out.at[0, :, 1].set(0.0)
+    # ... and nothing else was touched (slot 1's write dropped through INVALID)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
 @pytest.mark.parametrize("S,hd,w,blk", [
-    (256, 32, 64, 64), (512, 64, 100, 128), (128, 16, 16, 32), (64, 32, 64, 64),
+    (256, 32, 64, 64),
+    pytest.param(512, 64, 100, 128, marks=pytest.mark.slow),  # largest interp case
+    (128, 16, 16, 32), (64, 32, 64, 64),
 ])
 @pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
 def test_banded_attention_sweep(S, hd, w, blk, dt):
