@@ -1,0 +1,84 @@
+"""Compare a fresh engine-bench JSON against the committed baseline.
+
+Guards the serving engine against silent performance regressions in CI.
+Absolute tokens/s is machine-dependent (CI runners vary wildly), so the
+throughput gate compares the *machine-normalized* ratio of the engine to the
+lockstep baseline measured in the same process on the same machine: a >10%
+drop in that ratio fails. Structural properties (byte-identity, capacity and
+slot ratios, fused-prefix amortisation, one decode trace) are compared
+exactly — they are hardware-independent and must never regress.
+
+Run:  python benchmarks/compare_bench.py BENCH_engine.json \
+          [--baseline benchmarks/BENCH_engine_baseline.json] \
+          [--tolerance 0.10]
+"""
+import argparse
+import json
+import sys
+
+
+def normalized_throughput(report: dict) -> float:
+    t = report["throughput"]
+    return t["engine_tokens_per_s"] / max(t["lockstep_tokens_per_s"], 1e-9)
+
+
+def structural_gates(report: dict):
+    """Hardware-independent properties that must hold in every run."""
+    cap = report["capacity"]
+    pk = report["paged_kernel"]
+    sp = report["shared_prefix"]
+    stats = report["throughput"]["engine_stats"]
+    return [
+        ("bench self-reported pass", bool(report["pass"])),
+        ("one decode trace across the mix", stats["decode_traces"] == 1),
+        ("paged == dense outputs", bool(cap["byte_identical_outputs"])),
+        ("paged capacity >= 2x dense", cap["capacity_ratio"] >= 2.0),
+        ("kernel == gather outputs", bool(pk["byte_identical_outputs"])),
+        ("kernel path gathers no dense view",
+         pk["kernel"]["decode_view_gathers"] == 0),
+        ("kernel reduces KV HBM bytes", pk["hbm_bytes_ratio"] < 1.0),
+        ("shared-prefix == unshared outputs",
+         bool(sp["byte_identical_outputs"])),
+        ("prefix sharing >= 2x concurrent slots", sp["slot_ratio"] >= 2.0),
+        ("prefix sharing reduces prefill tokens",
+         sp["prefill_token_ratio"] < 1.0),
+        ("fused prefix inserted once per digest",
+         sp["fused_inserts"] == 1 and sp["fused_digest_hits"] >= 1),
+    ]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="freshly produced BENCH_engine.json")
+    ap.add_argument("--baseline",
+                    default="benchmarks/BENCH_engine_baseline.json")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed fractional drop in normalized throughput")
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    ok = True
+    cur_r, base_r = normalized_throughput(cur), normalized_throughput(base)
+    floor = base_r * (1.0 - args.tolerance)
+    print(f"normalized throughput (engine/lockstep tokens/s): "
+          f"current {cur_r:.2f} vs baseline {base_r:.2f} "
+          f"(floor {floor:.2f}, tolerance {args.tolerance:.0%})")
+    if cur_r < floor:
+        print(f"FAIL: normalized throughput regressed "
+              f"{1 - cur_r / base_r:.1%} > {args.tolerance:.0%}")
+        ok = False
+
+    for name, passed in structural_gates(cur):
+        print(f"{'ok  ' if passed else 'FAIL'}: {name}")
+        ok = ok and passed
+
+    print("PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -288,6 +288,87 @@ def run_capacity(rx, p_rx, *, dense_slots, max_seq, page_size, prompt_len,
     return section
 
 
+# ------------------------------------------------------- shared prefix
+
+
+def run_shared_prefix(rx, p_rx, tx, p_tx, fz, *, vocab, n_requests=13,
+                      shared_len=48, tail_len=8, gen=8, page_size=16,
+                      num_pages=16):
+    """Shared-system-prompt workload: every request carries the same
+    ``shared_len``-token prefix plus a unique tail.
+
+    With the radix prefix cache + CoW page sharing, only the first request
+    prefills (and stores) the shared pages; every later admission shares them
+    read-only and prefills just its tail. At a fixed page pool this multiplies
+    the sustainable concurrent slots (each sharer needs 1 fresh page instead
+    of 4 here) and divides prefill compute — while decode outputs must stay
+    byte-identical to the unshared engine. A C2C sub-check pins fused-prefix
+    amortisation: one transmitted prefix is inserted into the fused row table
+    once and reused by digest for every later request."""
+    key = jax.random.PRNGKey(17)
+    shared = jax.random.randint(key, (1, shared_len), 0, vocab)
+    prompts = []
+    for i in range(n_requests):
+        tail = jax.random.randint(jax.random.fold_in(key, i),
+                                  (1, tail_len), 0, vocab)
+        tail = tail.at[0, 0].set(i % vocab)  # tails diverge at token 0
+        prompts.append(jnp.concatenate([shared, tail], axis=1))
+    S = shared_len + tail_len
+    max_seq = S + gen  # 4 pages per request at page_size=16
+
+    outs = {}
+    for name, pc in (("shared", True), ("unshared", False)):
+        eng = ContinuousBatchingEngine(
+            rx, p_rx, max_slots=n_requests + 1, max_seq=max_seq, paged=True,
+            page_size=page_size, num_pages=num_pages, prefix_cache=pc)
+        rids = [eng.submit(p, gen) for p in prompts]
+        t0 = time.perf_counter()
+        done = {c.rid: c.tokens for c in eng.drain()}
+        dt = time.perf_counter() - t0
+        st = eng.stats
+        outs[name] = {
+            "tokens": [done[r] for r in rids],
+            "peak_active": st["peak_active"],
+            "prefill_tokens": st["prefill_tokens"],
+            "radix_hits": st["radix_hits"],
+            "cow_copies": st["cow_copies"],
+            "decode_traces": st["decode_traces"],
+            "tokens_per_s": n_requests * gen / dt,
+        }
+
+    identical = all(
+        np.array_equal(a, b)
+        for a, b in zip(outs["shared"]["tokens"], outs["unshared"]["tokens"]))
+
+    # fused-digest amortisation: one transmitted prefix, many requests
+    tx_fused = make_tx_fused(tx, p_tx, fz, rx)
+    fused = tx_fused(prompts[0][:, :8])
+    feng = ContinuousBatchingEngine(
+        rx, p_rx, max_slots=4, max_seq=max_seq, max_prefix=8, paged=True,
+        page_size=page_size, num_pages=num_pages)
+    for p in prompts[:4]:
+        feng.submit(p, 4, fused=fused)
+    feng.drain()
+
+    section = {
+        name: {kk: vv for kk, vv in v.items() if kk != "tokens"}
+        for name, v in outs.items()
+    }
+    section["byte_identical_outputs"] = bool(identical)
+    section["slot_ratio"] = (outs["shared"]["peak_active"]
+                             / max(outs["unshared"]["peak_active"], 1))
+    section["prefill_token_ratio"] = (outs["shared"]["prefill_tokens"]
+                                      / max(outs["unshared"]["prefill_tokens"],
+                                            1))
+    section["fused_inserts"] = feng.stats["fused_inserts"]
+    section["fused_digest_hits"] = feng.stats["fused_digest_hits"]
+    section["shared_len"] = shared_len
+    section["tail_len"] = tail_len
+    section["page_size"] = page_size
+    section["num_pages"] = num_pages
+    return section
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -364,6 +445,21 @@ def main() -> int:
     print(f"HBM bytes ratio (kernel/gather): {pk['hbm_bytes_ratio']:.3f}; "
           f"byte-identical outputs: {pk['byte_identical_outputs']}")
 
+    # --- shared-prefix page sharing (radix cache + CoW) at a fixed pool ---
+    sp = run_shared_prefix(rx, p_rx, tx, p_tx, fz, vocab=vocab)
+    print(f"\nshared-prefix workload ({sp['shared_len']}-token shared prefix "
+          f"+ {sp['tail_len']}-token tails, {sp['num_pages']}-page pool):")
+    print(f"{'':22s}{'peak act':>10s}{'prefill tok':>13s}{'tok/s':>10s}")
+    for name in ("unshared", "shared"):
+        r = sp[name]
+        print(f"{name:22s}{r['peak_active']:>10d}{r['prefill_tokens']:>13d}"
+              f"{r['tokens_per_s']:>10.1f}")
+    print(f"slot ratio (shared/unshared peak): {sp['slot_ratio']:.2f}×; "
+          f"prefill tokens ratio: {sp['prefill_token_ratio']:.2f}; "
+          f"byte-identical outputs: {sp['byte_identical_outputs']}; "
+          f"fused inserts {sp['fused_inserts']} "
+          f"(+{sp['fused_digest_hits']} digest hits)")
+
     ok = True
     if eng["stats"]["decode_traces"] != 1:
         print("FAIL: decode step traced more than once across the mix")
@@ -390,6 +486,20 @@ def main() -> int:
     if pk["kernel_bytes_per_step"] >= pk["gather_bytes_per_step"]:
         print("FAIL: in-place kernel did not reduce per-step KV HBM bytes")
         ok = False
+    if not sp["byte_identical_outputs"]:
+        print("FAIL: shared-prefix decode outputs differ from the unshared "
+              "engine")
+        ok = False
+    if sp["slot_ratio"] < 2.0:
+        print("FAIL: page sharing sustained < 2x the unshared concurrent "
+              "slots at the same pool")
+        ok = False
+    if sp["shared"]["prefill_tokens"] >= sp["unshared"]["prefill_tokens"]:
+        print("FAIL: prefix cache did not reduce prefill tokens")
+        ok = False
+    if sp["fused_inserts"] != 1 or sp["fused_digest_hits"] != 3:
+        print("FAIL: fused prefix not amortised across same-digest requests")
+        ok = False
 
     if args.json:
         report = {
@@ -407,6 +517,7 @@ def main() -> int:
             },
             "capacity": cap,
             "paged_kernel": pk,
+            "shared_prefix": sp,
             "pass": ok,
         }
         with open(args.json, "w") as f:

@@ -38,6 +38,11 @@ class QuantizedKV:
     v_scale: jax.Array
 
     def __getitem__(self, key: str) -> jax.Array:  # legacy dict interop
+        import warnings
+
+        warnings.warn(
+            "QuantizedKV dict-style access is deprecated; use attribute "
+            "access (qkv.k_q) instead", DeprecationWarning, stacklevel=2)
         return getattr(self, key)
 
     @property
@@ -50,7 +55,7 @@ def quantize_stack(stack) -> QuantizedKV:
     stack = KVStack.ensure(stack)
     out = {}
     for name in ("k", "v"):
-        x = stack[name].astype(jnp.float32)
+        x = getattr(stack, name).astype(jnp.float32)
         scale = jnp.max(jnp.abs(x), axis=-2, keepdims=True) / 127.0
         scale = jnp.maximum(scale, 1e-8)
         q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
@@ -61,8 +66,8 @@ def quantize_stack(stack) -> QuantizedKV:
 
 def dequantize_stack(qstack: QuantizedKV, dtype=jnp.bfloat16) -> KVStack:
     return KVStack(
-        k=(qstack["k_q"].astype(jnp.float32) * qstack["k_scale"]).astype(dtype),
-        v=(qstack["v_q"].astype(jnp.float32) * qstack["v_scale"]).astype(dtype),
+        k=(qstack.k_q.astype(jnp.float32) * qstack.k_scale).astype(dtype),
+        v=(qstack.v_q.astype(jnp.float32) * qstack.v_scale).astype(dtype),
     )
 
 
@@ -88,7 +93,7 @@ def roundtrip_error(stack) -> float:
     dq = dequantize_stack(quantize_stack(stack), jnp.float32)
     num = den = 0.0
     for name in ("k", "v"):
-        a = stack[name].astype(jnp.float32)
-        num += float(jnp.sum((a - dq[name]) ** 2))
+        a = getattr(stack, name).astype(jnp.float32)
+        num += float(jnp.sum((a - getattr(dq, name)) ** 2))
         den += float(jnp.sum(a ** 2))
     return (num / max(den, 1e-30)) ** 0.5

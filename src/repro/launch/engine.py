@@ -50,6 +50,23 @@ Design:
   exactly once, no matter how the standalone / C2C-fused / T2T request mix
   changes (``stats["decode_traces"]`` proves it).
 
+- **Page sharing (paged only, ``prefix_cache=True``)** — page bookkeeping is
+  owned by a typed, refcounted ``models/cache.PageAllocator`` (the engine
+  holds ``PageLease`` handles, never raw page-id lists), and admission
+  consults a ``launch/prefix_cache.RadixPrefixIndex`` mapping (fused digest,
+  prompt tokens) → already-cached physical pages. On a hit the new slot
+  *shares* the matched pages (read-only) and prefills only the suffix — the
+  cached prefix is gathered into ``extra_kv`` and RoPE positions are shifted
+  by ``pos_offset`` — so a shared-system-prompt workload admits with a
+  fraction of the pages and prefill FLOPs (benchmarks/engine_bench.py's
+  shared-prefix section shows ≥2× concurrent slots at byte-identical
+  outputs). A partially-matched page is copy-on-write: the allocator's
+  ``cow`` fault swaps the share for a private copy before the suffix's first
+  divergent token write lands in it. Fused C2C prefixes are shared by
+  *digest*: the per-slot fused table became a row table with host-side row
+  indirection, so a prefix a peer transmitted once is inserted once and every
+  later request fusing the same digest just points its slot at that row.
+
 Prefill is bucketed separately (``prompt_bucket``): right-padding a prompt is
 exact for *full-attention* layers (causality — pad keys sit after every real
 query, and the per-slot position mask hides them). It is NOT exact for
@@ -75,7 +92,7 @@ Quickstart::
 from __future__ import annotations
 
 import math
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -85,14 +102,18 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
-from repro.models.cache import FusedPrefix, KVCache, SlotTable
+from repro.models.cache import (FusedPrefix, KVCache, PageAllocator,
+                                PageLease, SlotTable, fused_digest)
+from repro.launch.prefix_cache import PrefixMatch, RadixPrefixIndex
 
 
 @dataclass
 class EngineRequest:
     """One queued request. ``fused`` is an already-projected C2C prefix
     (models/cache.FusedPrefix, shapes (n_attn_rx, 1, Hkv, Sf, hd)) with
-    Sf <= the engine's ``max_prefix`` (see core/c2c.fused_prefix)."""
+    Sf <= the engine's ``max_prefix`` (see core/c2c.fused_prefix).
+    ``digest`` is the fused prefix's content digest (None for standalone) —
+    the identity under which fused rows and prompt pages are shared."""
 
     rid: int
     prompt: jax.Array  # (1, S) int32
@@ -100,6 +121,7 @@ class EngineRequest:
     fused: Optional[FusedPrefix] = None
     protocol: str = "standalone"
     meta: dict = field(default_factory=dict)
+    digest: Optional[str] = None
 
 
 @dataclass
@@ -128,6 +150,7 @@ class ContinuousBatchingEngine:
         page_size: int = 16,
         num_pages: Optional[int] = None,
         paged_attention: str = "kernel",
+        prefix_cache: bool = True,
     ):
         if max_prefix and not cfg.attention_layers:
             raise ValueError("fused prefixes need attention layers (C2C medium)")
@@ -151,21 +174,35 @@ class ContinuousBatchingEngine:
         pad_safe = all(k == "attn" for k in cfg.block_pattern)
         self.prompt_bucket = prompt_bucket if pad_safe else None
 
+        self.prefix_cache = bool(prefix_cache and paged)
+
         if paged:
-            # page pool + per-slot page maps; allocation policy lives here
-            # (host), scatter/gather in models/cache.SlotTable (device)
+            # page pool + per-slot page maps; the typed PageAllocator is the
+            # only authority over page ids (refcounts, sharing, CoW) — the
+            # engine holds PageLease handles; device scatter/gather lives in
+            # models/cache.SlotTable
             self._table = SlotTable.init(cfg, max_slots, max_seq, cache_dtype,
                                          page_size=page_size,
                                          num_pages=num_pages)
-            self._free_pages: List[int] = list(range(self._table.num_pages))
-            self._slot_pages: Dict[int, List[int]] = {}
+            self._allocator = PageAllocator(self._table.num_pages)
+            self._leases: Dict[int, PageLease] = {}
         else:
             self._table = KVCache.init_slots(cfg, max_slots, max_seq,
                                              cache_dtype)
+            self._allocator = None
+        self._radix = (RadixPrefixIndex(page_size)
+                       if self.prefix_cache else None)
         self._tok = jnp.zeros((max_slots,), jnp.int32)
-        self._fused = (FusedPrefix.empty(cfg, max_slots, max_prefix,
+        # Fused prefixes live in a ROW table (max_slots usable rows + one
+        # permanently all-masked row at index max_slots for standalone slots);
+        # each slot points at a row via the host-side _fused_rows indirection,
+        # so requests sharing a digest share one inserted row.
+        self._fused = (FusedPrefix.empty(cfg, max_slots + 1, max_prefix,
                                          cache_dtype)
                        if max_prefix else None)
+        self._fused_rows = np.full(max_slots, max_slots, np.int64)
+        self._fused_alloc = PageAllocator(max_slots)  # rows, refcounted
+        self._fused_digest_rows: "OrderedDict[str, int]" = OrderedDict()
         # shared all-masked prefix for standalone admissions (identical every
         # time — build once, not per request)
         self._empty_req_fused = (FusedPrefix.empty(cfg, 1, max_prefix,
@@ -181,7 +218,11 @@ class ContinuousBatchingEngine:
         self._next_rid = 0
         self.stats = {"decode_traces": 0, "prefill_traces": 0, "admitted": 0,
                       "completed": 0, "decode_steps": 0, "admit_batches": 0,
-                      "peak_active": 0, "decode_view_gathers": 0}
+                      "peak_active": 0, "decode_view_gathers": 0,
+                      "prefill_tokens": 0, "suffix_prefill_traces": 0,
+                      "shared_admits": 0, "radix_hits": 0,
+                      "radix_matched_tokens": 0, "cow_copies": 0,
+                      "fused_inserts": 0, "fused_digest_hits": 0}
         self._decode = jax.jit(self._make_decode())
         self._prefill = jax.jit(self._make_prefill())
         if paged:
@@ -194,15 +235,26 @@ class ContinuousBatchingEngine:
                 table.insert_slot(slot, req, length, batch_index=bi))
         self._insert_fused = jax.jit(
             lambda table, slot, req: table.insert_slot(slot, req))
+        if self.prefix_cache:
+            self._suffix_prefill = jax.jit(self._make_suffix_prefill())
+            self._copy_page = jax.jit(
+                lambda table, src, dst: table.copy_page(src, dst))
 
     # ------------------------------------------------------------- jitted fns
     def _make_decode(self):
         cfg, paged = self.cfg, self.paged
         in_place = paged and self.paged_attention == "kernel"
 
-        def decode(params, table, tok, fused, active):
+        def decode(params, table, tok, fused, fused_rows, active):
             self.stats["decode_traces"] += 1  # trace-time: counts compilations
-            ek = fused.to_extra_kv(cfg) if fused is not None else None
+            ek = None
+            if fused is not None:
+                # row indirection: slots sharing a digest gather the same row
+                # (standalone slots gather the permanently-masked empty row)
+                sel = FusedPrefix(k=fused.k[:, fused_rows],
+                                  v=fused.v[:, fused_rows],
+                                  bias=fused.bias[:, fused_rows])
+                ek = sel.to_extra_kv(cfg)
             if in_place:
                 # paged hot loop: decode_step dispatches on the SlotTable and
                 # walks page maps inside the Pallas kernel — no dense_view()
@@ -245,12 +297,52 @@ class ContinuousBatchingEngine:
 
         return prefill
 
+    def _make_suffix_prefill(self):
+        """Radix-hit admission: prefill only the prompt's uncached suffix.
+
+        The matched prefix's KV is gathered from its (shared) pages into an
+        ``extra_kv`` prefix — fixed gather width (pages_per_slot pages) with
+        positions ≥ ``prefix_len`` masked at PREFIX_MASK_BIAS, so the fn
+        traces once per suffix bucket. RoPE positions are shifted by
+        ``prefix_len`` (transformer.prefill's ``pos_offset``); the suffix's
+        K/V rows are scattered to their per-token (page, offset) targets and
+        the slot adopts the full shared+fresh page row in one fused step."""
+        cfg, dtype = self.cfg, self.cache_dtype
+
+        def sprefill(params, table, toks, prefix_pages, prefix_len, fused,
+                     phys, off, page_row, slot, final_pos):
+            self.stats["suffix_prefill_traces"] += 1
+            ek = table.prefix_extra_kv(prefix_pages, prefix_len)
+            if fused is not None:
+                # fused C2C prefix precedes the cached prompt prefix, same
+                # order as the fresh prefill path
+                fek = fused.to_extra_kv(cfg)
+                ek = [{"k": jnp.concatenate([f["k"], p["k"]], axis=-2),
+                       "v": jnp.concatenate([f["v"], p["v"]], axis=-2),
+                       "bias": jnp.concatenate([f["bias"], p["bias"]],
+                                               axis=-1)}
+                      for f, p in zip(fek, ek)]
+            logits, cache = T.prefill(cfg, params, toks,
+                                      max_seq=int(toks.shape[1]),
+                                      cache_dtype=dtype, extra_kv=ek,
+                                      pos_offset=prefix_len)
+            table = table.insert_suffix(slot, cache, phys, off, page_row,
+                                        final_pos)
+            return logits, table
+
+        return sprefill
+
     # ------------------------------------------------------------- submission
     def submit(self, prompt, max_new_tokens: int, *,
-               fused=None, protocol: Optional[str] = None,
+               fused=None, digest: Optional[str] = None,
+               protocol: Optional[str] = None,
                meta: Optional[dict] = None) -> int:
         """Queue a request; returns its rid. Joins the running batch at the
-        next step() with a free slot."""
+        next step() with a free slot.
+
+        ``digest`` names the fused prefix's content identity (computed from
+        its bytes when omitted): requests sharing a digest share one inserted
+        fused row, and — with the prefix cache — can share prompt pages."""
         prompt = jnp.asarray(prompt, jnp.int32)
         if prompt.ndim == 1:
             prompt = prompt[None]
@@ -273,11 +365,15 @@ class ContinuousBatchingEngine:
                 raise ValueError("engine built with max_prefix=0 cannot take "
                                  "fused prefixes")
             fused = FusedPrefix.ensure(fused).pad(self.max_prefix)
+            if digest is None:
+                digest = fused_digest(fused)
+        else:
+            digest = None  # standalone requests share the None radix root
         proto = protocol or ("c2c" if fused is not None else "standalone")
         rid = self._next_rid
         self._next_rid += 1
         req = EngineRequest(rid, prompt, max_new_tokens, fused, proto,
-                            meta or {})
+                            meta or {}, digest)
         self._queue.append(req)
         self._req_info[rid] = req
         return rid
@@ -303,15 +399,42 @@ class ContinuousBatchingEngine:
         S = int(req.prompt.shape[1])
         return math.ceil((S + req.max_new_tokens - 1) / self.page_size)
 
+    def _radix_match(self, req: EngineRequest) -> Optional[PrefixMatch]:
+        """Longest cached-prefix match for a slot-taking request (1-token
+        requests are answered at prefill and never own pages)."""
+        if self._radix is None or req.max_new_tokens <= 1:
+            return None
+        return self._radix.lookup(req.digest, np.asarray(req.prompt[0]))
+
+    def _defer_for_sharing(self, head: EngineRequest,
+                           req: EngineRequest) -> bool:
+        """True when a queued request should sit out this *fresh* admission
+        batch because a later _admit pass can admit it shared: it already has
+        a radix hit, or it shares a leading prefix (same fused digest) with
+        the head about to register its pages."""
+        if req.max_new_tokens <= 1:
+            return False
+        if head.max_new_tokens > 1 and req.digest == head.digest:
+            ta = np.asarray(head.prompt[0])
+            tb = np.asarray(req.prompt[0])
+            # any nonzero lcp can match after head registers (full-page nodes
+            # share in place; partials extend via CoW)
+            if tb.size > 1 and ta.size and int(ta[0]) == int(tb[0]):
+                return True
+        return self._radix.lookup(req.digest,
+                                  np.asarray(req.prompt[0])) is not None
+
     def _take_admission_batch(self, n_free: int) -> List[EngineRequest]:
         """Pop up to ``admit_batch`` same-bucket-length requests that fit the
         free slots (and, paged, the free page pool). FIFO at the head: if the
-        front request cannot be placed, nothing is admitted this step."""
+        front request cannot be placed, nothing is admitted this step. With
+        the prefix cache on, requests that could share the head's pages are
+        left queued for a shared admission on a later pass this same step."""
         if not self._queue:
             return []
         head = self._queue[0]
         Sb = self._bucket_len(int(head.prompt.shape[1]))
-        pages_left = len(self._free_pages) if self.paged else None
+        pages_left = self._allocator.num_free if self.paged else None
         batch: List[EngineRequest] = []
         taken_idx: List[int] = []
         for i, req in enumerate(self._queue):
@@ -320,6 +443,9 @@ class ContinuousBatchingEngine:
             if self._bucket_len(int(req.prompt.shape[1])) != Sb:
                 if i == 0:
                     return []  # unreachable (head defines Sb), kept for shape
+                continue
+            if self._radix is not None and i > 0 and \
+                    self._defer_for_sharing(head, req):
                 continue
             takes_slot = req.max_new_tokens > 1
             if takes_slot and n_free - sum(
@@ -338,11 +464,145 @@ class ContinuousBatchingEngine:
             del self._queue[i]
         return batch
 
+    def _ensure_pages(self, need: int) -> bool:
+        """Make ``need`` pages allocatable, evicting LRU prefix-index entries
+        under pool pressure (only pages no slot still maps actually free)."""
+        if self._allocator.can_alloc(need):
+            return True
+        if self._radix is not None:
+            self._radix.evict(self._allocator, need - self._allocator.num_free)
+        return self._allocator.can_alloc(need)
+
+    def _register_prefix(self, req: EngineRequest, lease: PageLease) -> None:
+        """Publish an admitted prompt's pages to the radix index (pins them,
+        so they outlive the slot). Keyed by the request's fused digest —
+        prompt KV depends on the fused prefix attended during prefill."""
+        if self._radix is None:
+            return
+        self._radix.register(req.digest, np.asarray(req.prompt[0]),
+                             lease.ids(), self._allocator)
+
+    def _assign_fused_row(self, slot: int, req: EngineRequest) -> None:
+        """Point ``slot`` at its fused row: the permanently-masked empty row
+        for standalone requests; otherwise the digest's existing row (one
+        insert amortized over every sharer) or a freshly inserted one."""
+        if self._fused is None:
+            return
+        if req.fused is None:
+            self._fused_rows[slot] = self.max_slots
+            return
+        row = self._fused_digest_rows.get(req.digest)
+        if row is not None:
+            self._fused_alloc.share([row])  # the slot's reference
+            self._fused_digest_rows.move_to_end(req.digest)
+            self.stats["fused_digest_hits"] += 1
+        else:
+            if not self._fused_alloc.can_alloc(1):
+                self._evict_fused_rows(1)
+            row = self._fused_alloc.alloc(1)[0]
+            self._fused = self._insert_fused(self._fused, jnp.int32(row),
+                                             req.fused)
+            self._fused_alloc.retain(row)  # the digest table's pin
+            self._fused_digest_rows[req.digest] = row
+            self.stats["fused_inserts"] += 1
+        self._fused_rows[slot] = row
+
+    def _evict_fused_rows(self, want: int) -> None:
+        """Drop LRU digest pins whose row no active slot references. Always
+        succeeds for ``want=1``: rows ≥ max_slots ≥ active slots, so some
+        digest is always pin-only when the row pool is full."""
+        for digest in list(self._fused_digest_rows):
+            if self._fused_alloc.num_free >= want:
+                return
+            row = self._fused_digest_rows[digest]
+            if self._fused_alloc.refcount(row) == 1:  # pin only
+                self._fused_alloc.release([row])
+                del self._fused_digest_rows[digest]
+
+    def _admit_shared(self, req: EngineRequest, slot: int,
+                      match: PrefixMatch) -> bool:
+        """Admit one radix-hit request: share the matched pages, CoW-copy a
+        partially-matched page, prefill only the suffix. Returns False if the
+        pool can't cover the request's unshared pages (head-of-line waits)."""
+        S = int(req.prompt.shape[1])
+        pg = self.page_size
+        P = match.matched  # tokens served from cache (≤ S - 1)
+        total = self._pages_needed(req)
+        shared_ids = list(match.page_ids)
+        cow_idx = None
+        if match.partial_page is not None:
+            shared_ids.append(match.partial_page)
+            cow_idx = len(shared_ids) - 1
+        fresh = total - len(shared_ids)
+        if not self._ensure_pages(fresh + (1 if cow_idx is not None else 0)):
+            return False
+        lease = self._allocator.lease(shared=shared_ids, fresh=fresh)
+        if cow_idx is not None:
+            # the suffix prefill writes position P inside the partially
+            # matched page — its first divergent token write — so the CoW
+            # fault copies that page before the slot maps it writable
+            src, dst = self._allocator.cow(lease, cow_idx)
+            self._table = self._copy_page(self._table, jnp.int32(src),
+                                          jnp.int32(dst))
+            self.stats["cow_copies"] += 1
+        pps, invalid = self._table.pages_per_slot, self._table.invalid_page
+        row = lease.page_row(pps, invalid)
+        # prefix gather reads the slot's own row: shared full pages plus the
+        # CoW copy (same bytes as its source), INVALID-padded to fixed width
+        n_prefix_pages = math.ceil(P / pg)
+        prefix_pages = np.full(pps, invalid, np.int32)
+        prefix_pages[:n_prefix_pages] = row[:n_prefix_pages]
+
+        Ssuf = S - P
+        Sb = self._bucket_len(Ssuf)
+        toks = jnp.pad(req.prompt[:, P:], ((0, 0), (0, Sb - Ssuf)))
+        # per-token scatter targets: suffix row i holds absolute position
+        # P + i → page (P+i)//pg at offset (P+i)%pg; pad rows drop (INVALID)
+        abs_pos = P + np.arange(Sb)
+        page_idx = np.minimum(abs_pos // pg, pps - 1)
+        phys = np.where(abs_pos < S, row[page_idx], invalid).astype(np.int32)
+        off = (abs_pos % pg).astype(np.int32)
+
+        rf = req.fused if req.fused is not None else self._empty_req_fused
+        logits, self._table = self._suffix_prefill(
+            self.params, self._table, toks, jnp.asarray(prefix_pages),
+            jnp.int32(P), rf, jnp.asarray(phys), jnp.asarray(off),
+            jnp.asarray(row), jnp.int32(slot), jnp.int32(S))
+        first = jnp.argmax(logits[0, Ssuf - 1]).astype(jnp.int32)
+
+        self._leases[slot] = lease
+        self._outputs[req.rid] = [first]
+        self._tok = self._tok.at[slot].set(first)
+        self._assign_fused_row(slot, req)
+        self._active[slot] = True
+        self._slot_rid[slot] = req.rid
+        self._remaining[slot] = req.max_new_tokens - 1
+        self._register_prefix(req, lease)
+        self.stats["admitted"] += 1
+        self.stats["shared_admits"] += 1
+        self.stats["radix_hits"] += 1
+        self.stats["radix_matched_tokens"] += P
+        self.stats["prefill_tokens"] += Ssuf
+        self.stats["peak_active"] = max(self.stats["peak_active"],
+                                        int(self._active.sum()))
+        return True
+
     def _admit(self) -> None:
         while self._queue:
             free = deque(self._free_slots())
             if not free:
                 break
+            head = self._queue[0]
+            match = self._radix_match(head)
+            if match is not None:
+                if not self._admit_shared(head, free[0], match):
+                    break  # pool can't cover the unshared suffix: wait
+                self._queue.popleft()
+                continue
+            if self.paged and head.max_new_tokens > 1:
+                # pool pressure may be index pins, not live slots — evict
+                # LRU prefix entries so a fresh head is never starved
+                self._ensure_pages(self._pages_needed(head))
             batch = self._take_admission_batch(len(free))
             if not batch:
                 break
@@ -369,30 +629,26 @@ class ContinuousBatchingEngine:
                 first = jnp.argmax(logits[b, S - 1]).astype(jnp.int32)
                 self._outputs[req.rid] = [first]
                 self.stats["admitted"] += 1
+                self.stats["prefill_tokens"] += S
                 if req.max_new_tokens == 1:  # done at prefill: no slot taken
                     self._ready.append(self._finish(req.rid))
                     continue
                 slot = free.popleft()
                 if self.paged:
-                    need = self._pages_needed(req)
-                    pages = [self._free_pages.pop() for _ in range(need)]
-                    self._slot_pages[slot] = pages
-                    page_ids = np.full((self._table.pages_per_slot,),
-                                       self._table.invalid_page, np.int32)
-                    page_ids[:need] = pages
+                    lease = self._allocator.lease(fresh=self._pages_needed(req))
+                    self._leases[slot] = lease
+                    row = lease.page_row(self._table.pages_per_slot,
+                                         self._table.invalid_page)
                     self._table = self._insert(
                         self._table, jnp.int32(slot), cache_b, jnp.int32(S),
-                        jnp.asarray(page_ids), jnp.int32(b))
+                        jnp.asarray(row), jnp.int32(b))
+                    self._register_prefix(req, lease)
                 else:
                     self._table = self._insert(
                         self._table, jnp.int32(slot), cache_b, jnp.int32(S),
                         jnp.int32(b))
                 self._tok = self._tok.at[slot].set(first)
-                if self._fused is not None:
-                    req_fused = (req.fused if req.fused is not None
-                                 else self._empty_req_fused)
-                    self._fused = self._insert_fused(
-                        self._fused, jnp.int32(slot), req_fused)
+                self._assign_fused_row(slot, req)
                 self._active[slot] = True
                 self._slot_rid[slot] = req.rid
                 self._remaining[slot] = req.max_new_tokens - 1
@@ -409,7 +665,16 @@ class ContinuousBatchingEngine:
     def _evict(self, slot: int) -> None:
         self._table = self._table.evict_slot(slot)
         if self.paged:
-            self._free_pages.extend(self._slot_pages.pop(slot, []))
+            lease = self._leases.pop(slot, None)
+            if lease is not None:
+                # refcounted: pages another sharer (or the prefix index)
+                # still holds stay alive; exclusively-owned pages free now
+                self._allocator.release(lease)
+        if self._fused is not None:
+            row = int(self._fused_rows[slot])
+            if row != self.max_slots:
+                self._fused_alloc.release([row])
+                self._fused_rows[slot] = self.max_slots
 
     # ------------------------------------------------------------------ step
     def step(self) -> List[Completion]:
@@ -419,8 +684,10 @@ class ContinuousBatchingEngine:
         done, self._ready = self._ready, []
         if not self._active.any():
             return done
+        fused_rows = (jnp.asarray(self._fused_rows, jnp.int32)
+                      if self._fused is not None else None)
         self._tok, self._table = self._decode(
-            self.params, self._table, self._tok, self._fused,
+            self.params, self._table, self._tok, self._fused, fused_rows,
             jnp.asarray(self._active))
         self.stats["decode_steps"] += 1
         tok_host = np.asarray(self._tok)

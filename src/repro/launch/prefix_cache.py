@@ -1,0 +1,288 @@
+"""Radix prefix index: longest-match lookup from prompt token IDs (and fused
+C2C digests) to already-cached physical KV pages.
+
+At serving scale requests massively share prefixes — system prompts, few-shot
+templates, and (unique to this paper) the fused prefix a C2C peer transmitted
+once. The engine consults this index at admission: a hit means the matched
+prefix's KV already lives in the :class:`~repro.models.cache.SlotTable` pool,
+so the new slot *shares* those physical pages (refcounted through
+:class:`~repro.models.cache.PageAllocator`) and prefills only the suffix.
+
+Structure
+---------
+A forest of tries, one root per *fused digest* (``None`` for standalone
+requests). Keying by digest is a correctness requirement, not an
+optimization: prompt KV depends on the fused prefix the prompt attended
+during prefill, so pages are only reusable between requests that fused the
+same digest. Each edge consumes one full page worth of tokens
+(``page_size``-sized chunks); a node additionally carries a small set of
+*partial* entries — sub-page token runs backed by a page whose leading rows
+are valid. A partial (or a longer full-page child) can extend a match by
+``m < page_size`` tokens: the sharer takes a copy-on-write copy of that page
+(its suffix prefill writes position ``P`` inside it — the first divergent
+token write), while full-page matches are shared in place, read-only.
+
+Lookup is capped at ``len(prompt) - 1`` tokens: the engine must always
+prefill at least the prompt's last token to obtain logits for the first
+generated token.
+
+Pinning and eviction
+--------------------
+The index holds one allocator reference (:meth:`PageAllocator.retain`) per
+page it stores, so registered pages survive the registering slot's eviction.
+Under pool pressure the engine calls :meth:`RadixPrefixIndex.evict`, which
+drops least-recently-used leaves first and only frees a page when no slot
+still maps it (the allocator's refcount guarantees this).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.models.cache import PageAllocator
+
+
+@dataclass
+class PrefixMatch:
+    """Result of a longest-prefix lookup.
+
+    ``page_ids`` are full pages shareable in place (read-only). A non-None
+    ``partial_page`` extends the match by ``partial_tokens`` (< page_size)
+    more tokens, but must be CoW-copied by the sharer before its suffix
+    prefill writes into it. ``matched`` is the total token count:
+    ``len(page_ids) * page_size + partial_tokens``."""
+
+    page_ids: List[int]
+    matched: int
+    partial_page: Optional[int] = None
+    partial_tokens: int = 0
+
+
+@dataclass
+class _Partial:
+    tokens: Tuple[int, ...]  # sub-page token run (len < page_size)
+    page_id: int             # page whose rows [0, len(tokens)) hold its KV
+    last_use: int = 0
+
+
+@dataclass
+class _Node:
+    """One full-page trie node: ``page_id`` backs the chunk of tokens on the
+    edge leading here; children are keyed by the next page-sized chunk."""
+
+    page_id: int
+    children: Dict[Tuple[int, ...], "_Node"] = field(default_factory=dict)
+    partials: List[_Partial] = field(default_factory=list)
+    last_use: int = 0
+
+
+@dataclass
+class _Root:
+    children: Dict[Tuple[int, ...], _Node] = field(default_factory=dict)
+    partials: List[_Partial] = field(default_factory=list)
+
+
+def _lcp(a: Sequence[int], b: Sequence[int]) -> int:
+    n = min(len(a), len(b))
+    for i in range(n):
+        if a[i] != b[i]:
+            return i
+    return n
+
+
+class RadixPrefixIndex:
+    """Trie over page-sized prompt-token chunks, per fused digest.
+
+    All state is host-side Python/numpy; the only device interaction is
+    indirect, through the page ids it hands back."""
+
+    def __init__(self, page_size: int, *, max_partials_per_node: int = 4):
+        self.page_size = page_size
+        self.max_partials_per_node = max_partials_per_node
+        self._roots: Dict[Optional[str], _Root] = {}
+        self._clock = 0  # LRU stamp, bumped on every lookup/register
+
+    # ------------------------------------------------------------ queries
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    @property
+    def num_pages(self) -> int:
+        """Pages currently pinned by the index."""
+        n = 0
+        for root in self._roots.values():
+            n += len(root.partials)
+            stack = list(root.children.values())
+            while stack:
+                node = stack.pop()
+                n += 1 + len(node.partials)
+                stack.extend(node.children.values())
+        return n
+
+    def lookup(self, digest: Optional[str], tokens: np.ndarray) -> Optional[PrefixMatch]:
+        """Longest matching prefix of ``tokens`` under fused key ``digest``,
+        capped at ``len(tokens) - 1`` (at least one token must be prefilled).
+        Returns None when nothing matches."""
+        root = self._roots.get(digest)
+        if root is None:
+            return None
+        toks = [int(t) for t in np.asarray(tokens).reshape(-1)]
+        budget = len(toks) - 1
+        if budget <= 0:
+            return None
+        pg = self.page_size
+        now = self._tick()
+
+        pages: List[int] = []
+        node: Optional[_Node] = None
+        children, partials = root.children, root.partials
+        off = 0
+        while off + pg <= budget:
+            child = children.get(tuple(toks[off: off + pg]))
+            if child is None:
+                break
+            child.last_use = now
+            pages.append(child.page_id)
+            node = child
+            children, partials = child.children, child.partials
+            off += pg
+
+        # Partial extension: a stored sub-page run — or the leading rows of a
+        # full-page child we can't take whole — may cover a few more tokens.
+        rest = toks[off: budget]
+        best_m, best_page, best_entry = 0, None, None
+        for p in partials:
+            m = _lcp(p.tokens, rest)
+            if m > best_m:
+                best_m, best_page, best_entry = m, p.page_id, p
+        for chunk, child in children.items():
+            m = _lcp(chunk, rest)
+            if m > best_m:
+                best_m, best_page, best_entry = m, child.page_id, child
+
+        if best_entry is not None:
+            best_entry.last_use = now
+        matched = off + best_m
+        if matched == 0:
+            return None
+        return PrefixMatch(page_ids=pages, matched=matched,
+                           partial_page=best_page, partial_tokens=best_m)
+
+    # ----------------------------------------------------------- register
+    def register(self, digest: Optional[str], tokens: np.ndarray,
+                 page_ids: Sequence[int], allocator: PageAllocator) -> int:
+        """Record that ``tokens``' KV now lives in ``page_ids`` (the owning
+        slot's pages, in order). Only *new* trie entries pin pages
+        (``allocator.retain``); chunks already present keep their existing
+        page. Returns the number of pages newly pinned."""
+        toks = [int(t) for t in np.asarray(tokens).reshape(-1)]
+        ids = [int(p) for p in page_ids]
+        pg = self.page_size
+        now = self._tick()
+        root = self._roots.setdefault(digest, _Root())
+        children, partials = root.children, root.partials
+
+        pinned = 0
+        n_full = len(toks) // pg
+        if len(ids) < n_full:
+            raise ValueError(
+                f"{len(toks)} tokens span {n_full} full pages but only "
+                f"{len(ids)} page ids were provided")
+        for i in range(n_full):
+            chunk = tuple(toks[i * pg: (i + 1) * pg])
+            child = children.get(chunk)
+            if child is None:
+                allocator.retain(ids[i])
+                pinned += 1
+                child = _Node(page_id=ids[i], last_use=now)
+                children[chunk] = child
+            else:
+                child.last_use = now
+            children, partials = child.children, child.partials
+
+        rest = tuple(toks[n_full * pg:])
+        if rest and len(ids) > n_full:
+            # skip if an existing partial (or full child) already covers it
+            covered = any(_lcp(p.tokens, rest) == len(rest) for p in partials)
+            covered = covered or any(_lcp(c, rest) == len(rest)
+                                     for c in children)
+            if not covered and len(partials) < self.max_partials_per_node:
+                allocator.retain(ids[n_full])
+                pinned += 1
+                partials.append(
+                    _Partial(tokens=rest, page_id=ids[n_full], last_use=now))
+        return pinned
+
+    # ------------------------------------------------------------ eviction
+    def evict(self, allocator: PageAllocator, want_pages: int) -> int:
+        """Drop least-recently-used leaves until ``want_pages`` pages have
+        been *freed* (refcount reached zero) or nothing evictable remains.
+        Entries whose page is still mapped by a slot release only the index's
+        pin — the page stays alive for its sharers. Returns pages freed."""
+        freed = 0
+        while freed < want_pages:
+            victim = self._lru_leaf()
+            if victim is None:
+                break
+            kind, parent, key, entry = victim
+            before = allocator.num_free
+            allocator.release([entry.page_id])
+            freed += allocator.num_free - before
+            if kind == "partial":
+                parent.remove(entry)
+            else:
+                del parent[key]
+        self._gc_roots()
+        return freed
+
+    def _lru_leaf(self):
+        """Oldest evictable entry: a partial, or a full node with no children
+        and no partials. Returns (kind, container, key, entry) or None."""
+        best = None
+
+        def consider(kind, parent, key, entry):
+            nonlocal best
+            if best is None or entry.last_use < best[3].last_use:
+                best = (kind, parent, key, entry)
+
+        for root in self._roots.values():
+            # walk the forest; leaves = no children AND no partials
+            nodes = [(root.children, c, n) for c, n in root.children.items()]
+            for p in root.partials:
+                consider("partial", root.partials, None, p)
+            while nodes:
+                parent_children, chunk, node = nodes.pop()
+                for p in node.partials:
+                    consider("partial", node.partials, None, p)
+                if not node.children and not node.partials:
+                    consider("node", parent_children, chunk, node)
+                nodes.extend((node.children, c, n)
+                             for c, n in node.children.items())
+        return best
+
+    def _gc_roots(self) -> None:
+        empty = [d for d, r in self._roots.items()
+                 if not r.children and not r.partials]
+        for d in empty:
+            del self._roots[d]
+
+    def clear(self, allocator: PageAllocator) -> int:
+        """Release every pin (drops the whole index). Returns pages freed."""
+        freed = 0
+        for root in self._roots.values():
+            stack = list(root.children.values())
+            before = allocator.num_free
+            for p in root.partials:
+                allocator.release([p.page_id])
+            while stack:
+                node = stack.pop()
+                allocator.release([node.page_id])
+                for p in node.partials:
+                    allocator.release([p.page_id])
+                stack.extend(node.children.values())
+            freed += allocator.num_free - before
+        self._roots.clear()
+        return freed

@@ -18,6 +18,10 @@ documented field set):
 - :class:`SlotTable` — a *paged* engine slot table: fixed-size KV pages in a
   shared pool plus a per-slot page map, so concurrent slot capacity is bound
   by pages actually used, not by ``slots × max_seq`` padding.
+- :class:`PageAllocator` / :class:`PageLease` — the host-side authority over
+  the page pool: refcounted alloc/share/release plus the copy-on-write fault
+  path, so identical prefixes can resolve to the *same* physical pages
+  (launch/prefix_cache.py builds the radix prefix index on top of it).
 
 Per-layer entry layouts (unchanged from the dict era — entries stay plain
 dicts because they are heterogeneous by block kind):
@@ -35,12 +39,15 @@ execution (see transformer.py).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import warnings
 from dataclasses import dataclass
 from functools import partial
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 
@@ -127,7 +134,10 @@ class KVStack:
     k: jax.Array
     v: jax.Array
 
-    def __getitem__(self, key: str) -> jax.Array:  # legacy dict interop
+    def __getitem__(self, key: str) -> jax.Array:
+        warnings.warn(
+            "KVStack[...] dict-style access is deprecated; use attribute "
+            "access (stack.k / stack.v)", DeprecationWarning, stacklevel=2)
         return getattr(self, key)
 
     @property
@@ -158,7 +168,9 @@ class KVStack:
     def ensure(cls, obj) -> "KVStack":
         if isinstance(obj, cls):
             return obj
-        return cls(k=obj["k"], v=obj["v"])
+        if isinstance(obj, dict):
+            return cls(k=obj["k"], v=obj["v"])
+        return cls(k=obj.k, v=obj.v)  # e.g. FusedPrefix (drops bias)
 
 
 # -------------------------------------------------------------- FusedPrefix
@@ -179,7 +191,11 @@ class FusedPrefix:
     v: jax.Array
     bias: Optional[jax.Array] = None
 
-    def __getitem__(self, key: str) -> jax.Array:  # legacy dict interop
+    def __getitem__(self, key: str) -> jax.Array:
+        warnings.warn(
+            "FusedPrefix[...] dict-style access is deprecated; use attribute "
+            "access (fused.k / fused.v / fused.bias)",
+            DeprecationWarning, stacklevel=2)
         return getattr(self, key)
 
     @property
@@ -203,9 +219,9 @@ class FusedPrefix:
     def ensure(cls, obj) -> "FusedPrefix":
         if isinstance(obj, cls):
             return obj
-        if isinstance(obj, KVStack):
-            return cls(k=obj.k, v=obj.v)
-        return cls(k=obj["k"], v=obj["v"], bias=obj.get("bias"))
+        if isinstance(obj, dict):
+            return cls(k=obj["k"], v=obj["v"], bias=obj.get("bias"))
+        return cls(k=obj.k, v=obj.v, bias=getattr(obj, "bias", None))
 
     # ----------------------------------------------------------- builders
     @classmethod
@@ -300,6 +316,24 @@ def extra_kv_layers(cfg: ModelConfig, fused) -> list:
     return FusedPrefix.ensure(fused).to_extra_kv(cfg)
 
 
+def fused_digest(fused) -> str:
+    """Content digest of a fused prefix (sha1 over shapes, dtypes and bytes).
+
+    This is the identity under which a C2C prefix is shared: the engine keys
+    its fused-row table and the radix prefix index on it, so a prefix a peer
+    transmitted *once* is inserted once and every later request fusing the
+    same digest reuses that row — and prompt pages are only shared between
+    requests that attended the same fused prefix during prefill."""
+    f = FusedPrefix.ensure(fused)
+    h = hashlib.sha1()
+    for leaf in (f.k, f.v, f._bias_or_zero()):
+        arr = np.asarray(leaf)
+        h.update(str(arr.shape).encode())
+        h.update(str(arr.dtype).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
 # ------------------------------------------------------------------ KVCache
 
 
@@ -323,7 +357,11 @@ class KVCache:
     pos: jax.Array
     layers: Tuple
 
-    def __getitem__(self, key: str):  # legacy dict interop
+    def __getitem__(self, key: str):
+        warnings.warn(
+            "KVCache[...] dict-style access is deprecated; use attribute "
+            "access (cache.pos / cache.layers)",
+            DeprecationWarning, stacklevel=2)
         return getattr(self, key)
 
     @property
@@ -337,7 +375,9 @@ class KVCache:
     def ensure(cls, obj) -> "KVCache":
         if isinstance(obj, cls):
             return obj
-        return cls(pos=obj["pos"], layers=tuple(obj["layers"]))
+        if isinstance(obj, dict):
+            return cls(pos=obj["pos"], layers=tuple(obj["layers"]))
+        return cls(pos=obj.pos, layers=tuple(obj.layers))
 
     # ----------------------------------------------------------- builders
     @classmethod
@@ -416,14 +456,19 @@ class KVCache:
         return stack
 
     # ------------------------------------------------- dense slot lifecycle
-    def insert_slot(self, slot, req: "KVCache", length, *,
+    def insert_slot(self, slot, req: "KVCache", length, lease=None, *,
                     batch_index=0) -> "KVCache":
         """Insert one request of a (possibly batched) prefill cache into slot
         ``slot`` and set that slot's position to ``length``.
 
+        ``lease`` is accepted (and ignored) so engine call sites are
+        polymorphic over paged vs dense: :meth:`SlotTable.insert_slot` takes an
+        allocator-issued :class:`PageLease` in the same positional slot.
+
         Stale K/V beyond ``length`` (from a previous occupant) never need
         zeroing: the per-slot position mask hides them, and decode overwrites
         each index before it first becomes visible."""
+        del lease  # dense slots own a full row; nothing to map
         slot = jnp.asarray(slot, jnp.int32)
         bi = jnp.asarray(batch_index, jnp.int32)
         req = KVCache.ensure(req)
@@ -463,8 +508,10 @@ class SlotTable:
     exactly the mask that already hides a dense slot's stale K/V, so paged
     decode is *byte-identical* to dense decode (engine_bench verifies).
 
-    Page allocation/free is host-side policy (launch/engine.py keeps the free
-    list); this class only does the device-side scatter/gather.
+    Page allocation/free is host-side policy owned by :class:`PageAllocator`
+    (refcounts, sharing, CoW); this class only does the device-side
+    scatter/gather, including the CoW fault's :meth:`copy_page` and the
+    prefix-cache :meth:`prefix_extra_kv`/:meth:`insert_suffix` pair.
     """
 
     pos: jax.Array  # (slots,) int32
@@ -593,15 +640,21 @@ class SlotTable:
         return KVCache(pos=self.pos, layers=layers)
 
     # --------------------------------------------------------- lifecycle
-    def insert_slot(self, slot, req: KVCache, length, page_ids,
+    def insert_slot(self, slot, req: KVCache, length, lease,
                     *, batch_index=0) -> "SlotTable":
         """Insert one request of a prefill cache (row layout, seq length ==
         ``view_seq``) into slot ``slot``: scatter its pages into the pool at
-        ``page_ids`` ((pages_per_slot,) int32, INVALID_PAGE-padded beyond the
-        allocated count) and point the slot's page map at them."""
+        the leased page ids and point the slot's page map at them.
+
+        ``lease`` is an allocator-issued :class:`PageLease` — or, for jitted
+        call sites, its pre-built page row ((pages_per_slot,) int32,
+        INVALID_PAGE-padded beyond the allocated count). Same positional slot
+        as :meth:`KVCache.insert_slot`'s ignored ``lease``."""
         slot = jnp.asarray(slot, jnp.int32)
         bi = jnp.asarray(batch_index, jnp.int32)
-        page_ids = jnp.asarray(page_ids, jnp.int32)
+        if isinstance(lease, PageLease):
+            lease = lease.page_row(self.pages_per_slot, self.invalid_page)
+        page_ids = jnp.asarray(lease, jnp.int32)
         req = KVCache.ensure(req)
         pps, pg = self.pages_per_slot, self.page_size
 
@@ -624,6 +677,92 @@ class SlotTable:
             layers=layers,
             page_size=self.page_size,
         )
+
+    def insert_suffix(self, slot, req: KVCache, phys, off, lease_row,
+                      length) -> "SlotTable":
+        """Insert a *suffix* prefill: the prompt's first ``P`` tokens were
+        served from shared pages (radix prefix-cache hit), so ``req`` holds
+        K/V only for positions [P, S) in rows [0, S-P). Scatter token ``i``
+        to pool page ``phys[i]`` at in-page offset ``off[i]`` (INVALID ids
+        drop — padded rows), adopt the slot's full page row (shared prefix
+        pages + freshly written suffix pages) and set its position to
+        ``length`` (= S). CoW happened before this call: any shared page the
+        suffix writes into was already copied (:meth:`copy_page`), so
+        ``phys`` only ever targets pages this slot owns."""
+        slot = jnp.asarray(slot, jnp.int32)
+        phys = jnp.asarray(phys, jnp.int32)
+        off = jnp.asarray(off, jnp.int32)
+        if isinstance(lease_row, PageLease):
+            lease_row = lease_row.page_row(self.pages_per_slot,
+                                           self.invalid_page)
+        lease_row = jnp.asarray(lease_row, jnp.int32)
+        req = KVCache.ensure(req)
+
+        def scatter(pool, row):
+            # row (n, 1, Hkv, Ssuf, hd) -> per-token (Ssuf, n, Hkv, hd), the
+            # shape advanced indexing wants for pool.at[:, phys, :, off]
+            tok = row[:, 0].transpose(2, 0, 1, 3)
+            return pool.at[:, phys, :, off].set(tok.astype(pool.dtype),
+                                                mode="drop")
+
+        layers = tuple(
+            {"k": scatter(e["k"], r["k"]), "v": scatter(e["v"], r["v"])}
+            for e, r in zip(self.layers, req.layers)
+        )
+        return SlotTable(
+            pos=self.pos.at[slot].set(jnp.asarray(length, jnp.int32)),
+            page_map=self.page_map.at[slot].set(lease_row),
+            layers=layers,
+            page_size=self.page_size,
+        )
+
+    def copy_page(self, src, dst) -> "SlotTable":
+        """Copy one physical page's K/V (every layer entry) ``src`` → ``dst``:
+        the device half of the allocator's copy-on-write fault. The host side
+        (:meth:`PageAllocator.cow`) re-points the faulting slot's lease at
+        ``dst`` so the write that triggered the fault lands in the copy."""
+        src = jnp.asarray(src, jnp.int32)
+        dst = jnp.asarray(dst, jnp.int32)
+
+        def cp(pool):
+            page = jax.lax.dynamic_slice_in_dim(pool, src, 1, axis=1)
+            return jax.lax.dynamic_update_slice_in_dim(pool, page, dst, axis=1)
+
+        layers = tuple({"k": cp(e["k"]), "v": cp(e["v"])}
+                       for e in self.layers)
+        return dataclasses.replace(self, layers=layers)
+
+    def prefix_extra_kv(self, page_ids, length) -> list:
+        """Gather already-cached prefix pages into the per-position
+        ``extra_kv`` list transformer.prefill consumes, so a radix-hit
+        admission prefills only the suffix while attending the cached prefix.
+
+        ``page_ids`` ((n_prefix_pages,) int32, INVALID-padded — fixed length
+        keeps one trace) select pool pages; positions ≥ ``length`` (a traced
+        scalar: the matched-prefix token count) get bias PREFIX_MASK_BIAS, so
+        padding and the stale tail of a partially-matched page contribute
+        exactly zero attention mass."""
+        page_ids = jnp.asarray(page_ids, jnp.int32)
+        pm = jnp.minimum(page_ids, self.num_pages - 1)  # clamp sentinel
+        npp = page_ids.shape[0]
+        pg = self.page_size
+        mask = jnp.where(jnp.arange(npp * pg)[None, None, :]
+                         < jnp.asarray(length, jnp.int32),
+                         0.0, PREFIX_MASK_BIAS).astype(jnp.float32)
+
+        def gather(pool):
+            n, _, H, _, hd = pool.shape
+            v = pool[:, pm]  # (n, npp, Hkv, pg, hd)
+            v = v.transpose(0, 2, 1, 3, 4).reshape(n, H, npp * pg, hd)
+            return v[:, None]  # (n, 1, Hkv, npp*pg, hd)
+
+        out = []
+        for e in self.layers:
+            k = gather(e["k"])
+            out.append({"k": k, "v": gather(e["v"]),
+                        "bias": jnp.broadcast_to(
+                            mask, (k.shape[0], 1, npp * pg))})
+        return out
 
     def evict_slot(self, slot) -> "SlotTable":
         """Free a slot: reset its position and unmap its pages. (Returning the
@@ -666,6 +805,158 @@ class SlotTable:
         )
         return SlotTable(pos=pos_out, page_map=self.page_map, layers=layers,
                          page_size=self.page_size)
+
+
+# ------------------------------------------------------------ PageAllocator
+
+
+@dataclass
+class PageLease:
+    """An allocator-issued grant of physical pages to one slot, in slot order.
+
+    ``owned[i]`` marks exclusivity: the slot may write into page
+    ``page_ids[i]`` only when True. Shared (``owned`` False) pages are
+    read-only for this slot — a write there must go through the allocator's
+    CoW fault (:meth:`PageAllocator.cow`) first, which re-points the lease at
+    a private copy. Leases are host-side handles (numpy), never traced;
+    :meth:`page_row` builds the INVALID-padded device row jitted call sites
+    take."""
+
+    page_ids: np.ndarray  # (n,) int32 physical page ids, slot order
+    owned: np.ndarray     # (n,) bool, True = exclusive/writable
+
+    @property
+    def num_pages(self) -> int:
+        return int(self.page_ids.size)
+
+    def ids(self) -> List[int]:
+        return [int(p) for p in self.page_ids]
+
+    def shared_ids(self) -> List[int]:
+        return [int(p) for p, o in zip(self.page_ids, self.owned) if not o]
+
+    def page_row(self, pages_per_slot: int, invalid: int) -> np.ndarray:
+        """The slot's (pages_per_slot,) page-map row, INVALID-padded."""
+        if self.num_pages > pages_per_slot:
+            raise ValueError(f"lease of {self.num_pages} pages exceeds "
+                             f"pages_per_slot={pages_per_slot}")
+        row = np.full(pages_per_slot, invalid, np.int32)
+        row[: self.num_pages] = self.page_ids
+        return row
+
+
+class PageAllocator:
+    """Host-side refcounted authority over a :class:`SlotTable`'s page pool —
+    the *only* way pages are granted, shared or returned (the engine holds
+    :class:`PageLease` handles, never raw page-id lists).
+
+    A page's refcount counts every holder: each slot lease mapping it plus
+    each prefix-index pin (:meth:`retain`). ``alloc`` grants exclusive pages
+    at refcount 1; ``share`` increfs pages another holder already owns;
+    ``release`` decrefs and returns a page to the free list exactly when its
+    count reaches zero — so evicting one sharer can never free pages another
+    slot still maps. ``cow`` is the copy-on-write fault path: the faulting
+    lease swaps its share of a page for a fresh exclusive one (the caller
+    performs the device copy via :meth:`SlotTable.copy_page`).
+
+    Double-free and free-page sharing raise instead of corrupting state;
+    :meth:`assert_consistent` is the property-test hook."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 0:
+            raise ValueError("num_pages must be >= 0")
+        self.num_pages = num_pages
+        self._refcounts = np.zeros(num_pages, np.int64)
+        self._free: List[int] = list(range(num_pages))
+
+    # ------------------------------------------------------------ queries
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def refcount(self, page_id: int) -> int:
+        return int(self._refcounts[page_id])
+
+    # ---------------------------------------------------------- lifecycle
+    def alloc(self, n: int) -> List[int]:
+        """Grant ``n`` exclusive pages (refcount 1 each)."""
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: requested {n}, free {len(self._free)}")
+        ids = [self._free.pop() for _ in range(n)]
+        self._refcounts[ids] += 1
+        return ids
+
+    def share(self, page_ids: Sequence[int]) -> List[int]:
+        """Add a reference to pages some other holder already owns."""
+        ids = [int(p) for p in page_ids]
+        for p in ids:
+            if self._refcounts[p] <= 0:
+                raise ValueError(f"cannot share free page {p}")
+        self._refcounts[ids] += 1
+        return ids
+
+    def retain(self, page_id: int) -> None:
+        """Pin a single live page (prefix-index references use this)."""
+        self.share([page_id])
+
+    def release(self, pages: Union["PageLease", Sequence[int]]) -> None:
+        """Drop one reference per page; free pages whose count hits zero."""
+        ids = pages.ids() if isinstance(pages, PageLease) else \
+            [int(p) for p in pages]
+        for p in ids:
+            if self._refcounts[p] <= 0:
+                raise ValueError(f"refcount underflow: page {p} already free")
+            self._refcounts[p] -= 1
+            if self._refcounts[p] == 0:
+                self._free.append(p)
+
+    def lease(self, *, shared: Sequence[int] = (), fresh: int = 0) -> PageLease:
+        """Issue a slot's lease: incref ``shared`` prefix pages (in order)
+        followed by ``fresh`` newly-allocated exclusive pages."""
+        if fresh > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: requested {fresh} fresh pages, "
+                f"free {len(self._free)}")
+        s = self.share(shared)
+        f = self.alloc(fresh)
+        return PageLease(
+            page_ids=np.asarray(s + f, np.int32),
+            owned=np.asarray([False] * len(s) + [True] * fresh, bool),
+        )
+
+    def cow(self, lease: PageLease, index: int) -> Tuple[int, int]:
+        """Copy-on-write fault: the slot is about to write into shared page
+        ``lease.page_ids[index]``. Allocate a private copy target, swap it
+        into the lease (now owned) and drop the share of the source. Returns
+        ``(src, dst)`` — the caller must copy the page's bytes on device
+        (:meth:`SlotTable.copy_page`) before writing."""
+        if lease.owned[index]:
+            raise ValueError(f"page at lease index {index} is already owned; "
+                             f"CoW fault is only valid on shared pages")
+        src = int(lease.page_ids[index])
+        dst = self.alloc(1)[0]
+        self.release([src])
+        lease.page_ids[index] = dst
+        lease.owned[index] = True
+        return src, dst
+
+    # ------------------------------------------------------------- checks
+    def assert_consistent(self) -> None:
+        """Invariants the property tests lean on: counts never negative, the
+        free list is exactly the zero-refcount pages, no duplicates."""
+        assert (self._refcounts >= 0).all(), "negative refcount"
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate page in free list"
+        zero = {i for i in range(self.num_pages) if self._refcounts[i] == 0}
+        assert free == zero, f"free list {free} != zero-refcount pages {zero}"
 
 
 # ----------------------------------------------------------------- helpers

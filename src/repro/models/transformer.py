@@ -350,12 +350,21 @@ def prefill(
     window_override: int = 0,
     extra_kv: Optional[list] = None,  # C2C fused prefix, as in ``forward``
     unroll: bool = False,
+    pos_offset=0,
 ) -> Tuple[jax.Array, KVCache]:
-    """Full forward that also fills a decode cache. Returns (logits, cache)."""
+    """Full forward that also fills a decode cache. Returns (logits, cache).
+
+    ``pos_offset`` (int or traced scalar) shifts RoPE positions to
+    ``pos_offset + [0, S)`` — the suffix-prefill path of the engine's prefix
+    cache, where the prompt's first ``pos_offset`` tokens are served from
+    already-cached pages passed in via ``extra_kv``. The causal mask is
+    relative, so only the rotary tables see the offset; cache rows still fill
+    [0, S) and the caller re-maps them (SlotTable.insert_suffix)."""
     cycles, pattern, tail = layer_grouping(cfg)
     x = _embed_in(cfg, params, tokens, embeds)
     B, S = x.shape[:2]
-    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    positions = jnp.asarray(pos_offset, jnp.int32) + jnp.broadcast_to(
+        jnp.arange(S, dtype=jnp.int32)[None], (B, S))
     cos, sin = rope_tables(cfg, positions, positions_3d)
     window = window_override or cfg.sliding_window
     cache = KVCache.init(cfg, B, max_seq, cache_dtype,

@@ -43,9 +43,9 @@ def test_fuser_heterogeneous_dims(system, zoo):
         st = cache.export_stack(tx.cfg, length=S)
         out = F.project_cache(fz, tx.cfg, rx.cfg, st)
         n_rx = len(rx.cfg.attention_layers)
-        assert out["k"].shape == (n_rx, 2, rx.cfg.num_kv_heads, S,
-                                  rx.cfg.resolved_head_dim)
-        assert out["bias"].shape == (n_rx, 2, S)
+        assert out.k.shape == (n_rx, 2, rx.cfg.num_kv_heads, S,
+                               rx.cfg.resolved_head_dim)
+        assert out.bias.shape == (n_rx, 2, S)
 
 
 def test_alignment_bottom_up_clips():
@@ -104,7 +104,7 @@ def test_eq1_equals_eq4_single_transmitter(system, zoo):
     one = F.project_cache(fz, tx.cfg, rx.cfg, st)
     multi = c2c.fused_prefix([fz], [tx.cfg], rx.cfg, [st])
     for k in ("k", "v", "bias"):
-        assert float(jnp.abs(one[k] - multi[k]).max()) == 0.0
+        assert float(jnp.abs(getattr(one, k) - getattr(multi, k)).max()) == 0.0
 
 
 def test_multi_transmitter_concat_order(system, zoo):
@@ -119,7 +119,7 @@ def test_multi_transmitter_concat_order(system, zoo):
         fusers.append(system.registry.get(tx.name, rx.name))
         cfgs.append(tx.cfg)
     fused = c2c.fused_prefix(fusers, cfgs, rx.cfg, stacks)
-    assert fused["k"].shape[-2] == 10  # seq-wise concatenation (Eq. 4)
+    assert fused.k.shape[-2] == 10  # seq-wise concatenation (Eq. 4)
 
 
 @pytest.mark.slow

@@ -314,7 +314,13 @@ def test_paged_capacity_beyond_dense_budget(cfg, params):
     rids = [eng.submit(p, 6) for p in prompts]  # 11 tok -> 2 pages each
     done = {c.rid: c.tokens for c in eng.drain()}
     assert eng.stats["peak_active"] == 4  # 2x the dense-slot equivalent
-    assert len(eng._free_pages) == eng._table.num_pages  # all pages returned
+    # every page is either free or pinned only by the radix prefix index;
+    # dropping the index returns the pool to fully free
+    eng._allocator.assert_consistent()
+    assert eng._allocator.num_free + eng._radix.num_pages \
+        == eng._table.num_pages
+    eng._radix.clear(eng._allocator)
+    assert eng._allocator.num_free == eng._table.num_pages
     for rid, p in zip(rids, prompts):
         assert np.array_equal(done[rid], _solo(cfg, params, p, 6, max_seq))
 
@@ -490,6 +496,6 @@ def test_paged_pages_sized_by_request_not_bucket(cfg, params):
     p = _prompt(jax.random.PRNGKey(31), 5)
     rid = eng.submit(p, 3)
     eng.step()
-    assert len(eng._slot_pages[0]) == 1  # one page, despite the 32-bucket
+    assert eng._leases[0].num_pages == 1  # one page, despite the 32-bucket
     done = {c.rid: c.tokens for c in eng.drain()}
     assert np.array_equal(done[rid], _solo(cfg, params, p, 3, 32))

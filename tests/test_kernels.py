@@ -118,7 +118,7 @@ def test_project_cache_kernel_path_exact():
     a = F.project_cache(fz, tx, rx, st, use_kernel=False)
     b = F.project_cache(fz, tx, rx, st, use_kernel=True)
     for kk in ("k", "v", "bias"):
-        assert float(jnp.abs(a[kk] - b[kk]).max()) == 0.0
+        assert float(jnp.abs(getattr(a, kk) - getattr(b, kk)).max()) == 0.0
 
 
 # ------------------------------------------------- odd/prime S (padded tail)

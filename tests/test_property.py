@@ -117,7 +117,7 @@ def test_fuser_batch_equivariance(b):
     for i in range(b):
         one = F.project_cache(fz, tx, rx,
                               jax.tree.map(lambda a: a[:, i : i + 1], stack))
-        assert float(jnp.abs(one["k"][:, 0] - full["k"][:, i]).max()) < 1e-5
+        assert float(jnp.abs(one.k[:, 0] - full.k[:, i]).max()) < 1e-5
 
 
 # ------------------------------------------------------------------ tokenizer

@@ -32,11 +32,11 @@ def test_roundtrip_scale_invariant():
 def test_dtype_and_shapes():
     st = _stack()
     q = quant.quantize_stack(st)
-    assert q["k_q"].dtype == jnp.int8
-    assert q["k_scale"].shape == (3, 2, 2, 1, 8)
+    assert q.k_q.dtype == jnp.int8
+    assert q.k_scale.shape == (3, 2, 2, 1, 8)
     dq = quant.dequantize_stack(q, jnp.bfloat16)
-    assert dq["k"].dtype == jnp.bfloat16
-    assert dq["k"].shape == st["k"].shape
+    assert dq.k.dtype == jnp.bfloat16
+    assert dq.k.shape == st["k"].shape
 
 
 def test_wire_bytes_halved():
@@ -87,12 +87,12 @@ def test_decode_attention_q8_kernel():
     stack_like = {"k": jax.random.normal(ks[1], (1, B, Hkv, S, hd)),
                   "v": jax.random.normal(ks[2], (1, B, Hkv, S, hd))}
     qs = quant.quantize_stack(stack_like)
-    qstack = {"k_q": qs["k_q"][0], "v_q": qs["v_q"][0],
-              "k_scale": qs["k_scale"][0], "v_scale": qs["v_scale"][0]}
+    qstack = {"k_q": qs.k_q[0], "v_q": qs.v_q[0],
+              "k_scale": qs.k_scale[0], "v_scale": qs.v_scale[0]}
     bias = jnp.zeros((B, S))
     o1 = ops.decode_attention_q8(q, qstack, bias)
     dq = quant.dequantize_stack(qs, jnp.float32)
     o2 = ref.decode_attention_ref(q.reshape(B, Hkv, H // Hkv, hd),
-                                  dq["k"][0], dq["v"][0], bias)
+                                  dq.k[0], dq.v[0], bias)
     o2 = o2.reshape(B, H, hd)
     assert float(jnp.abs(o1 - o2).max()) < 1e-4
