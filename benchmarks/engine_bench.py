@@ -31,6 +31,7 @@ import json
 import os
 import sys
 import time
+from contextlib import nullcontext
 
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 "..", "src"))
@@ -39,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import TraceGuard
 from repro.configs.case_study import tiny_zoo
 from repro.core import c2c, fuser as F
 from repro.launch.engine import ContinuousBatchingEngine
@@ -92,7 +94,7 @@ def percentiles(lat):
 
 
 def run_engine(rx, p_rx, tx, p_tx, fz, reqs, gen, *, max_slots, max_seq,
-               max_prefix):
+               max_prefix, retrace_guard=False):
     eng = ContinuousBatchingEngine(rx, p_rx, max_slots=max_slots,
                                    max_seq=max_seq, max_prefix=max_prefix)
     tx_fused = make_tx_fused(tx, p_tx, fz, rx)
@@ -101,24 +103,29 @@ def run_engine(rx, p_rx, tx, p_tx, fz, reqs, gen, *, max_slots, max_seq,
     eng.submit(reqs[0]["prompt"], 2)
     eng.drain()
 
+    # smoke gate: after warmup the serving loop must never re-lower the
+    # decode or prefill step — a retrace fails the bench with the avals
+    guard = (TraceGuard(max_traces={"decode": 0, "prefill": 0})
+             if retrace_guard else nullcontext())
     pending = list(reqs)
     arrival = {}
     done_at = {}
     t0 = time.perf_counter()
-    while pending or eng.num_queued or eng.num_active:
-        now = time.perf_counter() - t0
-        while pending and pending[0]["arrival"] <= now:
-            r = pending.pop(0)
-            fused = (tx_fused(r["prompt"])
-                     if r["protocol"] == "c2c" else None)
-            rid = eng.submit(r["prompt"], gen, fused=fused,
-                             protocol=r["protocol"])
-            arrival[rid] = r["arrival"]
-        if not (eng.num_queued or eng.num_active):
-            time.sleep(max(0.0, pending[0]["arrival"] - now))
-            continue
-        for c in eng.step():
-            done_at[c.rid] = time.perf_counter() - t0
+    with guard:
+        while pending or eng.num_queued or eng.num_active:
+            now = time.perf_counter() - t0
+            while pending and pending[0]["arrival"] <= now:
+                r = pending.pop(0)
+                fused = (tx_fused(r["prompt"])
+                         if r["protocol"] == "c2c" else None)
+                rid = eng.submit(r["prompt"], gen, fused=fused,
+                                 protocol=r["protocol"])
+                arrival[rid] = r["arrival"]
+            if not (eng.num_queued or eng.num_active):
+                time.sleep(max(0.0, pending[0]["arrival"] - now))
+                continue
+            for c in eng.step():
+                done_at[c.rid] = time.perf_counter() - t0
     lat = [done_at[r] - arrival[r] for r in done_at]
     span = max(done_at.values()) - reqs[0]["arrival"]
     toks = len(done_at) * gen
@@ -396,7 +403,7 @@ def main() -> int:
 
     eng = run_engine(rx, p_rx, tx, p_tx, fz, reqs, args.gen,
                      max_slots=args.slots, max_seq=max_seq,
-                     max_prefix=args.prompt_len)
+                     max_prefix=args.prompt_len, retrace_guard=args.smoke)
     lck = run_lockstep(rx, p_rx, tx, p_tx, fz, reqs, args.gen,
                        max_batch=args.slots, max_seq=max_seq)
 

@@ -1,0 +1,17 @@
+"""Repo-specific correctness tooling: trace-discipline linting + retrace guard.
+
+Two enforcement layers for the invariants the serving stack's performance
+story rests on (one decode trace forever, one prefill trace per bucket, no
+host syncs on the hot loop, Pallas BlockSpec contracts):
+
+- :mod:`repro.analysis.lint` — an AST linter over jit-reachable call graphs
+  (``python -m repro.analysis [paths]``); rules in :mod:`repro.analysis.rules`.
+- :mod:`repro.analysis.traceguard` — :class:`TraceGuard`, a context manager /
+  pytest fixture that hooks jit lowering and turns the engine's informal
+  trace-count stats into hard assertions.
+"""
+from repro.analysis.rules import Finding, RULES
+from repro.analysis.lint import lint_paths
+from repro.analysis.traceguard import TraceGuard, TraceGuardError
+
+__all__ = ["Finding", "RULES", "lint_paths", "TraceGuard", "TraceGuardError"]

@@ -1,0 +1,48 @@
+"""CLI: ``python -m repro.analysis [paths...] [--json]``.
+
+Exit code 0 when the tree is clean, 1 when any finding survives
+suppression comments. Default output is one ``path:line:col: CODE[rule]
+message`` line per finding; ``--json`` emits a machine-readable report.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.analysis.lint import lint_paths
+from repro.analysis.rules import RULES
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Trace-discipline linter for the serving stack.")
+    parser.add_argument("paths", nargs="*", default=["src"],
+                        help="files or directories to lint (default: src)")
+    parser.add_argument("--json", action="store_true", dest="as_json",
+                        help="emit findings as a JSON report")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule registry and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in RULES.values():
+            print(f"{rule.code}  {rule.name:24s} {rule.summary}")
+        return 0
+
+    findings = lint_paths(args.paths or ["src"])
+    if args.as_json:
+        print(json.dumps({"findings": [f.to_dict() for f in findings],
+                          "count": len(findings)}, indent=2))
+    else:
+        for f in findings:
+            print(f.format())
+        if findings:
+            print(f"{len(findings)} finding(s)", file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

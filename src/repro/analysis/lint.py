@@ -1,0 +1,912 @@
+"""AST linter over jit-reachable call graphs (the trace-discipline pass).
+
+Pipeline:
+
+1. Parse every ``*.py`` under the given paths into :class:`Module` records
+   (AST + per-module import alias map).
+2. Find the **jit roots**: functions decorated ``@jax.jit`` /
+   ``@functools.partial(jax.jit, ...)``, functions passed to ``jax.jit(...)``
+   call sites (including the factory pattern ``jax.jit(self._make_x())`` —
+   every ``def`` nested in the factory is a root), and Pallas kernel bodies
+   passed to ``pl.pallas_call``.
+3. Walk the call graph from the roots: module-local calls, ``mod.fn`` calls
+   through import aliases, ``Class.method``, and — over-approximating, which
+   is the safe direction for reachability — ``obj.method(...)`` against every
+   parsed class that defines ``method``. Nested ``def``s inherit reachability.
+4. Run a per-function **taint analysis** on each reachable function: values
+   produced by ``jnp.*``/``jax.*``/``pl.*`` calls are tracer-valued; taint
+   propagates through arithmetic, indexing and assignment, and is *dropped*
+   by static attributes (``.shape``/``.ndim``/``.dtype``/``.size``) and
+   ``is``/``is not`` comparisons. Tracer rules (TRC*) fire on tainted sinks.
+5. Structural rules (KV*, PLC*, JAX001) run everywhere, reachable or not.
+
+The analysis is deliberately under-approximate for taint (function parameters
+are NOT assumed traced) so the linter stays quiet on correct code — CI treats
+any finding as a failure, so false positives are the expensive direction.
+Suppress an intentional hit with a ``# lint: allow(<rule-name>)`` comment on
+the finding's line or the line above.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple, Union
+
+from repro.analysis.rules import RULES, Finding
+
+FuncNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+# attributes of a traced value that are static python objects (reading them
+# never leaks a tracer to the host)
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "sharding",
+                 "aval", "weak_type"}
+# typed KV containers whose dict-style __getitem__ is deprecated (KV001)
+_KV_TYPES = {"KVCache", "KVStack", "FusedPrefix", "SlotTable", "QuantizedKV"}
+_KV_KEYS = {"k", "v", "bias", "pos", "layers", "slot_pos"}
+# .at[...].<method> results that are pure (dropping them is always a bug)
+_AT_METHODS = {"set", "add", "multiply", "mul", "divide", "div", "power",
+               "min", "max", "get", "apply"}
+# host-library roots whose calls on traced values force a device→host sync
+_HOST_MODULES = ("numpy", "math")
+# device-library roots whose call results are tracer-valued in traced code
+_DEVICE_PREFIXES = ("jax", "jax.numpy", "jax.lax", "jax.nn", "jax.random",
+                    "jax.experimental.pallas")
+
+
+# --------------------------------------------------------------- module model
+
+
+@dataclass
+class Module:
+    path: str
+    name: str                      # dotted module name (best effort)
+    tree: ast.Module
+    lines: List[str]
+    aliases: Dict[str, str] = field(default_factory=dict)
+
+
+@dataclass
+class FuncInfo:
+    module: Module
+    qualname: str                  # e.g. "ContinuousBatchingEngine._make_decode.decode"
+    node: FuncNode
+    parent: Optional["FuncInfo"] = None
+    cls: Optional[str] = None      # enclosing class name, if a method
+
+
+class Project:
+    """Parsed modules + function/method indices + call-graph resolution."""
+
+    def __init__(self) -> None:
+        self.modules: List[Module] = []
+        # (module name, qualname) -> FuncInfo
+        self.functions: Dict[Tuple[str, str], FuncInfo] = {}
+        # bare method name -> every class method with that name (over-approx)
+        self.methods: Dict[str, List[FuncInfo]] = {}
+        # module name -> {top-level function name -> FuncInfo}
+        self.toplevel: Dict[str, Dict[str, FuncInfo]] = {}
+
+    def add_module(self, mod: Module) -> None:
+        self.modules.append(mod)
+        self.toplevel.setdefault(mod.name, {})
+        self._index(mod, mod.tree, prefix="", cls=None, parent=None)
+
+    def _index(self, mod: Module, node: ast.AST, prefix: str,
+               cls: Optional[str], parent: Optional[FuncInfo]) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{child.name}"
+                info = FuncInfo(mod, qual, child, parent=parent, cls=cls)
+                self.functions[(mod.name, qual)] = info
+                if cls is not None and parent is None:
+                    self.methods.setdefault(child.name, []).append(info)
+                if cls is None and parent is None:
+                    self.toplevel[mod.name][child.name] = info
+                self._index(mod, child, prefix=f"{qual}.", cls=None,
+                            parent=info)
+            elif isinstance(child, ast.ClassDef):
+                self._index(mod, child, prefix=f"{prefix}{child.name}.",
+                            cls=child.name, parent=parent)
+            else:
+                self._index(mod, child, prefix=prefix, cls=cls, parent=parent)
+
+    # -------------------------------------------------------- name resolution
+    def resolve_call(self, mod: Module, func: ast.expr,
+                     scope: Optional[FuncInfo]) -> List[FuncInfo]:
+        """Best-effort resolution of a call target to parsed functions."""
+        if isinstance(func, ast.Name):
+            # nested function in an enclosing scope, else module-level, else
+            # an imported `from repro.x import f`
+            hit = self._resolve_name(mod, func.id, scope)
+            return [hit] if hit is not None else []
+        if isinstance(func, ast.Attribute):
+            base_qual = qualify(mod, func.value)
+            if base_qual is not None:
+                # module alias: T.decode_step
+                tl = self.toplevel.get(base_qual)
+                if tl and func.attr in tl:
+                    return [tl[func.attr]]
+                # class attribute: FusedPrefix.ensure (class local or imported)
+                cls_name = base_qual.rsplit(".", 1)[-1]
+                hits = [m for m in self.methods.get(func.attr, [])
+                        if m.cls == cls_name]
+                if hits:
+                    return hits
+            # obj.method(...): over-approximate across every parsed class
+            return list(self.methods.get(func.attr, []))
+        return []
+
+    def _resolve_name(self, mod: Module, name: str,
+                      scope: Optional[FuncInfo]) -> Optional[FuncInfo]:
+        s = scope
+        while s is not None:
+            hit = self.functions.get((mod.name, f"{s.qualname}.{name}"))
+            if hit is not None:
+                return hit
+            s = s.parent
+        hit = self.toplevel.get(mod.name, {}).get(name)
+        if hit is not None:
+            return hit
+        target = mod.aliases.get(name)
+        if target and "." in target:
+            tmod, tname = target.rsplit(".", 1)
+            return self.toplevel.get(tmod, {}).get(tname)
+        return None
+
+
+def qualify(mod: Module, node: ast.expr) -> Optional[str]:
+    """Dotted name of an expression through the module's import aliases
+    (``jnp.sum`` -> ``jax.numpy.sum``), or None for non-name expressions."""
+    if isinstance(node, ast.Name):
+        return mod.aliases.get(node.id, node.id)
+    if isinstance(node, ast.Attribute):
+        base = qualify(mod, node.value)
+        return None if base is None else f"{base}.{node.attr}"
+    return None
+
+
+def _collect_aliases(mod: Module) -> None:
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                mod.aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module and \
+                node.level == 0:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                mod.aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+
+
+def _module_name(path: str) -> str:
+    parts = os.path.normpath(path).split(os.sep)
+    if "src" in parts:
+        parts = parts[parts.index("src") + 1:]
+    name = ".".join(parts)
+    return name[:-3] if name.endswith(".py") else name
+
+
+def load_project(paths: Sequence[str]) -> Tuple[Project, List[str]]:
+    """Parse every python file under ``paths``; returns (project, errors)."""
+    project = Project()
+    errors: List[str] = []
+    for fname in sorted(_iter_files(paths)):
+        try:
+            with open(fname, "r", encoding="utf-8") as fh:
+                source = fh.read()
+            tree = ast.parse(source, filename=fname)
+        except (OSError, SyntaxError) as exc:
+            errors.append(f"{fname}: {exc}")
+            continue
+        mod = Module(path=fname, name=_module_name(fname), tree=tree,
+                     lines=source.splitlines())
+        _collect_aliases(mod)
+        project.add_module(mod)
+    return project, errors
+
+
+def _iter_files(paths: Sequence[str]) -> Iterable[str]:
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = [d for d in dirs
+                       if d != "__pycache__" and not d.startswith(".")]
+            for f in files:
+                if f.endswith(".py"):
+                    yield os.path.join(root, f)
+
+
+# ----------------------------------------------------------------- jit roots
+
+
+def _is_jit_expr(mod: Module, node: ast.expr) -> bool:
+    """True for ``jax.jit`` or ``functools.partial(jax.jit, ...)``."""
+    if qualify(mod, node) == "jax.jit":
+        return True
+    if isinstance(node, ast.Call) and \
+            qualify(mod, node.func) in ("functools.partial", "partial") and \
+            node.args and qualify(mod, node.args[0]) == "jax.jit":
+        return True
+    return False
+
+
+def collect_jit_roots(project: Project) -> Set[int]:
+    """ids() of FuncNodes that are jit entry points or pallas kernels."""
+    roots: Set[int] = set()
+    for mod in project.modules:
+        scopes = _scope_map(mod, project)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(_is_jit_expr(mod, d) for d in node.decorator_list):
+                    roots.add(id(node))
+            if not isinstance(node, ast.Call):
+                continue
+            qual = qualify(mod, node.func)
+            if _is_jit_expr(mod, node.func) and node.args:
+                _mark_jit_arg(project, mod, node.args[0],
+                              scopes.get(id(node)), roots)
+            elif qual is not None and qual.endswith("pallas_call") and \
+                    node.args:
+                _mark_callable(project, mod, node.args[0],
+                               scopes.get(id(node)), roots, factories=False)
+    return roots
+
+
+def _mark_jit_arg(project: Project, mod: Module, arg: ast.expr,
+                  scope: Optional[FuncInfo], roots: Set[int]) -> None:
+    if isinstance(arg, ast.Lambda):
+        roots.add(id(arg))
+        _seed_lambda_calls(project, mod, arg, scope, roots)
+        return
+    if isinstance(arg, ast.Call):
+        # factory pattern: jax.jit(make_step(...)) — the returned closure is
+        # whatever `def`s the factory nests; mark them all
+        for target in project.resolve_call(mod, arg.func, scope):
+            for inner in ast.walk(target.node):
+                if isinstance(inner, (ast.FunctionDef, ast.Lambda)) and \
+                        inner is not target.node:
+                    roots.add(id(inner))
+        return
+    _mark_callable(project, mod, arg, scope, roots, factories=False)
+
+
+def _mark_callable(project: Project, mod: Module, arg: ast.expr,
+                   scope: Optional[FuncInfo], roots: Set[int],
+                   *, factories: bool) -> None:
+    del factories
+    if isinstance(arg, ast.Lambda):
+        roots.add(id(arg))
+        _seed_lambda_calls(project, mod, arg, scope, roots)
+        return
+    if isinstance(arg, ast.Call):  # functools.partial(_kernel, ...)
+        if arg.args:
+            _mark_callable(project, mod, arg.args[0], scope, roots,
+                           factories=False)
+        return
+    for target in project.resolve_call(mod, arg, scope):
+        roots.add(id(target.node))
+
+
+def _seed_lambda_calls(project: Project, mod: Module, lam: ast.Lambda,
+                       scope: Optional[FuncInfo], roots: Set[int]) -> None:
+    """A jit root lambda's body is the traced program — every function it
+    calls is a trace-time callee, so mark those as roots too."""
+    for node in ast.walk(lam.body):
+        if isinstance(node, ast.Call):
+            for target in project.resolve_call(mod, node.func, scope):
+                roots.add(id(target.node))
+
+
+def _scope_map(mod: Module, project: Project) -> Dict[int, FuncInfo]:
+    """Map every AST node id to its innermost enclosing FuncInfo."""
+    out: Dict[int, FuncInfo] = {}
+
+    def visit(node: ast.AST, scope: Optional[FuncInfo]) -> None:
+        for child in ast.iter_child_nodes(node):
+            child_scope = scope
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                info = _lookup_info(project, mod, child)
+                child_scope = info if info is not None else scope
+            if scope is not None:
+                out[id(child)] = scope
+            visit(child, child_scope)
+
+    visit(mod.tree, None)
+    return out
+
+
+def _lookup_info(project: Project, mod: Module,
+                 node: ast.AST) -> Optional[FuncInfo]:
+    for info in project.functions.values():
+        if info.module is mod and info.node is node:
+            return info
+    return None
+
+
+# -------------------------------------------------------------- reachability
+
+
+def compute_reachable(project: Project, roots: Set[int]) -> Set[int]:
+    """ids() of every FuncNode reachable from the jit roots (call graph +
+    nested defs + lax control-flow callables)."""
+    infos = list(project.functions.values())
+    by_id = {id(i.node): i for i in infos}
+    reachable: Set[int] = set()
+    work: List[FuncInfo] = [i for i in infos if id(i.node) in roots]
+    # lambdas marked as roots are bodies of their enclosing function; treat
+    # the enclosing function's scope as reachable for rule purposes via the
+    # lambda set returned separately (lambda bodies are expressions only).
+    while work:
+        info = work.pop()
+        if id(info.node) in reachable:
+            continue
+        reachable.add(id(info.node))
+        mod = info.module
+        for node in ast.walk(info.node):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                    node is not info.node:
+                nested = by_id.get(id(node))
+                if nested is not None and id(nested.node) not in reachable:
+                    work.append(nested)
+            if not isinstance(node, ast.Call):
+                continue
+            for target in project.resolve_call(mod, node.func, info):
+                if id(target.node) not in reachable:
+                    work.append(target)
+            # callables handed to control-flow/transform combinators
+            qual = qualify(mod, node.func) or ""
+            if qual.startswith(("jax.lax.", "jax.checkpoint", "jax.vmap",
+                                "jax.grad", "jax.value_and_grad", "jax.remat",
+                                "jax.tree")):
+                for arg in node.args:
+                    if isinstance(arg, ast.Name):
+                        for target in project.resolve_call(mod, arg, info):
+                            if id(target.node) not in reachable:
+                                work.append(target)
+    return reachable
+
+
+# ------------------------------------------------------------ taint analysis
+
+
+class _Taint:
+    """Forward may-taint over one function body (fixpoint over loops)."""
+
+    def __init__(self, mod: Module, fn: FuncNode) -> None:
+        self.mod = mod
+        self.fn = fn
+        self.tainted: Set[str] = set()
+
+    def run(self) -> None:
+        body = self.fn.body if not isinstance(self.fn, ast.Lambda) else []
+        for _ in range(5):
+            before = set(self.tainted)
+            for stmt in body:
+                self._stmt(stmt)
+            if self.tainted == before:
+                break
+
+    # -- statements
+    def _stmt(self, node: ast.stmt) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return  # nested scopes analyzed independently
+        if isinstance(node, ast.Assign):
+            t = self.is_tainted(node.value)
+            for tgt in node.targets:
+                self._bind(tgt, t)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            self._bind(node.target, self.is_tainted(node.value))
+        elif isinstance(node, ast.AugAssign):
+            t = self.is_tainted(node.value) or self.is_tainted(node.target)
+            self._bind(node.target, t)
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            self._bind(node.target, self._iter_tainted(node.iter))
+            for s in node.body + node.orelse:
+                self._stmt(s)
+        elif isinstance(node, (ast.While, ast.If)):
+            for s in node.body + node.orelse:
+                self._stmt(s)
+        elif isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                if item.optional_vars is not None:
+                    self._bind(item.optional_vars,
+                               self.is_tainted(item.context_expr))
+            for s in node.body:
+                self._stmt(s)
+        elif isinstance(node, ast.Try):
+            for s in node.body + node.orelse + node.finalbody:
+                self._stmt(s)
+            for h in node.handlers:
+                for s in h.body:
+                    self._stmt(s)
+
+    def _bind(self, target: ast.expr, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            if tainted:
+                self.tainted.add(target.id)
+            else:
+                self.tainted.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._bind(elt, tainted)
+        elif isinstance(target, ast.Starred):
+            self._bind(target.value, tainted)
+
+    def _iter_tainted(self, it: ast.expr) -> bool:
+        if isinstance(it, ast.Call):
+            qual = qualify(self.mod, it.func)
+            if qual in ("enumerate", "zip", "reversed", "sorted"):
+                return any(self.is_tainted(a) for a in it.args)
+            if qual == "range":
+                return False
+        return self.is_tainted(it)
+
+    # -- expressions
+    def is_tainted(self, node: Optional[ast.expr]) -> bool:
+        if node is None:
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Call):
+            return self._call_tainted(node)
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_tainted(node.value) or self.is_tainted(node.slice)
+        if isinstance(node, ast.BinOp):
+            return self.is_tainted(node.left) or self.is_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_tainted(node.operand)
+        if isinstance(node, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False  # identity tests are static under jit
+            return self.is_tainted(node.left) or \
+                any(self.is_tainted(c) for c in node.comparators)
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_tainted(v) for v in node.values)
+        if isinstance(node, ast.IfExp):
+            return self.is_tainted(node.body) or self.is_tainted(node.orelse)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.is_tainted(e) for e in node.elts)
+        if isinstance(node, ast.Dict):
+            return any(self.is_tainted(v) for v in node.values)
+        if isinstance(node, ast.Starred):
+            return self.is_tainted(node.value)
+        if isinstance(node, (ast.ListComp, ast.GeneratorExp, ast.SetComp)):
+            return any(self._iter_tainted(g.iter) for g in node.generators) \
+                or self.is_tainted(node.elt)
+        if isinstance(node, ast.Slice):
+            return any(self.is_tainted(e)
+                       for e in (node.lower, node.upper, node.step))
+        return False
+
+    def _call_tainted(self, node: ast.Call) -> bool:
+        qual = qualify(self.mod, node.func)
+        if qual is not None:
+            if qual in ("int", "float", "bool", "len", "isinstance", "print",
+                        "repr", "str", "type", "max", "min", "range"):
+                return False  # host result (the sink rules flag the bad ones)
+            root = qual.split(".")[0]
+            if qual.startswith(_DEVICE_PREFIXES) or root in ("jnp", "pl",
+                                                             "pltpu"):
+                return True
+        # method call on a tainted value (x.astype(...), x.sum(), ...)
+        if isinstance(node.func, ast.Attribute) and \
+                self.is_tainted(node.func.value):
+            return True
+        # unknown callee: propagate through arguments (may-taint)
+        return any(self.is_tainted(a) for a in node.args) or \
+            any(self.is_tainted(k.value) for k in node.keywords)
+
+
+# ------------------------------------------------------------- rule checkers
+
+
+class _Checker:
+    def __init__(self, project: Project) -> None:
+        self.project = project
+        self.findings: List[Finding] = []
+
+    def emit(self, mod: Module, node: ast.AST, rule: str,
+             message: str) -> None:
+        if rule not in RULES:
+            raise KeyError(f"unknown lint rule: {rule}")
+        line = getattr(node, "lineno", 0)
+        col = getattr(node, "col_offset", 0)
+        self.findings.append(
+            Finding(mod.path, line, col, rule, message))
+
+    # ---- tracer rules (jit-reachable functions only)
+    def check_traced(self, info: FuncInfo) -> None:
+        mod, fn = info.module, info.node
+        taint = _Taint(mod, fn)
+        taint.run()
+        for node in _walk_own(fn):
+            if isinstance(node, (ast.If, ast.While)) and \
+                    taint.is_tainted(node.test):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                self.emit(mod, node, "tracer-branch",
+                          f"python `{kind}` on a traced value; use jnp.where"
+                          " / lax.cond / lax.while_loop")
+            elif isinstance(node, ast.Assert):
+                if taint.is_tainted(node.test):
+                    self.emit(mod, node, "tracer-bool-cast",
+                              "`assert` on a traced value concretizes the "
+                              "tracer at trace time")
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for tgt in targets:
+                    if _writes_self(tgt):
+                        self.emit(mod, node, "trace-side-effect",
+                                  "write to self.* inside jit-reachable code"
+                                  " runs once per trace, not per call")
+                        break
+            elif isinstance(node, ast.Call):
+                self._check_traced_call(mod, taint, node)
+
+    def _check_traced_call(self, mod: Module, taint: _Taint,
+                           node: ast.Call) -> None:
+        qual = qualify(mod, node.func)
+        args_tainted = any(taint.is_tainted(a) for a in node.args)
+        if qual == "bool" and args_tainted:
+            self.emit(mod, node, "tracer-bool-cast",
+                      "`bool()` on a traced value")
+        elif qual in ("float", "int") and args_tainted:
+            self.emit(mod, node, "tracer-host-op",
+                      f"`{qual}()` on a traced value forces a device→host "
+                      "sync (use .astype or keep it on device)")
+        elif qual == "print":
+            self.emit(mod, node, "trace-side-effect",
+                      "`print` inside jit-reachable code fires at trace time"
+                      " only; use jax.debug.print")
+        elif qual is not None and \
+                qual.split(".")[0] in _HOST_MODULES and args_tainted:
+            self.emit(mod, node, "tracer-host-op",
+                      f"host op `{qual}` on a traced value; use the jnp "
+                      "equivalent")
+        elif isinstance(node.func, ast.Attribute) and \
+                node.func.attr in ("item", "tolist", "__array__") and \
+                taint.is_tainted(node.func.value):
+            self.emit(mod, node, "tracer-host-op",
+                      f"`.{node.func.attr}()` on a traced value is a hidden "
+                      "device→host sync")
+
+    # ---- structural rules (whole tree)
+    def check_module(self, mod: Module) -> None:
+        kernel_module = "kernels" in mod.path.split(os.sep)
+        scopes = _scope_map(mod, self.project)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Expr) and _is_dropped_at_update(
+                    node.value):
+                self.emit(mod, node, "dropped-at-set",
+                          ".at[...] update result is discarded — jax arrays "
+                          "are immutable, bind or return the new array")
+            elif isinstance(node, ast.Dict):
+                keys = {k.value for k in node.keys
+                        if isinstance(k, ast.Constant) and
+                        isinstance(k.value, str)}
+                if {"k", "v", "bias"} <= keys:
+                    self.emit(mod, node, "dict-kv-literal",
+                              "build {'k','v','bias'} entries via "
+                              "models/cache.FusedPrefix, not ad-hoc dicts")
+            elif isinstance(node, ast.Assert) and kernel_module:
+                self.emit(mod, node, "bare-assert-kernel",
+                          "bare assert in a kernel module vanishes under "
+                          "python -O; raise ValueError instead")
+            elif isinstance(node, ast.Call):
+                qual = qualify(mod, node.func) or ""
+                if qual.endswith("pallas_call"):
+                    self._check_pallas(mod, node, scopes.get(id(node)))
+        self._check_kv_subscripts(mod)
+
+    def _check_kv_subscripts(self, mod: Module) -> None:
+        """KV001: dict-style subscripts on values known to be typed
+        containers (constructor calls, classmethods, annotations)."""
+        for (mname, _), info in self.project.functions.items():
+            fn = info.node
+            if mname != mod.name or isinstance(fn, ast.Lambda):
+                continue
+            typed = _typed_kv_vars(mod, fn)
+            for node in _walk_own(fn):
+                if not (isinstance(node, ast.Subscript) and
+                        isinstance(node.slice, ast.Constant) and
+                        isinstance(node.slice.value, str) and
+                        node.slice.value in _KV_KEYS):
+                    continue
+                base = node.value
+                name = base.id if isinstance(base, ast.Name) else None
+                is_typed = (name is not None and name in typed) or \
+                    _is_kv_producer(mod, base)
+                if is_typed and not _in_store_context(node):
+                    self.emit(mod, node, "dict-kv-access",
+                              f"dict-style access [{node.slice.value!r}] on "
+                              "a typed KV container is deprecated; use "
+                              f".{node.slice.value}")
+
+    # ---- pallas contracts
+    def _check_pallas(self, mod: Module, call: ast.Call,
+                      scope: Optional[FuncInfo]) -> None:
+        env = _local_env(scope.node) if scope is not None else {}
+        kw = {k.arg: k.value for k in call.keywords if k.arg}
+        grid_expr = _resolve(env, kw.get("grid"))
+        in_specs_expr = kw.get("in_specs")
+        out_specs_expr = kw.get("out_specs")
+        out_shape_expr = _resolve(env, kw.get("out_shape"))
+        n_prefetch = 0
+        gspec = _resolve(env, kw.get("grid_spec"))
+        if isinstance(gspec, ast.Call):
+            gkw = {k.arg: k.value for k in gspec.keywords if k.arg}
+            grid_expr = _resolve(env, gkw.get("grid", grid_expr))
+            in_specs_expr = gkw.get("in_specs", in_specs_expr)
+            out_specs_expr = gkw.get("out_specs", out_specs_expr)
+            npf = _resolve(env, gkw.get("num_scalar_prefetch"))
+            if isinstance(npf, ast.Constant) and isinstance(npf.value, int):
+                n_prefetch = npf.value
+        rank = None
+        if isinstance(grid_expr, (ast.Tuple, ast.List)):
+            rank = len(grid_expr.elts)
+        elif isinstance(grid_expr, ast.Constant) and \
+                isinstance(grid_expr.value, int):
+            rank = 1
+        in_specs, n_in = _collect_specs(env, in_specs_expr)
+        out_specs, n_out = _collect_specs(env, out_specs_expr)
+        if rank is not None:
+            want = rank + n_prefetch
+            for spec in in_specs + out_specs:
+                arity = _index_map_arity(env, spec)
+                if arity is not None and arity != want:
+                    self.emit(mod, spec, "pallas-grid-arity",
+                              f"index_map takes {arity} args but grid rank "
+                              f"{rank} + num_scalar_prefetch {n_prefetch} "
+                              f"= {want} are passed")
+        # PLC002: inline invocation operand count
+        parent_call = getattr(call, "_repro_parent_call", None)
+        if parent_call is not None and n_in is not None:
+            n_args = len(parent_call.args)
+            if not any(isinstance(a, ast.Starred) for a in parent_call.args) \
+                    and n_args != n_prefetch + n_in:
+                self.emit(mod, parent_call, "pallas-scalar-prefetch",
+                          f"pallas_call invoked with {n_args} operands but "
+                          f"num_scalar_prefetch {n_prefetch} + "
+                          f"len(in_specs) {n_in} = {n_prefetch + n_in} "
+                          "expected")
+        # PLC003: out_shape structure + dtype agreement
+        if out_shape_expr is not None:
+            shapes = out_shape_expr.elts if isinstance(
+                out_shape_expr, (ast.Tuple, ast.List)) else [out_shape_expr]
+            if n_out is not None and isinstance(
+                    out_shape_expr, (ast.Tuple, ast.List)) and \
+                    len(shapes) != n_out:
+                self.emit(mod, out_shape_expr, "pallas-out-shape",
+                          f"out_shape has {len(shapes)} entries but "
+                          f"out_specs has {n_out}")
+            for s in shapes:
+                s = _resolve(env, s)
+                if isinstance(s, ast.Call):
+                    squal = qualify(mod, s.func) or ""
+                    skw = {k.arg for k in s.keywords}
+                    if squal.endswith("ShapeDtypeStruct") and \
+                            len(s.args) < 2 and "dtype" not in skw:
+                        self.emit(mod, s, "pallas-out-shape",
+                                  "ShapeDtypeStruct without an explicit "
+                                  "dtype — out dtype must be pinned to the "
+                                  "ref kernel's")
+
+
+def _walk_own(fn: FuncNode) -> Iterable[ast.AST]:
+    """ast.walk limited to this function's own body (skips nested defs,
+    which are analyzed as their own scopes)."""
+    stack: List[ast.AST] = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _writes_self(target: ast.expr) -> bool:
+    node: ast.expr = target
+    while isinstance(node, (ast.Subscript, ast.Attribute)):
+        node = node.value
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.value, ast.Name) and node.value.id == "self":
+            return True
+    return isinstance(target, ast.Attribute) and \
+        isinstance(target.value, ast.Name) and target.value.id == "self"
+
+
+def _is_dropped_at_update(expr: ast.expr) -> bool:
+    if not (isinstance(expr, ast.Call) and
+            isinstance(expr.func, ast.Attribute) and
+            expr.func.attr in _AT_METHODS):
+        return False
+    node = expr.func.value
+    while isinstance(node, (ast.Subscript, ast.Attribute)):
+        if isinstance(node, ast.Subscript) and \
+                isinstance(node.value, ast.Attribute) and \
+                node.value.attr == "at":
+            return True
+        node = node.value
+    return False
+
+
+def _typed_kv_vars(mod: Module, fn: Union[ast.FunctionDef,
+                                          ast.AsyncFunctionDef]) -> Set[str]:
+    typed: Set[str] = set()
+    for arg in (list(fn.args.posonlyargs) + list(fn.args.args) +
+                list(fn.args.kwonlyargs)):
+        if arg.annotation is not None and \
+                _annotation_kv_type(mod, arg.annotation):
+            typed.add(arg.arg)
+    for node in _walk_own(fn):
+        if isinstance(node, ast.Assign) and _is_kv_producer(mod, node.value):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    typed.add(tgt.id)
+        elif isinstance(node, ast.AnnAssign) and \
+                isinstance(node.target, ast.Name) and \
+                _annotation_kv_type(mod, node.annotation):
+            typed.add(node.target.id)
+    return typed
+
+
+def _annotation_kv_type(mod: Module, ann: ast.expr) -> bool:
+    qual = qualify(mod, ann)
+    if qual is None and isinstance(ann, ast.Constant) and \
+            isinstance(ann.value, str):
+        qual = ann.value
+    return qual is not None and qual.rsplit(".", 1)[-1] in _KV_TYPES
+
+
+def _is_kv_producer(mod: Module, expr: ast.expr) -> bool:
+    """Calls whose result is a typed KV container: constructors and their
+    classmethods (FusedPrefix(...), KVCache.init(...), .ensure(...))."""
+    if not isinstance(expr, ast.Call):
+        return False
+    qual = qualify(mod, expr.func)
+    if qual is None:
+        return False
+    parts = qual.rsplit(".", 2)
+    if parts[-1] in _KV_TYPES:
+        return True
+    return len(parts) >= 2 and parts[-2].rsplit(".", 1)[-1] in _KV_TYPES
+
+
+def _in_store_context(node: ast.Subscript) -> bool:
+    return isinstance(node.ctx, (ast.Store, ast.Del))
+
+
+def _local_env(fn: FuncNode) -> Dict[str, ast.expr]:
+    env: Dict[str, ast.expr] = {}
+    if isinstance(fn, ast.Lambda):
+        return env
+    for node in _walk_own(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name):
+            env[node.targets[0].id] = node.value
+        elif isinstance(node, ast.AnnAssign) and \
+                isinstance(node.target, ast.Name) and node.value is not None:
+            env[node.target.id] = node.value
+    return env
+
+
+def _resolve(env: Dict[str, ast.expr],
+             expr: Optional[ast.expr]) -> Optional[ast.expr]:
+    seen = 0
+    while isinstance(expr, ast.Name) and expr.id in env and seen < 4:
+        expr = env[expr.id]
+        seen += 1
+    return expr
+
+
+def _collect_specs(env: Dict[str, ast.expr], expr: Optional[ast.expr],
+                   ) -> Tuple[List[ast.Call], Optional[int]]:
+    """Flatten an in_specs/out_specs expression into the BlockSpec calls it
+    mentions plus the total element count (None when not statically known).
+    Handles list literals, Name aliases, `a + b`, and `[spec] * n`."""
+    expr = _resolve(env, expr)
+    if expr is None:
+        return [], None
+    if isinstance(expr, (ast.List, ast.Tuple)):
+        specs: List[ast.Call] = []
+        total: Optional[int] = 0
+        for elt in expr.elts:
+            sub, n = _collect_specs(env, elt)
+            specs.extend(sub)
+            total = None if (total is None or n is None) else total + n
+        return specs, total
+    if isinstance(expr, ast.BinOp) and isinstance(expr.op, ast.Add):
+        left, nl = _collect_specs(env, expr.left)
+        right, nr = _collect_specs(env, expr.right)
+        n = None if (nl is None or nr is None) else nl + nr
+        return left + right, n
+    if isinstance(expr, ast.BinOp) and isinstance(expr.op, ast.Mult):
+        base, nb = _collect_specs(env, expr.left)
+        mult = _resolve(env, expr.right)
+        if isinstance(mult, ast.Constant) and isinstance(mult.value, int) \
+                and nb is not None:
+            return base, nb * mult.value
+        return base, None
+    if isinstance(expr, ast.Call):
+        return [expr], 1
+    return [], None
+
+
+def _index_map_arity(env: Dict[str, ast.expr],
+                     spec: ast.Call) -> Optional[int]:
+    imap: Optional[ast.expr] = None
+    if len(spec.args) >= 2:
+        imap = spec.args[1]
+    for k in spec.keywords:
+        if k.arg == "index_map":
+            imap = k.value
+    imap = _resolve(env, imap)
+    if isinstance(imap, ast.Lambda):
+        a = imap.args
+        return len(a.posonlyargs) + len(a.args)
+    return None
+
+
+# -------------------------------------------------------------- entry point
+
+
+def _suppressions(mod: Module) -> Dict[int, Set[str]]:
+    import re
+    out: Dict[int, Set[str]] = {}
+    pat = re.compile(r"lint:\s*allow\(([a-z0-9_,\s-]+)\)")
+    for i, line in enumerate(mod.lines, start=1):
+        m = pat.search(line)
+        if m:
+            names = {n.strip() for n in m.group(1).split(",") if n.strip()}
+            out[i] = names
+    return out
+
+
+def _mark_parent_calls(mod: Module) -> None:
+    """Tag each pallas_call Call with its immediate invocation
+    (``pl.pallas_call(...)(operands)``) for the PLC002 operand check."""
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Call):
+            qual = qualify(mod, node.func.func) or ""
+            if qual.endswith("pallas_call"):
+                setattr(node.func, "_repro_parent_call", node)
+
+
+def lint_paths(paths: Sequence[str]) -> List[Finding]:
+    """Lint every python file under ``paths``; returns sorted findings."""
+    project, errors = load_project(paths)
+    checker = _Checker(project)
+    for err in errors:
+        path, _, msg = err.partition(": ")
+        checker.findings.append(Finding(path, 0, 0, "tracer-branch",
+                                        f"parse error: {msg}"))
+    roots = collect_jit_roots(project)
+    reachable = compute_reachable(project, roots)
+    for mod in project.modules:
+        _mark_parent_calls(mod)
+        checker.check_module(mod)
+    for info in project.functions.values():
+        if id(info.node) in reachable:
+            checker.check_traced(info)
+    out: List[Finding] = []
+    for f in checker.findings:
+        mod = next((m for m in project.modules if m.path == f.path), None)
+        if mod is not None:
+            sup = _suppressions(mod)
+            allowed = sup.get(f.line, set()) | sup.get(f.line - 1, set())
+            if f.rule in allowed or "all" in allowed:
+                continue
+        out.append(f)
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return out

@@ -1,0 +1,85 @@
+"""Rule registry + finding record for the trace-discipline linter.
+
+Every rule has a stable code (``TRCxxx`` tracer discipline, ``KVxxx`` typed
+KV-cache API, ``PLCxxx`` Pallas contracts) and a kebab-case name usable in
+suppression comments: a finding on a line containing ``lint: allow(<name>)``
+(same line or the line directly above) is dropped. Add a rule by appending a
+:class:`Rule` here and emitting its findings from ``lint.py`` — the corpus in
+``tests/test_analysis.py`` must then show it catching a known-bad snippet and
+passing a known-good one.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class Rule:
+    code: str
+    name: str
+    summary: str
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One linter hit, formatted ``path:line:col: CODE[name] message``."""
+
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    @property
+    def code(self) -> str:
+        return RULES[self.rule].code
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.code}[{self.rule}] {self.message}")
+
+    def to_dict(self) -> Dict[str, object]:
+        return {"path": self.path, "line": self.line, "col": self.col,
+                "code": self.code, "rule": self.rule, "message": self.message}
+
+
+_RULES = [
+    Rule("TRC001", "tracer-branch",
+         "Python `if`/`while` on a tracer-valued expression inside "
+         "jit-reachable code — branches must use jnp.where / lax.cond"),
+    Rule("TRC002", "tracer-bool-cast",
+         "`bool()` / `assert` on a tracer-valued expression inside "
+         "jit-reachable code — forces a concrete value at trace time"),
+    Rule("TRC003", "tracer-host-op",
+         "np.* / .item() / float() / int() on a traced value inside "
+         "jit-reachable code — a hidden device→host sync per call"),
+    Rule("TRC004", "trace-side-effect",
+         "host-state mutation (self.* write / print) inside a jit-reachable "
+         "function — runs at trace time only, silently wrong on cache hits"),
+    Rule("JAX001", "dropped-at-set",
+         ".at[...].set()/add()/... result discarded — jax arrays are "
+         "immutable, the statement is a no-op"),
+    Rule("KV001", "dict-kv-access",
+         "dict-style subscript on a typed KV container "
+         "(KVCache/KVStack/FusedPrefix/SlotTable) — deprecated; use "
+         "attribute access"),
+    Rule("KV002", "dict-kv-literal",
+         "ad-hoc {'k','v','bias'} dict literal — construct fused/extra-KV "
+         "entries through models/cache.FusedPrefix instead"),
+    Rule("PLC001", "pallas-grid-arity",
+         "BlockSpec index_map arity does not match pallas grid rank "
+         "(+ num_scalar_prefetch operands)"),
+    Rule("PLC002", "pallas-scalar-prefetch",
+         "pallas_call invocation operand count does not match "
+         "num_scalar_prefetch + in_specs"),
+    Rule("PLC003", "pallas-out-shape",
+         "pallas_call out_shape disagrees with out_specs (count) or an "
+         "out_shape entry lacks an explicit dtype"),
+    Rule("PLC004", "bare-assert-kernel",
+         "bare `assert` in a kernel module — vanishes under python -O; "
+         "raise ValueError (see decode_attention._check_block)"),
+]
+
+RULES: Dict[str, Rule] = {r.name: r for r in _RULES}
+RULES_BY_CODE: Dict[str, Rule] = {r.code: r for r in _RULES}

@@ -54,10 +54,15 @@ def fuser_mlp_pallas(
     d_h = w1.shape[1]
     d_out = w3.shape[1]
     bt = min(block_t, T)
-    assert T % bt == 0, (T, bt)
+    if T % bt != 0:
+        raise ValueError(
+            f"fuser_mlp_pallas: token count {T} not divisible by block_t {bt}")
     wbytes = (w1.size + w2.size + w3.size) * x.dtype.itemsize
     abytes = bt * (d_in + 2 * d_h + d_out) * 4
-    assert wbytes + abytes < _VMEM_BYTES, "fuser dims exceed VMEM tiling budget"
+    if wbytes + abytes >= _VMEM_BYTES:
+        raise ValueError(
+            f"fuser_mlp_pallas: fuser dims exceed VMEM tiling budget "
+            f"({wbytes + abytes} >= {_VMEM_BYTES} bytes)")
 
     grid = (T // bt,)
     return pl.pallas_call(

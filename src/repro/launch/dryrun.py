@@ -236,16 +236,16 @@ def build_federated_lowered(rx_arch: str, tx_arch: str, shape_name: str, mesh,
         else None
 
     if pre_projected:
-        fused_struct = {
-            "k": _struct((n_rx, B, hkv_r, S, hd_r), dtype),
-            "v": _struct((n_rx, B, hkv_r, S, hd_r), dtype),
-            "bias": _struct((n_rx, B, S), jnp.float32),
-        }
-        fused_shard = SH.to_sharding(mesh, {
-            "k": P(None, bspec, None, "model", None),
-            "v": P(None, bspec, None, "model", None),
-            "bias": P(None, bspec, None),
-        })
+        fused_struct = FusedPrefix(
+            k=_struct((n_rx, B, hkv_r, S, hd_r), dtype),
+            v=_struct((n_rx, B, hkv_r, S, hd_r), dtype),
+            bias=_struct((n_rx, B, S), jnp.float32),
+        )
+        fused_shard = SH.to_sharding(mesh, FusedPrefix(
+            k=P(None, bspec, None, "model", None),
+            v=P(None, bspec, None, "model", None),
+            bias=P(None, bspec, None),
+        ))
 
         def step(params, cache, token, fused):
             return T.decode_step(cfg_rx, params, cache, token,

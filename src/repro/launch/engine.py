@@ -246,7 +246,7 @@ class ContinuousBatchingEngine:
         in_place = paged and self.paged_attention == "kernel"
 
         def decode(params, table, tok, fused, fused_rows, active):
-            self.stats["decode_traces"] += 1  # trace-time: counts compilations
+            self.stats["decode_traces"] += 1  # trace-time compile count; lint: allow(trace-side-effect)
             ek = None
             if fused is not None:
                 # row indirection: slots sharing a digest gather the same row
@@ -268,7 +268,7 @@ class ContinuousBatchingEngine:
                 return nxt, new_table.with_pos(
                     jnp.where(active, new_table.pos, table.pos))
             if paged:  # gather reference path (debug/parity)
-                self.stats["decode_view_gathers"] += 1
+                self.stats["decode_view_gathers"] += 1  # lint: allow(trace-side-effect)
             view = table.dense_view() if paged else table
             logits, new_view = T.decode_step(cfg, params, view, tok,
                                              extra_kv=ek)
@@ -289,7 +289,7 @@ class ContinuousBatchingEngine:
         cfg, max_seq, dtype = self.cfg, self.max_seq, self.cache_dtype
 
         def prefill(params, tokens, fused):
-            self.stats["prefill_traces"] += 1
+            self.stats["prefill_traces"] += 1  # lint: allow(trace-side-effect)
             ek = fused.to_extra_kv(cfg) if fused is not None else None
             logits, cache = T.prefill(cfg, params, tokens, max_seq=max_seq,
                                       cache_dtype=dtype, extra_kv=ek)
@@ -311,16 +311,14 @@ class ContinuousBatchingEngine:
 
         def sprefill(params, table, toks, prefix_pages, prefix_len, fused,
                      phys, off, page_row, slot, final_pos):
-            self.stats["suffix_prefill_traces"] += 1
+            self.stats["suffix_prefill_traces"] += 1  # lint: allow(trace-side-effect)
             ek = table.prefix_extra_kv(prefix_pages, prefix_len)
             if fused is not None:
                 # fused C2C prefix precedes the cached prompt prefix, same
                 # order as the fresh prefill path
                 fek = fused.to_extra_kv(cfg)
-                ek = [{"k": jnp.concatenate([f["k"], p["k"]], axis=-2),
-                       "v": jnp.concatenate([f["v"], p["v"]], axis=-2),
-                       "bias": jnp.concatenate([f["bias"], p["bias"]],
-                                               axis=-1)}
+                ek = [FusedPrefix.concat([f, p])
+                      if f is not None and p is not None else p
                       for f, p in zip(fek, ek)]
             logits, cache = T.prefill(cfg, params, toks,
                                       max_seq=int(toks.shape[1]),

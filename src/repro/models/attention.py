@@ -8,20 +8,32 @@ One implementation serves every assigned family:
     ``attend`` is deliberately cache-layout agnostic so core/c2c.py can reuse it.
 
 Layer-local contract: ``extra_kv`` here is one *per-layer slice* of a
-``models/cache.FusedPrefix`` (a {"k","v"[,"bias"]} dict produced by
-``FusedPrefix.to_extra_kv``) — this module never sees the whole typed prefix,
+``models/cache.FusedPrefix`` — a FusedPrefix itself, produced by
+``FusedPrefix.to_extra_kv`` and consumed by attribute access
+(``.k``/``.v``/``.bias``; bias may be None). Legacy ``{"k","v"[,"bias"]}``
+dicts are upgraded on entry. This module never sees the whole typed prefix,
 so it works unchanged for dense rows, paged gather views, and any channel
 codec upstream.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
+
+
+def _ensure_prefix(extra_kv: Optional[Any]) -> Optional[Any]:
+    """Upgrade a legacy extra-KV dict to a FusedPrefix slice (no-op for the
+    typed path). Import is deferred — cache.py sits above this module."""
+    if extra_kv is None or not isinstance(extra_kv, dict):
+        return extra_kv
+    from repro.models.cache import FusedPrefix
+
+    return FusedPrefix.ensure(extra_kv)
 
 
 # ------------------------------------------------------------------ params
@@ -243,7 +255,7 @@ def full_forward(
     sin: jax.Array,
     *,
     window: int = 0,
-    extra_kv: Optional[dict] = None,  # fused transmitter cache (C2C): k/v (B,Hkv,Sf,hd)
+    extra_kv: Optional[Any] = None,  # per-layer FusedPrefix slice (C2C): k/v (B,Hkv,Sf,hd)
     flash_threshold: int = 2048,  # above this S, use the chunked flash path
 ) -> Tuple[jax.Array, dict]:
     """Training/prefill attention over the whole sequence.
@@ -254,6 +266,7 @@ def full_forward(
     """
     S = x.shape[1]
     B = x.shape[0]
+    extra_kv = _ensure_prefix(extra_kv)
     q, k, v = project_qkv(cfg, params, x, cos, sin)
 
     if S > flash_threshold:  # memory-efficient path (train_4k / prefill_32k)
@@ -261,14 +274,14 @@ def full_forward(
         key_pos = jnp.arange(S, dtype=jnp.int32)
         key_bias = None
         if extra_kv is not None:
-            Sf = extra_kv["k"].shape[-2]
-            k_all = jnp.concatenate([extra_kv["k"].astype(k.dtype), k], axis=-2)
-            v_all = jnp.concatenate([extra_kv["v"].astype(v.dtype), v], axis=-2)
+            Sf = extra_kv.k.shape[-2]
+            k_all = jnp.concatenate([extra_kv.k.astype(k.dtype), k], axis=-2)
+            v_all = jnp.concatenate([extra_kv.v.astype(v.dtype), v], axis=-2)
             key_pos = jnp.concatenate(
                 [jnp.full((Sf,), -1, jnp.int32), key_pos])  # prefix: always visible
-            if "bias" in extra_kv:
+            if extra_kv.bias is not None:
                 key_bias = jnp.concatenate(
-                    [extra_kv["bias"].astype(jnp.float32),
+                    [extra_kv.bias.astype(jnp.float32),
                      jnp.zeros((B, S), jnp.float32)], axis=-1)
         out = _flash_attend(q, k_all, v_all, key_pos, key_bias, window=window)
         return L.linear(params["wo"], out), {"k": k, "v": v}
@@ -276,13 +289,13 @@ def full_forward(
     mask = causal_mask(S, S, window=window)
     extra_bias = None
     if extra_kv is not None:
-        Sf = extra_kv["k"].shape[-2]
-        k = jnp.concatenate([extra_kv["k"].astype(k.dtype), k], axis=-2)
-        v = jnp.concatenate([extra_kv["v"].astype(v.dtype), v], axis=-2)
+        Sf = extra_kv.k.shape[-2]
+        k = jnp.concatenate([extra_kv.k.astype(k.dtype), k], axis=-2)
+        v = jnp.concatenate([extra_kv.v.astype(v.dtype), v], axis=-2)
         pre = jnp.ones((1, 1, S, Sf), bool)
         mask = jnp.concatenate([pre, jnp.broadcast_to(mask, (1, 1, S, S))], axis=-1)
-        if "bias" in extra_kv:  # per-position gate bias on the fused prefix
-            eb = jnp.broadcast_to(extra_kv["bias"][:, None, None, :], (B, 1, 1, Sf))
+        if extra_kv.bias is not None:  # per-position gate bias on the fused prefix
+            eb = jnp.broadcast_to(extra_kv.bias[:, None, None, :], (B, 1, 1, Sf))
             extra_bias = jnp.concatenate(
                 [eb, jnp.zeros((B, 1, 1, S), jnp.float32)], axis=-1)
     out = attend(q, k, v, mask, extra_bias)
@@ -299,7 +312,7 @@ def decode_forward(
     pos: jax.Array,  # int32 — current absolute position: scalar or per-slot (B,)
     *,
     window: int = 0,
-    extra_kv: Optional[dict] = None,  # fused transmitter cache (C2C), always visible
+    extra_kv: Optional[Any] = None,  # per-layer FusedPrefix slice (C2C), always visible
     extra_kv_mode: str = "concat",  # "concat" (Eq. 1 literal) | "split" (LSE merge)
 ) -> Tuple[jax.Array, dict]:
     """Single-token decode against a cache; returns (out (B,1,d), updated kv).
@@ -311,6 +324,7 @@ def decode_forward(
     """
     B = x.shape[0]
     per_slot = pos.ndim == 1
+    extra_kv = _ensure_prefix(extra_kv)
     q, k_new, v_new = project_qkv(cfg, params, x, cos, sin)
     k_new = k_new.astype(kv["k"].dtype)
     v_new = v_new.astype(kv["v"].dtype)
@@ -355,24 +369,24 @@ def decode_forward(
         # separately (each under its own sharding), merged by online-softmax
         # statistics — no concatenated 2S cache is ever formed (§Perf, pair C).
         own = attend_stats(q, k, v, mask)
-        pb = (extra_kv["bias"][:, None, None, :]
-              if "bias" in extra_kv else None)
-        pre = attend_stats(q, extra_kv["k"].astype(k.dtype),
-                           extra_kv["v"].astype(v.dtype), None, pb)
+        pb = (extra_kv.bias[:, None, None, :]
+              if extra_kv.bias is not None else None)
+        pre = attend_stats(q, extra_kv.k.astype(k.dtype),
+                           extra_kv.v.astype(v.dtype), None, pb)
         out = merge_attention([own, pre]).astype(x.dtype)
         return L.linear(params["wo"], out), new_kv
 
     extra_bias = None
     if extra_kv is not None:
-        Sf = extra_kv["k"].shape[-2]
-        k = jnp.concatenate([extra_kv["k"].astype(k.dtype), k], axis=-2)
-        v = jnp.concatenate([extra_kv["v"].astype(v.dtype), v], axis=-2)
+        Sf = extra_kv.k.shape[-2]
+        k = jnp.concatenate([extra_kv.k.astype(k.dtype), k], axis=-2)
+        v = jnp.concatenate([extra_kv.v.astype(v.dtype), v], axis=-2)
         fmask = jnp.ones((1, 1, 1, Sf), bool)
         mask = jnp.concatenate([jnp.broadcast_to(fmask, (*mask.shape[:3], Sf)), mask],
                                axis=-1)
-        if "bias" in extra_kv:
+        if extra_kv.bias is not None:
             Sk = new_kv["k"].shape[-2]
-            eb = jnp.broadcast_to(extra_kv["bias"][:, None, None, :], (B, 1, 1, Sf))
+            eb = jnp.broadcast_to(extra_kv.bias[:, None, None, :], (B, 1, 1, Sf))
             extra_bias = jnp.concatenate(
                 [eb, jnp.zeros((B, 1, 1, Sk), jnp.float32)], axis=-1)
 
@@ -391,7 +405,7 @@ def decode_forward_paged(
     pos: jax.Array,  # (slots,) int32 per-slot decode position
     *,
     page_size: int,
-    extra_kv: Optional[dict] = None,  # fused C2C prefix, always visible
+    extra_kv: Optional[Any] = None,  # per-layer FusedPrefix slice, always visible
 ) -> Tuple[jax.Array, dict]:
     """Single-token decode straight against a paged page pool — the hot loop
     never gathers a dense view. The new token's k/v scatter to their physical
@@ -402,6 +416,7 @@ def decode_forward_paged(
     Returns (out (slots, 1, d), updated {"k","v"} pools)."""
     from repro.models.cache import SlotTable
 
+    extra_kv = _ensure_prefix(extra_kv)
     q, k_new, v_new = project_qkv(cfg, params, x, cos, sin)  # q (B,H,1,hd)
     k_pool = SlotTable.write_token(entry["k"], k_new[:, :, 0], page_map, pos,
                                    page_size)
@@ -411,10 +426,10 @@ def decode_forward_paged(
     new_kv = {"k": k_pool, "v": v_pool}
     if extra_kv is not None:
         own = (o.astype(jnp.float32) * l[..., None])[:, :, None, :]
-        pb = (extra_kv["bias"][:, None, None, :]
-              if "bias" in extra_kv else None)
-        pre = attend_stats(q, extra_kv["k"].astype(k_pool.dtype),
-                           extra_kv["v"].astype(v_pool.dtype), None, pb)
+        pb = (extra_kv.bias[:, None, None, :]
+              if extra_kv.bias is not None else None)
+        pre = attend_stats(q, extra_kv.k.astype(k_pool.dtype),
+                           extra_kv.v.astype(v_pool.dtype), None, pb)
         out = merge_attention([(own, m[:, :, None], l[:, :, None]), pre])
         out = out.astype(x.dtype)
     else:

@@ -282,19 +282,18 @@ class FusedPrefix:
 
     def to_extra_kv(self, cfg: ModelConfig) -> list:
         """Slice into the per-position ``extra_kv`` list that
-        transformer.forward / decode_step consume (one stacked entry per
-        pattern position, then tail positions; non-attention positions None).
-        """
+        transformer.forward / decode_step consume (one stacked
+        :class:`FusedPrefix` entry per pattern position, then tail positions;
+        non-attention positions None)."""
         cycles, pattern, tail = _grouping(cfg)
         bias = self.bias
-        out: List[Optional[dict]] = []
+        out: List[Optional[FusedPrefix]] = []
         off = 0
 
         def slice_at(o, n):
-            e = {"k": self.k[o: o + n], "v": self.v[o: o + n]}
-            if bias is not None:
-                e["bias"] = bias[o: o + n]
-            return e
+            return FusedPrefix(
+                k=self.k[o: o + n], v=self.v[o: o + n],
+                bias=None if bias is None else bias[o: o + n])
 
         for kind in pattern:
             if kind in ("attn", "swa"):
@@ -759,9 +758,9 @@ class SlotTable:
         out = []
         for e in self.layers:
             k = gather(e["k"])
-            out.append({"k": k, "v": gather(e["v"]),
-                        "bias": jnp.broadcast_to(
-                            mask, (k.shape[0], 1, npp * pg))})
+            out.append(FusedPrefix(
+                k=k, v=gather(e["v"]),
+                bias=jnp.broadcast_to(mask, (k.shape[0], 1, npp * pg))))
         return out
 
     def evict_slot(self, slot) -> "SlotTable":

@@ -30,7 +30,7 @@ from repro.models import layers as L
 from repro.models import moe as MOE
 from repro.models import rglru as RG
 from repro.models import ssd as SSD
-from repro.models.cache import KVCache, SlotTable
+from repro.models.cache import FusedPrefix, KVCache, SlotTable
 
 
 # ------------------------------------------------------------ act sharding
@@ -274,9 +274,10 @@ def forward(
 ) -> Tuple[jax.Array, jax.Array]:
     """Teacher-forced forward. Returns (logits (B,S,V), moe_aux scalar).
 
-    ``extra_kv`` is the C2C fused-cache prefix (Eq. 1/4): a list with one entry per
-    pattern position (then tail positions); attention entries are stacked
-    {"k","v"} of shape (cycles, B, Hkv, Sf, hd), others None.
+    ``extra_kv`` is the C2C fused-cache prefix (Eq. 1/4): a list with one entry
+    per pattern position (then tail positions); attention entries are stacked
+    per-layer ``FusedPrefix`` slices with k/v (cycles, B, Hkv, Sf, hd)
+    (legacy {"k","v"} dicts still accepted), others None.
     """
     cycles, pattern, tail = layer_grouping(cfg)
     x = _embed_in(cfg, params, tokens, embeds)
@@ -296,7 +297,7 @@ def forward(
         x = _constrain(x)
         p_stack, ekx = xs
         for i, kind in enumerate(pattern):
-            e = ekx[i] if isinstance(ekx[i], dict) else None
+            e = ekx[i] if isinstance(ekx[i], (dict, FusedPrefix)) else None
             x, _, _, aux = _apply_layer_full(cfg, kind, p_stack[i], x, cos, sin,
                                              window, aux, extra_kv=e,
                                              moe_dropless=moe_dropless)
@@ -380,7 +381,7 @@ def prefill(
         p_stack, entries, ekx = xs
         new_entries = []
         for i, kind in enumerate(pattern):
-            e = ekx[i] if isinstance(ekx[i], dict) else None
+            e = ekx[i] if isinstance(ekx[i], (dict, FusedPrefix)) else None
             x, kv, st, aux = _apply_layer_full(
                 cfg, kind, p_stack[i], x, cos, sin, window, aux,
                 state=None, extra_kv=e)
@@ -471,7 +472,7 @@ def decode_step(
         p_stack, entries, ekx = xs
         new_entries = []
         for i, kind in enumerate(pattern):
-            e = ekx[i] if isinstance(ekx[i], dict) else None
+            e = ekx[i] if isinstance(ekx[i], (dict, FusedPrefix)) else None
             x, new_e = _apply_layer_decode(cfg, kind, p_stack[i], x, cos, sin,
                                            entries[i], pos, window, extra_kv=e,
                                            extra_kv_mode=extra_kv_mode,

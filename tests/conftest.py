@@ -46,6 +46,16 @@ if not _HAVE_TIMEOUT_PLUGIN:
             signal.signal(signal.SIGALRM, old)
 
 
+@pytest.fixture
+def trace_guard():
+    """Factory fixture for repro.analysis.TraceGuard: returns the class so a
+    test can open its own budgeted window, e.g.
+    ``with trace_guard(max_traces={"decode": 1}) as tg: ...``."""
+    from repro.analysis import TraceGuard
+
+    return TraceGuard
+
+
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)

@@ -1,0 +1,544 @@
+"""repro.analysis: linter rule corpus (true positive + no false positive per
+rule), jit-root/reachability behaviour, suppression comments, the CLI, the
+self-lint acceptance gate, and TraceGuard retrace enforcement on the engine.
+
+Corpus contract (ISSUE 7): every rule class ships a known-bad snippet the
+linter must flag and a known-good twin it must stay silent on — CI treats any
+finding as a failure, so the no-FP half is what keeps the gate trustworthy.
+"""
+import os
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import RULES, TraceGuard, TraceGuardError, lint_paths
+from repro.analysis.__main__ import main as lint_main
+from repro.configs.base import ModelConfig
+from repro.configs.case_study import tiny_zoo
+from repro.core import fuser as F
+from repro.launch.engine import ContinuousBatchingEngine
+from repro.models import transformer as T
+
+VOCAB = 64
+
+_PALLAS_HEADER = """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+"""
+
+# rule -> (bad snippet, good twin). Bad must produce >= 1 finding of exactly
+# that rule; good must produce zero findings of any rule.
+CORPUS = {
+    "tracer-branch": (
+        """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            y = jnp.sum(x)
+            if y > 0:
+                return y
+            return -y
+        """,
+        """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            y = jnp.sum(x)
+            return jnp.where(y > 0, y, -y)
+
+        @jax.jit
+        def g(x):
+            if x.shape[0] > 2:  # static shape: fine under jit
+                return x * 2
+            return x
+        """,
+    ),
+    "tracer-bool-cast": (
+        """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x):
+            s = jnp.sum(x)
+            assert s > 0
+            return bool(jnp.max(x) > 0), s
+        """,
+        """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def f(x, lo):
+            assert x.ndim == 2, x.shape  # static metadata: fine
+            assert lo is not None       # identity test: fine
+            return jnp.sum(x)
+        """,
+    ),
+    "tracer-host-op": (
+        """
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            y = jnp.sum(x)
+            hi = np.asarray(y)
+            return float(jnp.mean(x)), jnp.max(x).item(), hi
+        """,
+        """
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            n = int(x.shape[0])          # static shape
+            host = np.arange(n)          # np on host values only
+            return jnp.sum(x) + jnp.asarray(host)
+
+        def host_side(x):
+            return float(np.mean(x))     # not jit-reachable: fine
+        """,
+    ),
+    "trace-side-effect": (
+        """
+        import jax
+        import jax.numpy as jnp
+
+        class Engine:
+            def __init__(self):
+                self.stats = {}
+                self.fn = jax.jit(lambda x: self.step(x))
+
+            def step(self, x):
+                self.stats["steps"] = 1
+                print("tracing step")
+                return jnp.sum(x)
+        """,
+        """
+        import jax
+        import jax.numpy as jnp
+
+        class Engine:
+            def __init__(self):
+                self.stats = {}
+                self.fn = jax.jit(lambda x: self.step(x))
+
+            def step(self, x):
+                jax.debug.print("step {x}", x=x)  # runs per call, not per trace
+                return jnp.sum(x)
+
+            def host_update(self):  # not jit-reachable: fine
+                self.stats["drained"] = 1
+        """,
+    ),
+    "dropped-at-set": (
+        """
+        import jax.numpy as jnp
+
+        def f(x):
+            x.at[0].set(1.0)
+            return x
+        """,
+        """
+        import jax.numpy as jnp
+
+        def f(x):
+            x = x.at[0].set(1.0)
+            return x
+        """,
+    ),
+    "dict-kv-access": (
+        """
+        from repro.models.cache import FusedPrefix
+
+        def f(obj):
+            fp = FusedPrefix.ensure(obj)
+            return fp["k"], fp["v"]
+        """,
+        """
+        from repro.models.cache import FusedPrefix
+
+        def f(obj, entry):
+            fp = FusedPrefix.ensure(obj)
+            return fp.k, fp.v, entry["k"]  # plain layer dicts stay dicts
+        """,
+    ),
+    "dict-kv-literal": (
+        """
+        def f(k, v, b):
+            return {"k": k, "v": v, "bias": b}
+        """,
+        """
+        from repro.models.cache import FusedPrefix
+
+        def f(k, v, b):
+            typed = FusedPrefix(k=k, v=v, bias=b)
+            layer_entry = {"k": k, "v": v}  # 2-key cache entries are fine
+            return typed, layer_entry
+        """,
+    ),
+    "pallas-grid-arity": (
+        _PALLAS_HEADER + """
+        def f(x):
+            return pl.pallas_call(
+                kernel,
+                grid=(4, 4),
+                in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+                out_shape=jax.ShapeDtypeStruct((32, 32), jnp.float32),
+            )(x)
+        """,
+        _PALLAS_HEADER + """
+        def f(x):
+            grid = (4, 4)
+            spec = pl.BlockSpec((8, 8), lambda i, j: (i, j))
+            return pl.pallas_call(
+                kernel,
+                grid=grid,
+                in_specs=[spec],
+                out_specs=spec,
+                out_shape=jax.ShapeDtypeStruct((32, 32), jnp.float32),
+            )(x)
+        """,
+    ),
+    "pallas-scalar-prefetch": (
+        _PALLAS_HEADER + """
+        def f(x, y):
+            return pl.pallas_call(
+                kernel,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+                out_shape=jax.ShapeDtypeStruct((32,), jnp.float32),
+            )(x, y)
+        """,
+        _PALLAS_HEADER + """
+        def f(x, y):
+            specs = [pl.BlockSpec((8,), lambda i: (i,))] * 2
+            return pl.pallas_call(
+                kernel,
+                grid=(4,),
+                in_specs=specs,
+                out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+                out_shape=jax.ShapeDtypeStruct((32,), jnp.float32),
+            )(x, y)
+        """,
+    ),
+    "pallas-out-shape": (
+        _PALLAS_HEADER + """
+        def f(x):
+            return pl.pallas_call(
+                kernel,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+                out_specs=[pl.BlockSpec((8,), lambda i: (i,)),
+                           pl.BlockSpec((8,), lambda i: (i,))],
+                out_shape=[jax.ShapeDtypeStruct((32,), jnp.float32)],
+            )(x)
+        """,
+        _PALLAS_HEADER + """
+        def f(x):
+            return pl.pallas_call(
+                kernel,
+                grid=(4,),
+                in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+                out_specs=[pl.BlockSpec((8,), lambda i: (i,)),
+                           pl.BlockSpec((8,), lambda i: (i,))],
+                out_shape=[jax.ShapeDtypeStruct((32,), jnp.float32),
+                           jax.ShapeDtypeStruct((32,), jnp.int32)],
+            )(x)
+        """,
+    ),
+    "bare-assert-kernel": (
+        """
+        def tile(T, bt):
+            assert T % bt == 0, (T, bt)
+            return T // bt
+        """,
+        """
+        def tile(T, bt):
+            if T % bt != 0:
+                raise ValueError(f"T {T} not divisible by block {bt}")
+            return T // bt
+        """,
+    ),
+}
+
+
+def _write(tmp_path, rule, kind, src):
+    # PLC004 only fires inside kernel modules: route its corpus there
+    sub = "kernels" if rule == "bare-assert-kernel" else "lib"
+    d = tmp_path / kind / sub
+    d.mkdir(parents=True, exist_ok=True)
+    p = d / f"{rule.replace('-', '_')}.py"
+    p.write_text(textwrap.dedent(src))
+    return str(p)
+
+
+@pytest.mark.parametrize("rule", sorted(CORPUS))
+def test_rule_true_positive(tmp_path, rule):
+    path = _write(tmp_path, rule, "bad", CORPUS[rule][0])
+    hits = lint_paths([path])
+    assert any(f.rule == rule for f in hits), (
+        f"{rule}: known-bad snippet produced {[f.format() for f in hits]}")
+
+
+@pytest.mark.parametrize("rule", sorted(CORPUS))
+def test_rule_no_false_positive(tmp_path, rule):
+    path = _write(tmp_path, rule, "good", CORPUS[rule][1])
+    hits = lint_paths([path])
+    assert hits == [], (
+        f"{rule}: known-good snippet produced {[f.format() for f in hits]}")
+
+
+def test_corpus_covers_at_least_eight_rules():
+    assert len(CORPUS) >= 8
+    assert set(CORPUS) <= set(RULES)
+
+
+def test_suppression_comment_drops_finding(tmp_path):
+    src = textwrap.dedent("""
+        def f(k, v, b):
+            # lint: allow(dict-kv-literal)
+            a = {"k": k, "v": v, "bias": b}
+            b2 = {"k": k, "v": v, "bias": b}  # lint: allow(dict-kv-literal)
+            return a, b2
+    """)
+    p = tmp_path / "sup.py"
+    p.write_text(src)
+    assert lint_paths([str(p)]) == []
+    # the same file without the comments does get flagged (twice)
+    q = tmp_path / "nosup.py"
+    q.write_text(src.replace("# lint: allow(dict-kv-literal)", ""))
+    assert len(lint_paths([str(q)])) == 2
+
+
+def test_jit_factory_pattern_is_reachable(tmp_path):
+    """jax.jit(self._make_step()) marks the factory's nested defs as roots."""
+    src = textwrap.dedent("""
+        import jax
+        import jax.numpy as jnp
+
+        class Eng:
+            def __init__(self, params):
+                self._step = jax.jit(self._make_step())
+
+            def _make_step(self):
+                def step(x):
+                    y = jnp.sum(x)
+                    if y > 0:
+                        return y
+                    return -y
+                return step
+    """)
+    p = tmp_path / "factory.py"
+    p.write_text(src)
+    hits = lint_paths([str(p)])
+    assert [f.rule for f in hits] == ["tracer-branch"]
+
+
+def test_unreachable_code_is_not_tracer_checked(tmp_path):
+    """The same tracer sin outside any jit-reachable graph stays silent —
+    host-side orchestration code may branch on device values after a sync."""
+    src = textwrap.dedent("""
+        import jax.numpy as jnp
+
+        def host_loop(x):
+            y = jnp.sum(x)
+            if y > 0:
+                return y
+            return -y
+    """)
+    p = tmp_path / "host.py"
+    p.write_text(src)
+    assert lint_paths([str(p)]) == []
+
+
+def test_cli_json_and_exit_codes(tmp_path, capsys):
+    bad = _write(tmp_path, "dict-kv-literal", "bad",
+                 CORPUS["dict-kv-literal"][0])
+    assert lint_main([bad, "--json"]) == 1
+    report = capsys.readouterr().out
+    assert '"dict-kv-literal"' in report and '"count": 1' in report
+    good = _write(tmp_path, "dict-kv-literal", "good",
+                  CORPUS["dict-kv-literal"][1])
+    assert lint_main([good]) == 0
+
+
+def test_self_lint_src_and_benchmarks_clean():
+    """The acceptance gate: the repo's own src/ and benchmarks/ trees lint
+    clean (CI runs the same command as a job)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    findings = lint_paths([os.path.join(root, "src"),
+                           os.path.join(root, "benchmarks")])
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_mypy_analysis_and_cache_clean():
+    """The CI mypy gate, runnable locally when mypy is installed (hermetic
+    environments without it skip — CI pins mypy in requirements.txt)."""
+    pytest.importorskip("mypy")
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, PYTHONPATH=os.path.join(root, "src"))
+    res = subprocess.run(
+        [sys.executable, "-m", "mypy", "--config-file",
+         os.path.join(root, "mypy.ini"),
+         os.path.join(root, "src", "repro", "analysis"),
+         os.path.join(root, "src", "repro", "models", "cache.py")],
+        capture_output=True, text=True, env=env, cwd=root)
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+# ----------------------------------------------------------------- TraceGuard
+
+
+def test_traceguard_shape_perturbation_trips_with_avals():
+    @jax.jit
+    def watched_fn(x):
+        return x * 2
+
+    with pytest.raises(TraceGuardError) as ei:
+        with TraceGuard(max_traces={"watched_fn": 1}):
+            watched_fn(jnp.zeros((4,)))
+            watched_fn(jnp.zeros((4,)))      # cache hit: free
+            watched_fn(jnp.zeros((8,)))      # retrace: must trip
+    msg = str(ei.value)
+    assert "watched_fn" in msg and "budget is 1" in msg
+    assert "float32[8]" in msg       # the offending avals...
+    assert "float32[4]" in msg       # ...and the previous trace's
+
+
+def test_traceguard_exact_counts():
+    @jax.jit
+    def counted_fn(x):
+        return x + 1
+
+    with TraceGuard(exact={"counted_fn": 1}) as tg:
+        for _ in range(4):
+            counted_fn(jnp.ones((3,)))   # one trace, three cache hits
+    assert tg.counts["counted_fn"] == 1
+
+    with pytest.raises(TraceGuardError, match="expected exactly 1"):
+        with TraceGuard(exact={"never_traced_fn": 1}):
+            pass
+
+
+def test_traceguard_restores_hook_after_exception():
+    from jax._src.interpreters import partial_eval as pe
+
+    before = pe.trace_to_jaxpr_dynamic
+    with pytest.raises(TraceGuardError):
+        with TraceGuard(exact={"missing": 1}):
+            pass
+    assert pe.trace_to_jaxpr_dynamic is before
+
+
+# ------------------------------------------------- TraceGuard x engine
+
+
+def _prompt(key, n):
+    return jax.random.randint(key, (1, n), 0, VOCAB)
+
+
+def test_traceguard_engine_mixed_protocols_decode_once():
+    """The acceptance invariant, enforced by the guard rather than the
+    engine's hand-maintained stats: decode traces exactly once across
+    standalone, C2C and T2T requests over several waves with changing
+    prompt lengths and request mixes."""
+    from repro.core.fedrefine import FedRefineSystem, Participant
+
+    zoo = tiny_zoo(vocab_size=VOCAB)
+    key = jax.random.PRNGKey(50)
+    members = [Participant(c.name, c,
+                           T.init_params(c, jax.random.fold_in(key, i),
+                                         jnp.float32))
+               for i, c in enumerate([zoo["receiver"],
+                                      zoo["transmitters"][0]])]
+    system = FedRefineSystem.build(members)
+    rx = members[0].name
+    system.make_engine(rx, max_slots=3, max_seq=64, max_prefix=8)
+
+    with TraceGuard(exact={"decode": 1}) as tg:
+        for wave, n in enumerate((5, 7)):
+            p = _prompt(jax.random.fold_in(key, 10 + wave), n)
+            system.submit(rx, p, 3, protocol="standalone")
+            system.submit(rx, p, 3, protocol="c2c")
+            system.submit(rx, p, 3, protocol="t2t")
+            out = system.drain(rx)
+            assert all(len(r["tokens"]) == 3 for r in out.values())
+    # the guard counted the actual jit lowerings — independent of stats
+    assert tg.counts["decode"] == 1
+
+
+def test_traceguard_suffix_prefill_once_per_bucket():
+    """Shared-prefix admissions suffix-prefill through one trace per suffix
+    bucket: tails of 4 and 6 tokens share the 8-bucket, a 12-token tail opens
+    the 16-bucket — two sprefill traces total, decode still one."""
+    cfg = ModelConfig(name="tg-tiny", family="dense", num_layers=2,
+                      d_model=32, num_heads=2, num_kv_heads=1, head_dim=16,
+                      d_ff=64, vocab_size=VOCAB, tie_embeddings=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    key = jax.random.PRNGKey(51)
+    shared = _prompt(key, 16)
+    prompts = [shared]
+    for i, tail_len in enumerate((4, 6, 12)):
+        tail = jax.random.randint(jax.random.fold_in(key, i + 1),
+                                  (1, tail_len), 0, VOCAB, jnp.int32)
+        prompts.append(jnp.concatenate([shared, tail], axis=1))
+
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=8, max_seq=64,
+                                   paged=True, page_size=8, num_pages=32,
+                                   prefix_cache=True, prompt_bucket=8)
+    with TraceGuard(exact={"decode": 1, "sprefill": 2}) as tg:
+        rids = [eng.submit(p, 4) for p in prompts]
+        done = {c.rid: c.tokens for c in eng.drain()}
+    assert set(done) == set(rids)
+    assert eng.stats["radix_hits"] == 3
+    assert tg.counts["decode"] == 1 and tg.counts["sprefill"] == 2
+
+
+def test_traceguard_engine_bench_style_smoke():
+    """What the engine_bench smoke runs under: a short mixed run inside a
+    decode budget of one — and token outputs are unaffected by the guard."""
+    rx_zoo = tiny_zoo(vocab_size=VOCAB)
+    rx = rx_zoo["receiver"]
+    tx = rx_zoo["transmitters"][0]
+    key = jax.random.PRNGKey(52)
+    p_rx = T.init_params(rx, key, jnp.float32)
+    p_tx = T.init_params(tx, jax.random.fold_in(key, 1), jnp.float32)
+    fz = F.init_fuser(tx, rx, jax.random.fold_in(key, 2))
+    p = _prompt(key, 6)
+    _, txc = T.prefill(tx, p_tx, p, max_seq=6, cache_dtype=jnp.float32)
+    fused = F.project_cache(fz, tx, rx, txc.export_stack(tx, length=6))
+
+    def run():
+        eng = ContinuousBatchingEngine(rx, p_rx, max_slots=2, max_seq=40,
+                                       max_prefix=8)
+        ra = eng.submit(p, 5, fused=fused)
+        rb = eng.submit(_prompt(jax.random.fold_in(key, 3), 4), 5)
+        done = {c.rid: c.tokens for c in eng.drain()}
+        return done[ra], done[rb]
+
+    base = run()
+    with TraceGuard(max_traces={"decode": 1}) as tg:
+        guarded = run()
+    assert tg.counts["decode"] == 1
+    for a, b in zip(base, guarded):
+        assert np.array_equal(a, b)
