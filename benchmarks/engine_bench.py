@@ -21,6 +21,11 @@ burst of short requests must (a) decode byte-identically to the dense engine
 and (b) sustain ≥2× the dense engine's concurrent slots — the win paging buys
 when requests are shorter than max_seq.
 
+The **sanitized section** reruns the sharing/CoW workload with the engine's
+page-lifecycle sanitizer on (``sanitize=True``, repro.analysis.sanitizer):
+the run must finish every per-step cross-check, drain with an empty leak
+report, and emit byte-identical tokens — CI fails on any finding.
+
 Results are also written as JSON (``--json BENCH_engine.json``; CI uploads it
 as an artifact on main so the bench trajectory accumulates).
 
@@ -376,6 +381,48 @@ def run_shared_prefix(rx, p_rx, tx, p_tx, fz, *, vocab, n_requests=13,
     return section
 
 
+def run_sanitized(rx, p_rx, *, vocab, n_requests=6, shared_len=26,
+                  tail_len=6, gen=6, page_size=8, num_pages=32):
+    """Page-lifecycle sanitizer gate: the shared-prefix/CoW workload under
+    ``sanitize=True`` must (a) finish — every step's allocator/shadow/device
+    cross-check passes and drain()'s leak report is empty — and (b) emit
+    byte-identical tokens to the unsanitized engine. The shared prefix
+    straddles a page boundary so the CoW fault path is on the audited
+    route too."""
+    key = jax.random.PRNGKey(23)
+    shared = jax.random.randint(key, (1, shared_len), 0, vocab)
+    prompts = []
+    for i in range(n_requests):
+        tail = jax.random.randint(jax.random.fold_in(key, i),
+                                  (1, tail_len), 0, vocab)
+        tail = tail.at[0, 0].set(i % vocab)
+        prompts.append(jnp.concatenate([shared, tail], axis=1))
+    need = shared_len + tail_len + gen
+    max_seq = -(-need // page_size) * page_size  # page-aligned
+
+    outs = {}
+    for name, sanitize in (("sanitized", True), ("plain", False)):
+        eng = ContinuousBatchingEngine(
+            rx, p_rx, max_slots=n_requests, max_seq=max_seq, paged=True,
+            page_size=page_size, num_pages=num_pages, sanitize=sanitize)
+        rids = [eng.submit(p, gen) for p in prompts]
+        done = {c.rid: c.tokens for c in eng.drain()}  # raises on violations
+        outs[name] = {"tokens": [done[r] for r in rids],
+                      "leaks": len(eng.sanitizer_report()),
+                      "cow_copies": eng.stats["cow_copies"],
+                      "shared_admits": eng.stats["shared_admits"]}
+
+    return {
+        "leak_report_findings": outs["sanitized"]["leaks"],
+        "shared_admits": outs["sanitized"]["shared_admits"],
+        "cow_copies": outs["sanitized"]["cow_copies"],
+        "byte_identical_outputs": bool(all(
+            np.array_equal(a, b)
+            for a, b in zip(outs["sanitized"]["tokens"],
+                            outs["plain"]["tokens"]))),
+    }
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -467,6 +514,13 @@ def main() -> int:
           f"fused inserts {sp['fused_inserts']} "
           f"(+{sp['fused_digest_hits']} digest hits)")
 
+    # --- page-lifecycle sanitizer over the sharing/CoW paths -------------
+    sz = run_sanitized(rx, p_rx, vocab=vocab)
+    print(f"\nsanitized run: {sz['shared_admits']} shared admits, "
+          f"{sz['cow_copies']} CoW copies, "
+          f"{sz['leak_report_findings']} leak-report finding(s), "
+          f"byte-identical outputs: {sz['byte_identical_outputs']}")
+
     ok = True
     if eng["stats"]["decode_traces"] != 1:
         print("FAIL: decode step traced more than once across the mix")
@@ -507,6 +561,12 @@ def main() -> int:
     if sp["fused_inserts"] != 1 or sp["fused_digest_hits"] != 3:
         print("FAIL: fused prefix not amortised across same-digest requests")
         ok = False
+    if sz["leak_report_findings"] != 0:
+        print("FAIL: sanitizer leak report is non-empty after drain")
+        ok = False
+    if not sz["byte_identical_outputs"]:
+        print("FAIL: sanitize=True changed decode outputs")
+        ok = False
 
     if args.json:
         report = {
@@ -525,6 +585,7 @@ def main() -> int:
             "capacity": cap,
             "paged_kernel": pk,
             "shared_prefix": sp,
+            "sanitized": sz,
             "pass": ok,
         }
         with open(args.json, "w") as f:

@@ -1,17 +1,32 @@
-"""Repo-specific correctness tooling: trace-discipline linting + retrace guard.
+"""Repo-specific correctness tooling: trace-discipline linting, a page-lease
+ownership pass, a runtime allocator sanitizer, and a retrace guard.
 
-Two enforcement layers for the invariants the serving stack's performance
-story rests on (one decode trace forever, one prefill trace per bucket, no
-host syncs on the hot loop, Pallas BlockSpec contracts):
+Enforcement layers for the invariants the serving stack's performance story
+rests on (one decode trace forever, one prefill trace per bucket, no host
+syncs on the hot loop, Pallas BlockSpec contracts, linear page-lease
+lifecycles):
 
 - :mod:`repro.analysis.lint` — an AST linter over jit-reachable call graphs
-  (``python -m repro.analysis [paths]``); rules in :mod:`repro.analysis.rules`.
+  (``python -m repro.analysis [paths]``); rules in :mod:`repro.analysis.rules`;
+  ``--audit-suppressions`` flags stale ``# lint: allow(...)`` comments.
+- :mod:`repro.analysis.ownership` — dataflow pass (OWN001–OWN005, runs inside
+  ``lint_paths``) tracking every :class:`~repro.models.cache.PageLease` from
+  origin to sink: leaks, double-release, use-after-release, shared writes
+  without CoW, allocator mutation inside jit-reachable code.
+- :mod:`repro.analysis.sanitizer` — :class:`PageSanitizer`, a drop-in
+  :class:`~repro.models.cache.PageAllocator` with per-page shadow holders and
+  grant-site provenance; the engine's ``sanitize=True`` mode feeds it every
+  write and validates device state each step.
 - :mod:`repro.analysis.traceguard` — :class:`TraceGuard`, a context manager /
   pytest fixture that hooks jit lowering and turns the engine's informal
   trace-count stats into hard assertions.
 """
 from repro.analysis.rules import Finding, RULES
-from repro.analysis.lint import lint_paths
+from repro.analysis.lint import (StaleSuppression, audit_suppressions,
+                                 lint_paths)
+from repro.analysis.sanitizer import PageSanitizer, SanitizerError
 from repro.analysis.traceguard import TraceGuard, TraceGuardError
 
-__all__ = ["Finding", "RULES", "lint_paths", "TraceGuard", "TraceGuardError"]
+__all__ = ["Finding", "RULES", "lint_paths", "audit_suppressions",
+           "StaleSuppression", "PageSanitizer", "SanitizerError",
+           "TraceGuard", "TraceGuardError"]

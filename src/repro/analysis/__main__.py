@@ -2,7 +2,10 @@
 
 Exit code 0 when the tree is clean, 1 when any finding survives
 suppression comments. Default output is one ``path:line:col: CODE[rule]
-message`` line per finding; ``--json`` emits a machine-readable report.
+message`` line per finding; ``--json`` emits a machine-readable report;
+``--audit-suppressions`` instead lists ``# lint: allow(...)`` comments
+whose rule no longer fires (exit 1 when any are stale, so CI can gate
+suppression rot the same way it gates findings).
 """
 from __future__ import annotations
 
@@ -11,7 +14,7 @@ import json
 import sys
 from typing import List, Optional
 
-from repro.analysis.lint import lint_paths
+from repro.analysis.lint import audit_suppressions, lint_paths
 from repro.analysis.rules import RULES
 
 
@@ -25,12 +28,27 @@ def main(argv: Optional[List[str]] = None) -> int:
                         help="emit findings as a JSON report")
     parser.add_argument("--list-rules", action="store_true",
                         help="print the rule registry and exit")
+    parser.add_argument("--audit-suppressions", action="store_true",
+                        dest="audit", help="list stale `# lint: allow(...)` "
+                        "comments instead of linting")
     args = parser.parse_args(argv)
 
     if args.list_rules:
         for rule in RULES.values():
             print(f"{rule.code}  {rule.name:24s} {rule.summary}")
         return 0
+
+    if args.audit:
+        stale = audit_suppressions(args.paths or ["src"])
+        if args.as_json:
+            print(json.dumps({"stale": [vars(s) for s in stale],
+                              "count": len(stale)}, indent=2))
+        else:
+            for s in stale:
+                print(s.format())
+            if stale:
+                print(f"{len(stale)} stale suppression(s)", file=sys.stderr)
+        return 1 if stale else 0
 
     findings = lint_paths(args.paths or ["src"])
     if args.as_json:

@@ -883,8 +883,11 @@ def _mark_parent_calls(mod: Module) -> None:
                 setattr(node.func, "_repro_parent_call", node)
 
 
-def lint_paths(paths: Sequence[str]) -> List[Finding]:
-    """Lint every python file under ``paths``; returns sorted findings."""
+def _collect_findings(paths: Sequence[str]) -> Tuple[Project, List[Finding]]:
+    """Run every pass over ``paths``; returns raw (pre-suppression) findings."""
+    # local import: ownership reuses this module's project/reachability model
+    from repro.analysis.ownership import check_ownership
+
     project, errors = load_project(paths)
     checker = _Checker(project)
     for err in errors:
@@ -899,8 +902,15 @@ def lint_paths(paths: Sequence[str]) -> List[Finding]:
     for info in project.functions.values():
         if id(info.node) in reachable:
             checker.check_traced(info)
+    checker.findings.extend(check_ownership(project, reachable))
+    return project, checker.findings
+
+
+def lint_paths(paths: Sequence[str]) -> List[Finding]:
+    """Lint every python file under ``paths``; returns sorted findings."""
+    project, raw = _collect_findings(paths)
     out: List[Finding] = []
-    for f in checker.findings:
+    for f in raw:
         mod = next((m for m in project.modules if m.path == f.path), None)
         if mod is not None:
             sup = _suppressions(mod)
@@ -910,3 +920,45 @@ def lint_paths(paths: Sequence[str]) -> List[Finding]:
         out.append(f)
     out.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
     return out
+
+
+@dataclass(frozen=True)
+class StaleSuppression:
+    """A ``# lint: allow(...)`` comment whose rule no longer fires there."""
+
+    path: str
+    line: int
+    rule: str
+    reason: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: stale `lint: allow({self.rule})` " \
+               f"— {self.reason}"
+
+
+def audit_suppressions(paths: Sequence[str]) -> List[StaleSuppression]:
+    """Find ``# lint: allow(...)`` comments that no longer suppress anything.
+
+    A suppression at line L covers findings at L and L+1; it is stale when no
+    raw finding of its rule lands in that window (or when it names a rule the
+    registry does not know, which a rename would silently orphan)."""
+    project, raw = _collect_findings(paths)
+    by_module: Dict[str, Dict[int, Set[str]]] = {}
+    for f in raw:
+        by_module.setdefault(f.path, {}).setdefault(f.line, set()).add(f.rule)
+    stale: List[StaleSuppression] = []
+    for mod in project.modules:
+        fired = by_module.get(mod.path, {})
+        for line, names in sorted(_suppressions(mod).items()):
+            window = fired.get(line, set()) | fired.get(line + 1, set())
+            for name in sorted(names):
+                if name != "all" and name not in RULES:
+                    stale.append(StaleSuppression(
+                        mod.path, line, name, "unknown rule name"))
+                    continue
+                hit = bool(window) if name == "all" else name in window
+                if not hit:
+                    stale.append(StaleSuppression(
+                        mod.path, line, name,
+                        "the rule no longer fires on this line"))
+    return stale

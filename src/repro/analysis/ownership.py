@@ -1,0 +1,614 @@
+"""Lease-lifecycle ownership pass (the OWN* rules).
+
+Tracks :class:`~repro.models.cache.PageLease` values and raw page-id lists
+from their **origin** — ``allocator.lease(...)`` / ``allocator.alloc(...)``
+on an allocator-like receiver — to their **sink**, enforcing linear use:
+every lease must reach exactly one of ``insert_slot`` / ``insert_suffix`` /
+index-``register`` / ``release`` (or escape into longer-lived state: stored
+on an attribute, returned, or handed to an unknown callee, all of which
+transfer the obligation out of the current function).
+
+Per function the pass runs a branch-aware abstract interpretation over one
+state record per tracked variable (live / released / sunk / cow-faulted).
+Branches merge conservatively in the quiet direction — ``released`` is the
+AND of the arms (use-after-release and double-release only fire when the
+release happened on *every* path), ``sunk`` is the OR (a sink on any path
+discharges the leak obligation) — because CI treats any finding as a
+failure, so false positives are the expensive direction.
+
+Rules emitted:
+
+- ``lease-leak`` (OWN001): origin value dropped on the floor, shadowed by a
+  rebinding, ``del``-ed, or still live at function end.
+- ``lease-double-release`` (OWN002): released again after a must-release.
+- ``lease-use-after-release`` (OWN003): any use after a must-release.
+- ``shared-write-no-cow`` (OWN004): a lease carrying ``shared=`` pages (or a
+  ``page_row`` derived from one) flows into ``insert_slot``, or into
+  ``insert_suffix`` with no ``allocator.cow(lease, ...)`` fault anywhere on
+  the way.
+- ``jit-page-mutation`` (OWN005): allocator / radix-index mutating calls
+  (``alloc``/``lease``/``share``/``retain``/``release``/``cow``,
+  ``register``/``evict``/``clear``) inside jit-reachable code, reusing the
+  linter's reachability walk — host-side page bookkeeping under trace runs
+  once per compile, not per call.
+
+Receivers are classified structurally, not nominally: an expression is
+allocator-like when its last identifier contains ``alloc``, when it is a
+local bound to ``PageAllocator(...)`` / annotated ``PageAllocator``, or when
+it is ``self`` inside a class whose name contains ``Allocator`` (radix-like
+analogously via ``radix`` / ``RadixPrefixIndex``).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.lint import FuncInfo, Project, _walk_own, qualify
+from repro.analysis.rules import Finding
+
+_ORIGIN_METHODS = {"lease", "alloc"}
+_SINK_METHODS = {"insert_slot", "insert_suffix", "register"}
+_VIEW_METHODS = {"page_row", "ids", "shared_ids"}
+_ALLOC_MUTATORS = {"alloc", "lease", "share", "retain", "release", "cow"}
+_RADIX_MUTATORS = {"register", "evict", "clear"}
+_ALLOC_TYPES = {"PageAllocator", "PageSanitizer"}
+_RADIX_TYPES = {"RadixPrefixIndex"}
+_LEASE_TYPES = {"PageLease"}
+
+
+@dataclass(frozen=True)
+class _Val:
+    """Abstract state of one tracked lease-holding variable."""
+
+    line: int
+    col: int
+    origin: str           # "lease" | "alloc" | "param" (borrowed)
+    has_shared: bool
+    cowed: bool = False
+    released: bool = False
+    sunk: bool = False
+
+    @property
+    def live(self) -> bool:
+        return not (self.sunk or self.released)
+
+
+_State = Dict[str, _Val]
+
+
+def check_ownership(project: Project, reachable: Set[int]) -> List[Finding]:
+    """Run the OWN* rules over every parsed function."""
+    findings: List[Finding] = []
+    for info in project.functions.values():
+        if isinstance(info.node, ast.Lambda):
+            continue
+        _OwnershipPass(info, findings).run()
+        if id(info.node) in reachable:
+            _check_jit_mutation(info, findings)
+    return findings
+
+
+# ------------------------------------------------------- receiver classifiers
+
+
+def _tail_name(expr: ast.expr) -> Optional[str]:
+    if isinstance(expr, ast.Name):
+        return expr.id
+    if isinstance(expr, ast.Attribute):
+        return expr.attr
+    return None
+
+
+def _ann_tail(info: FuncInfo, ann: Optional[ast.expr]) -> Optional[str]:
+    if ann is None:
+        return None
+    qual = qualify(info.module, ann)
+    if qual is None and isinstance(ann, ast.Constant) and \
+            isinstance(ann.value, str):
+        qual = ann.value
+    return None if qual is None else qual.rsplit(".", 1)[-1]
+
+
+def _local_types(info: FuncInfo) -> Dict[str, str]:
+    """Map local names to "alloc" / "radix" / "lease" where statically known
+    (parameter annotations and direct constructor assignments)."""
+    fn = info.node
+    types: Dict[str, str] = {}
+    if isinstance(fn, ast.Lambda):
+        return types
+
+    def classify(tail: Optional[str]) -> Optional[str]:
+        if tail in _ALLOC_TYPES:
+            return "alloc"
+        if tail in _RADIX_TYPES:
+            return "radix"
+        if tail in _LEASE_TYPES:
+            return "lease"
+        return None
+
+    for arg in (list(fn.args.posonlyargs) + list(fn.args.args) +
+                list(fn.args.kwonlyargs)):
+        kind = classify(_ann_tail(info, arg.annotation))
+        if kind is not None:
+            types[arg.arg] = kind
+    for node in _walk_own(fn):
+        tgt: Optional[ast.expr] = None
+        val: Optional[ast.expr] = None
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt, val = node.targets[0], node.value
+        elif isinstance(node, ast.AnnAssign):
+            tgt = node.target
+            kind = classify(_ann_tail(info, node.annotation))
+            if isinstance(tgt, ast.Name) and kind is not None:
+                types[tgt.id] = kind
+            continue
+        if isinstance(tgt, ast.Name) and isinstance(val, ast.Call):
+            qual = qualify(info.module, val.func)
+            kind = classify(None if qual is None else qual.rsplit(".", 1)[-1])
+            if kind is not None:
+                types[tgt.id] = kind
+    return types
+
+
+def _alloc_like(info: FuncInfo, expr: ast.expr,
+                types: Dict[str, str]) -> bool:
+    if isinstance(expr, ast.Name) and expr.id == "self":
+        return bool(info.cls) and "Allocator" in (info.cls or "")
+    tail = _tail_name(expr)
+    if tail is None:
+        return False
+    if isinstance(expr, ast.Name) and types.get(tail) == "alloc":
+        return True
+    return "alloc" in tail.lower()
+
+
+def _radix_like(info: FuncInfo, expr: ast.expr,
+                types: Dict[str, str]) -> bool:
+    if isinstance(expr, ast.Name) and expr.id == "self":
+        cls = info.cls or ""
+        return "Radix" in cls or "PrefixIndex" in cls
+    tail = _tail_name(expr)
+    if tail is None:
+        return False
+    if isinstance(expr, ast.Name) and types.get(tail) == "radix":
+        return True
+    low = tail.lower()
+    return "radix" in low or "prefix_index" in low
+
+
+# ----------------------------------------------------------- the per-fn pass
+
+
+def _merge(a: _State, b: _State) -> _State:
+    out: _State = {}
+    for name in set(a) | set(b):
+        va, vb = a.get(name), b.get(name)
+        if va is None:
+            assert vb is not None
+            out[name] = vb
+        elif vb is None:
+            out[name] = va
+        else:
+            out[name] = replace(va, sunk=va.sunk or vb.sunk,
+                                released=va.released and vb.released,
+                                cowed=va.cowed or vb.cowed)
+    return out
+
+
+class _OwnershipPass:
+    def __init__(self, info: FuncInfo, findings: List[Finding]) -> None:
+        self.info = info
+        self.mod = info.module
+        self.findings = findings
+        self.types = _local_types(info)
+        # derived handle (page_row()/ids() result) -> tracked root name
+        self.derived: Dict[str, str] = {}
+
+    def run(self) -> None:
+        fn = self.info.node
+        if isinstance(fn, ast.Lambda):
+            return
+        state: _State = {}
+        for arg in (list(fn.args.posonlyargs) + list(fn.args.args) +
+                    list(fn.args.kwonlyargs)):
+            if self.types.get(arg.arg) == "lease":
+                state[arg.arg] = _Val(arg.lineno, arg.col_offset, "param",
+                                      has_shared=False)
+        state = self._block(fn.body, state)
+        captured = self._captured_names(fn)
+        for name, val in state.items():
+            if val.origin == "param" or val.sunk or val.released:
+                continue
+            if name in captured:
+                continue  # closed over by a nested def — obligation escapes
+            self._emit(val.line, val.col, "lease-leak",
+                       f"lease bound to `{name}` never reaches a sink "
+                       "(insert_slot/insert_suffix/register/release) — its "
+                       "page refcounts are held forever")
+
+    def _emit(self, line: int, col: int, rule: str, message: str) -> None:
+        self.findings.append(Finding(self.mod.path, line, col, rule, message))
+
+    def _captured_names(self, fn: ast.AST) -> Set[str]:
+        names: Set[str] = set()
+        for node in ast.walk(fn):
+            if node is fn or not isinstance(
+                    node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                continue
+            for inner in ast.walk(node):
+                if isinstance(inner, ast.Name):
+                    names.add(inner.id)
+        return names
+
+    # ------------------------------------------------------------ statements
+    def _block(self, stmts: Sequence[ast.stmt], state: _State) -> _State:
+        for stmt in stmts:
+            state = self._stmt(stmt, state)
+        return state
+
+    def _stmt(self, stmt: ast.stmt, state: _State) -> _State:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return state  # nested scopes analyzed independently
+        if isinstance(stmt, ast.If):
+            state = self._expr(stmt.test, state, escape=False)
+            return _merge(self._block(stmt.body, dict(state)),
+                          self._block(stmt.orelse, dict(state)))
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            state = self._expr(stmt.iter, state, escape=True)
+            once = self._block(list(stmt.body) + list(stmt.orelse),
+                               dict(state))
+            return _merge(once, state)
+        if isinstance(stmt, ast.While):
+            state = self._expr(stmt.test, state, escape=False)
+            once = self._block(list(stmt.body) + list(stmt.orelse),
+                               dict(state))
+            return _merge(once, state)
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                state = self._expr(item.context_expr, state, escape=True)
+            return self._block(stmt.body, state)
+        if isinstance(stmt, ast.Try):
+            done = self._block(list(stmt.body) + list(stmt.orelse),
+                               dict(state))
+            for handler in stmt.handlers:
+                done = _merge(done, self._block(handler.body, dict(state)))
+            return self._block(stmt.finalbody, done)
+        if isinstance(stmt, ast.Delete):
+            for tgt in stmt.targets:
+                if isinstance(tgt, ast.Name) and tgt.id in state:
+                    val = state[tgt.id]
+                    if val.live and val.origin != "param":
+                        self._emit(stmt.lineno, stmt.col_offset, "lease-leak",
+                                   f"`del {tgt.id}` drops a live lease — "
+                                   "release or sink it first")
+                    state = dict(state)
+                    del state[tgt.id]
+            return state
+        return self._flat(stmt, state)
+
+    # ------------------------------------------------------- flat statements
+    def _flat(self, stmt: ast.stmt, state: _State) -> _State:
+        if isinstance(stmt, ast.Assign):
+            return self._assign(stmt.targets, stmt.value, stmt, state)
+        if isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            return self._assign([stmt.target], stmt.value, stmt, state)
+        if isinstance(stmt, ast.Expr):
+            origin = self._origin_of(stmt.value)
+            if origin is not None:
+                state = self._expr(stmt.value, state, escape=True,
+                                   skip_origin=True)
+                self._emit(stmt.lineno, stmt.col_offset, "lease-leak",
+                           f"result of `.{origin}(...)` dropped on the floor"
+                           " — the pages it granted can never be released")
+                return state
+            return self._expr(stmt.value, state, escape=True)
+        if isinstance(stmt, (ast.Return, ast.Raise)):
+            value = stmt.value if isinstance(stmt, ast.Return) else stmt.exc
+            if value is None:
+                return state
+            return self._expr(value, state, escape=True)
+        # AugAssign, Assert, Global, ... — process any contained expressions
+        state_out = state
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.expr):
+                state_out = self._expr(child, state_out, escape=True)
+        return state_out
+
+    def _assign(self, targets: Sequence[ast.expr], value: ast.expr,
+                stmt: ast.stmt, state: _State) -> _State:
+        name_targets = [t for t in targets if isinstance(t, ast.Name)]
+        store_escape = len(name_targets) != len(targets)
+
+        origin = self._origin_of(value)
+        if origin is not None:
+            state = self._expr(value, state, escape=True, skip_origin=True)
+            for tgt in name_targets:
+                state = self._shadow_check(tgt.id, stmt, state)
+                if store_escape or len(name_targets) != 1:
+                    continue
+                state = dict(state)
+                state[tgt.id] = _Val(value.lineno, value.col_offset, origin,
+                                     has_shared=self._lease_has_shared(value))
+                self.derived.pop(tgt.id, None)
+            # stored straight into longer-lived state (self.x = .lease(...)):
+            # the obligation escapes this function — nothing to track
+            return state
+
+        root = self._view_root(value, state)
+        if root is not None and len(name_targets) == 1 and not store_escape:
+            tgt = name_targets[0]
+            state = self._shadow_check(tgt.id, stmt, state)
+            self.derived[tgt.id] = root
+            return state
+
+        if isinstance(value, ast.Name) and value.id in state and \
+                len(name_targets) == 1 and not store_escape:
+            # alias move: `b = a` transfers the obligation to `b`
+            tgt = name_targets[0]
+            state = self._shadow_check(tgt.id, stmt, state)
+            state = dict(state)
+            state[tgt.id] = state.pop(value.id)
+            self.derived.pop(tgt.id, None)
+            return state
+
+        state = self._expr(value, state, escape=True)
+        if store_escape:
+            # `self.x[k] = lease` — escapes into longer-lived state
+            for node in ast.walk(value):
+                if isinstance(node, ast.Name) and node.id in state:
+                    state = self._mark(state, node.id, sunk=True)
+        for tgt in name_targets:
+            state = self._shadow_check(tgt.id, stmt, state)
+            if tgt.id in state:
+                state = dict(state)
+                del state[tgt.id]
+            self.derived.pop(tgt.id, None)
+        return state
+
+    def _shadow_check(self, name: str, stmt: ast.stmt,
+                      state: _State) -> _State:
+        val = state.get(name)
+        if val is not None and val.live and val.origin != "param":
+            self._emit(stmt.lineno, stmt.col_offset, "lease-leak",
+                       f"rebinding `{name}` shadows a live lease from line "
+                       f"{val.line} before it reached a sink")
+            state = self._mark(state, name, sunk=True)
+        return state
+
+    # ------------------------------------------------------------ expressions
+    def _expr(self, expr: ast.expr, state: _State, *, escape: bool,
+              skip_origin: bool = False) -> _State:
+        handled: Set[int] = set()
+        release_args: Set[int] = set()
+        calls = [n for n in ast.walk(expr) if isinstance(n, ast.Call)]
+        plans: List[Tuple[str, ast.Call]] = []
+        for call in calls:
+            kind = self._classify_call(call, state)
+            plans.append((kind, call))
+            if kind == "release":
+                for node in self._release_arg_names(call):
+                    release_args.add(id(node))
+                    handled.add(id(node))
+            elif kind in ("sink", "cow"):
+                for arg in call.args:
+                    for node in ast.walk(arg):
+                        if isinstance(node, ast.Name):
+                            handled.add(id(node))
+            elif kind == "view":
+                func = call.func
+                if isinstance(func, ast.Attribute) and \
+                        isinstance(func.value, ast.Name):
+                    handled.add(id(func.value))
+            elif kind == "origin" and skip_origin:
+                handled.add(id(call))
+
+        # use-after-release: any load of a must-released name
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Name) and id(node) not in release_args \
+                    and isinstance(node.ctx, ast.Load):
+                root = self._root_of(node.id, state)
+                if root is not None and state[root].released:
+                    self._emit(node.lineno, node.col_offset,
+                               "lease-use-after-release",
+                               f"`{node.id}` used after its lease was "
+                               "released — the pages may already belong to "
+                               "another slot")
+                    state = self._mark(state, root, released=False, sunk=True)
+
+        for kind, call in plans:
+            state = self._apply_call(kind, call, state)
+
+        if escape:
+            parents = _parent_map(expr)
+            for node in ast.walk(expr):
+                if not (isinstance(node, ast.Name) and
+                        isinstance(node.ctx, ast.Load)):
+                    continue
+                if id(node) in handled or node.id not in state:
+                    continue
+                if not _consuming_position(parents, node):
+                    continue
+                state = self._mark(state, node.id, sunk=True)
+        return state
+
+    def _apply_call(self, kind: str, call: ast.Call,
+                    state: _State) -> _State:
+        if kind == "release":
+            for node in self._release_arg_names(call):
+                root = self._root_of(node.id, state)
+                if root is None:
+                    continue
+                if state[root].released:
+                    self._emit(call.lineno, call.col_offset,
+                               "lease-double-release",
+                               f"`{node.id}` released again — already "
+                               "released on every path to this point")
+                else:
+                    state = self._mark(state, root, released=True, sunk=True)
+        elif kind == "cow":
+            if call.args and isinstance(call.args[0], ast.Name):
+                root = self._root_of(call.args[0].id, state)
+                if root is not None:
+                    state = self._mark(state, root, cowed=True)
+        elif kind == "sink":
+            func = call.func
+            meth = func.attr if isinstance(func, ast.Attribute) else ""
+            for arg in call.args:
+                root = self._arg_root(arg, state)
+                if root is None:
+                    continue
+                val = state[root]
+                if val.has_shared and meth == "insert_slot":
+                    self._emit(call.lineno, call.col_offset,
+                               "shared-write-no-cow",
+                               "a lease carrying shared pages flows into "
+                               "insert_slot — a full-slot write hits every "
+                               "shared holder's pages; prefill only the "
+                               "suffix (insert_suffix after cow)")
+                elif val.has_shared and not val.cowed and \
+                        meth == "insert_suffix":
+                    self._emit(call.lineno, call.col_offset,
+                               "shared-write-no-cow",
+                               "a shared lease flows into insert_suffix "
+                               "with no allocator.cow() fault in between — "
+                               "a partial-page write would corrupt the "
+                               "sharers' KV")
+                state = self._mark(state, root, sunk=True)
+        return state
+
+    # -------------------------------------------------------------- helpers
+    def _classify_call(self, call: ast.Call, state: _State) -> str:
+        func = call.func
+        if not isinstance(func, ast.Attribute):
+            return "generic"
+        meth = func.attr
+        recv = func.value
+        if meth in ("release", "cow") and \
+                _alloc_like(self.info, recv, self.types):
+            return meth if meth == "cow" else "release"
+        if self._origin_of(call) is not None:
+            return "origin"
+        if meth in _SINK_METHODS:
+            return "sink"
+        if meth in _VIEW_METHODS and isinstance(recv, ast.Name) and \
+                self._root_of(recv.id, state) is not None:
+            return "view"
+        return "generic"
+
+    def _origin_of(self, expr: ast.expr) -> Optional[str]:
+        if not (isinstance(expr, ast.Call) and
+                isinstance(expr.func, ast.Attribute)):
+            return None
+        meth = expr.func.attr
+        if meth in _ORIGIN_METHODS and \
+                _alloc_like(self.info, expr.func.value, self.types):
+            return meth
+        return None
+
+    @staticmethod
+    def _lease_has_shared(call: ast.Call) -> bool:
+        for kw in call.keywords:
+            if kw.arg != "shared":
+                continue
+            if isinstance(kw.value, (ast.Tuple, ast.List)) and \
+                    not kw.value.elts:
+                return False
+            if isinstance(kw.value, ast.Constant) and not kw.value.value:
+                return False
+            return True
+        return False
+
+    def _release_arg_names(self, call: ast.Call) -> List[ast.Name]:
+        out: List[ast.Name] = []
+        for arg in call.args:
+            if isinstance(arg, ast.Name):
+                out.append(arg)
+            elif isinstance(arg, (ast.Tuple, ast.List)):
+                out.extend(e for e in arg.elts if isinstance(e, ast.Name))
+            elif isinstance(arg, ast.Call) and \
+                    isinstance(arg.func, ast.Attribute) and \
+                    arg.func.attr in _VIEW_METHODS and \
+                    isinstance(arg.func.value, ast.Name):
+                out.append(arg.func.value)
+        return out
+
+    def _root_of(self, name: str, state: _State) -> Optional[str]:
+        root = self.derived.get(name, name)
+        return root if root in state else None
+
+    def _view_root(self, value: ast.expr, state: _State) -> Optional[str]:
+        """Tracked root behind a derived-view RHS (``lease.page_row(...)``)."""
+        if isinstance(value, ast.Call) and \
+                isinstance(value.func, ast.Attribute) and \
+                value.func.attr in _VIEW_METHODS and \
+                isinstance(value.func.value, ast.Name):
+            return self._root_of(value.func.value.id, state)
+        return None
+
+    def _arg_root(self, arg: ast.expr, state: _State) -> Optional[str]:
+        if isinstance(arg, ast.Name):
+            return self._root_of(arg.id, state)
+        if isinstance(arg, ast.Call) and \
+                isinstance(arg.func, ast.Attribute) and \
+                arg.func.attr in _VIEW_METHODS and \
+                isinstance(arg.func.value, ast.Name):
+            return self._root_of(arg.func.value.id, state)
+        return None
+
+    def _mark(self, state: _State, name: str, **changes: bool) -> _State:
+        state = dict(state)
+        state[name] = replace(state[name], **changes)
+        return state
+
+
+def _parent_map(expr: ast.expr) -> Dict[int, ast.AST]:
+    out: Dict[int, ast.AST] = {}
+    for node in ast.walk(expr):
+        for child in ast.iter_child_nodes(node):
+            out[id(child)] = node
+    return out
+
+
+def _consuming_position(parents: Dict[int, ast.AST],
+                        node: ast.Name) -> bool:
+    """True when a bare load of ``node`` hands the value somewhere it could
+    outlive the current frame (call arg, container literal, return value…).
+    Attribute reads, comparisons and subscript bases are neutral — they use
+    the lease without transferring the release obligation."""
+    parent = parents.get(id(node))
+    if isinstance(parent, ast.Attribute) and parent.value is node:
+        return False
+    if isinstance(parent, (ast.Compare, ast.BoolOp, ast.UnaryOp)):
+        return False
+    if isinstance(parent, ast.Subscript) and parent.value is node:
+        return False
+    if isinstance(parent, ast.IfExp) and parent.test is node:
+        return False
+    return True
+
+
+# ------------------------------------------------------------ OWN005 checker
+
+
+def _check_jit_mutation(info: FuncInfo, findings: List[Finding]) -> None:
+    types = _local_types(info)
+    for node in _walk_own(info.node):
+        if not (isinstance(node, ast.Call) and
+                isinstance(node.func, ast.Attribute)):
+            continue
+        meth = node.func.attr
+        recv = node.func.value
+        if meth in _ALLOC_MUTATORS and _alloc_like(info, recv, types):
+            what = "allocator"
+        elif meth in _RADIX_MUTATORS and _radix_like(info, recv, types):
+            what = "radix index"
+        else:
+            continue
+        findings.append(Finding(
+            info.module.path, node.lineno, node.col_offset,
+            "jit-page-mutation",
+            f"`.{meth}()` mutates {what} host state inside jit-reachable "
+            "code — it runs at trace time only; do page bookkeeping on the "
+            "host side of the step"))

@@ -1,7 +1,8 @@
 """Rule registry + finding record for the trace-discipline linter.
 
 Every rule has a stable code (``TRCxxx`` tracer discipline, ``KVxxx`` typed
-KV-cache API, ``PLCxxx`` Pallas contracts) and a kebab-case name usable in
+KV-cache API, ``PLCxxx`` Pallas contracts, ``OWNxxx`` page-lease ownership)
+and a kebab-case name usable in
 suppression comments: a finding on a line containing ``lint: allow(<name>)``
 (same line or the line directly above) is dropped. Add a rule by appending a
 :class:`Rule` here and emitting its findings from ``lint.py`` — the corpus in
@@ -79,6 +80,24 @@ _RULES = [
     Rule("PLC004", "bare-assert-kernel",
          "bare `assert` in a kernel module — vanishes under python -O; "
          "raise ValueError (see decode_attention._check_block)"),
+    Rule("OWN001", "lease-leak",
+         "a PageLease / alloc'd page-id list is dropped or shadowed before "
+         "reaching a sink (insert_slot/insert_suffix/register/release) — "
+         "its refcounts are held forever"),
+    Rule("OWN002", "lease-double-release",
+         "a lease released on every path is released again — the second "
+         "release underflows refcounts or frees a sharer's pages"),
+    Rule("OWN003", "lease-use-after-release",
+         "a lease released on every path is used afterwards — its page ids "
+         "may already be reallocated to another slot"),
+    Rule("OWN004", "shared-write-no-cow",
+         "a lease carrying shared pages flows into a KV write "
+         "(insert_slot/insert_suffix) with no allocator.cow() fault in "
+         "between — the write would corrupt other holders' pages"),
+    Rule("OWN005", "jit-page-mutation",
+         "allocator / radix-index host state mutated from jit-reachable "
+         "code — page bookkeeping under trace runs once per compile, not "
+         "per call"),
 ]
 
 RULES: Dict[str, Rule] = {r.name: r for r in _RULES}

@@ -1,0 +1,411 @@
+"""Runtime page-lifecycle sanitizer: the ASan/TSan analogue for the paged
+serving stack.
+
+:class:`PageSanitizer` is a drop-in :class:`~repro.models.cache.PageAllocator`
+(a subclass — same refcounts, same free list, same public surface) that
+additionally keeps **shadow state** per page: every holder (lease, prefix-pin
+or raw grant) with alloc-site provenance — slot id, request id, fused digest
+and a stack summary of the call that granted it — plus a **generation stamp**
+bumped on every noted device write. The engine
+(``ContinuousBatchingEngine(..., sanitize=True)``) reports each write it is
+about to issue (:meth:`note_write`) and hands over its device state after
+every step (:meth:`check_step`), so a violation surfaces at the step that
+causes it, named by the grant that created the page's holder — not hundreds
+of steps later as silently corrupted tokens.
+
+Violations raised as :class:`SanitizerError` (with provenance):
+
+- release of a lease never granted, or granted and already released
+  (double-release, naming both the grant site and the first release site);
+- raw page-id release of a page only leases map — freeing it would corrupt a
+  live slot (the evict-while-shared bug class);
+- a noted write to a page the writer does not hold, holds only **shared**
+  (a missing ``cow()`` fault — reported with the page's generation stamps),
+  or that another lease also holds;
+- after a step: allocator refcounts diverging from shadow holders, device
+  page-map rows diverging from the slot's lease, an inactive slot still
+  mapping pages, two active slots mapping one page writably, or a mapped
+  page with refcount zero.
+
+:meth:`leak_report` (called by the engine at ``drain()``) lists leases and
+raw grants that never reached a release — each named by its grant site.
+
+Zero-cost when off: with ``sanitize=False`` no sanitizer object exists and
+every engine hook is a single ``is not None`` test on a dead branch.
+"""
+from __future__ import annotations
+
+import os
+import traceback
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple, \
+    Union
+
+import numpy as np
+
+from repro.models.cache import PageAllocator, PageLease
+
+
+class SanitizerError(AssertionError):
+    """A page-lifecycle invariant was violated at runtime."""
+
+
+def _call_site(depth: int = 2) -> str:
+    """Innermost ``depth`` stack frames outside this module — the grant's
+    provenance trail (``engine.py:636 _admit <- engine.py:681 step``)."""
+    frames: List[str] = []
+    for fr in reversed(traceback.extract_stack()):
+        fname = fr.filename.replace(os.sep, "/")
+        if fname.endswith("analysis/sanitizer.py"):
+            continue
+        frames.append(f"{os.path.basename(fr.filename)}:{fr.lineno} "
+                      f"{fr.name}")
+        if len(frames) == depth:
+            break
+    return " <- ".join(frames) if frames else "<unknown>"
+
+
+@dataclass
+class Provenance:
+    """Where (and on whose behalf) a page holder was created. Mutable so the
+    engine can enrich a lease's record (:meth:`PageSanitizer.annotate`) after
+    issuance — every holder of the lease shares this one object."""
+
+    kind: str                    # "lease" | "pin" | "raw"
+    site: str                    # stack summary at grant time
+    slot: Optional[int] = None
+    rid: Optional[int] = None
+    digest: Optional[str] = None
+
+    def describe(self) -> str:
+        bits = [self.kind]
+        if self.slot is not None:
+            bits.append(f"slot={self.slot}")
+        if self.rid is not None:
+            bits.append(f"rid={self.rid}")
+        if self.digest:
+            bits.append(f"digest={self.digest[:12]}")
+        bits.append(f"@ {self.site}")
+        return " ".join(bits)
+
+
+@dataclass
+class _Holder:
+    """One reference to one page in the shadow state."""
+
+    key: int                     # id(lease) for leases, unique token otherwise
+    kind: str                    # "lease" | "pin" | "raw"
+    owned: bool                  # may this holder write the page?
+    prov: Provenance
+    gen_at_grant: int            # page generation when the hold began
+
+    def describe(self) -> str:
+        mode = "owned" if self.owned else "shared"
+        return f"{mode} by {self.prov.describe()}"
+
+
+@dataclass
+class _LeaseState:
+    lease: PageLease             # strong ref: a leaked lease must stay
+    prov: Provenance             # inspectable for the leak report
+
+
+class PageSanitizer(PageAllocator):
+    """A :class:`PageAllocator` that cross-checks every grant and release
+    against per-page shadow state and validates the engine's device view.
+
+    Construct it in place of the allocator (``PageSanitizer(num_pages)``);
+    the engine does so under ``sanitize=True``. Base-class code paths that
+    internally call ``share``/``alloc``/``release`` (``lease``, ``cow``,
+    ``retain``) run under a quiet flag so each grant is recorded exactly
+    once, at the level the caller asked for."""
+
+    _TOMBSTONES = 256  # released-lease records kept for double-free messages
+
+    def __init__(self, num_pages: int) -> None:
+        super().__init__(num_pages)
+        self._quiet = 0
+        self._next_token = -1
+        self._page_holders: Dict[int, List[_Holder]] = {}
+        self._lease_states: Dict[int, _LeaseState] = {}
+        self._released: "OrderedDict[int, Tuple[_LeaseState, str]]" = \
+            OrderedDict()
+        self._gen = np.zeros(max(num_pages, 1), np.int64)
+
+    # ------------------------------------------------------ shadow plumbing
+    def _token(self) -> int:
+        self._next_token -= 1
+        return self._next_token
+
+    def _add_holder(self, page_id: int, holder: _Holder) -> None:
+        self._page_holders.setdefault(page_id, []).append(holder)
+
+    def _remove_holder(self, page_id: int, key: int, site: str) -> None:
+        holders = self._page_holders.get(page_id, [])
+        hit = next((h for h in holders if h.key == key), None)
+        if hit is None:
+            raise SanitizerError(
+                f"page {page_id} released at {site} by a holder the shadow "
+                "state does not record — shadow/allocator divergence")
+        holders.remove(hit)
+        if not holders:
+            self._page_holders.pop(page_id, None)
+
+    def holders_of(self, page_id: int) -> List[str]:
+        return [h.describe() for h in self._page_holders.get(page_id, [])]
+
+    # --------------------------------------------------- allocator overrides
+    def alloc(self, n: int) -> List[int]:
+        ids = PageAllocator.alloc(self, n)
+        if not self._quiet:
+            prov = Provenance("raw", _call_site())
+            for p in ids:
+                self._add_holder(p, _Holder(self._token(), "raw", True, prov,
+                                            int(self._gen[p])))
+        return ids
+
+    def share(self, page_ids: Sequence[int]) -> List[int]:
+        ids = PageAllocator.share(self, page_ids)
+        if not self._quiet:
+            prov = Provenance("raw", _call_site())
+            for p in ids:
+                self._add_holder(p, _Holder(self._token(), "raw", False, prov,
+                                            int(self._gen[p])))
+        return ids
+
+    def retain(self, page_id: int) -> None:
+        self._quiet += 1
+        try:
+            PageAllocator.retain(self, page_id)
+        finally:
+            self._quiet -= 1
+        prov = Provenance("pin", _call_site())
+        self._add_holder(page_id, _Holder(self._token(), "pin", False, prov,
+                                          int(self._gen[page_id])))
+
+    def lease(self, *, shared: Sequence[int] = (),
+              fresh: int = 0) -> PageLease:
+        self._quiet += 1
+        try:
+            out = PageAllocator.lease(self, shared=shared, fresh=fresh)
+        finally:
+            self._quiet -= 1
+        prov = Provenance("lease", _call_site())
+        self._lease_states[id(out)] = _LeaseState(lease=out, prov=prov)
+        for p, owned in zip(out.ids(), out.owned):
+            self._add_holder(p, _Holder(id(out), "lease", bool(owned), prov,
+                                        int(self._gen[p])))
+        return out
+
+    def cow(self, lease: PageLease, index: int) -> Tuple[int, int]:
+        st = self._lease_states.get(id(lease))
+        if st is None:
+            raise SanitizerError(
+                f"cow() at {_call_site()} on a lease this allocator never "
+                "granted (or already released)")
+        src_dst = None
+        self._quiet += 1
+        try:
+            src_dst = PageAllocator.cow(self, lease, index)
+        finally:
+            self._quiet -= 1
+        src, dst = src_dst
+        self._remove_holder(src, id(lease), _call_site())
+        self._add_holder(dst, _Holder(id(lease), "lease", True, st.prov,
+                                      int(self._gen[dst])))
+        return src, dst
+
+    def release(self, pages: Union[PageLease, Sequence[int]]) -> None:
+        if self._quiet:
+            PageAllocator.release(self, pages)
+            return
+        site = _call_site()
+        if isinstance(pages, PageLease):
+            key = id(pages)
+            st = self._lease_states.pop(key, None)
+            if st is None:
+                prev = self._released.get(key)
+                if prev is not None:
+                    raise SanitizerError(
+                        f"double release of lease granted "
+                        f"{prev[0].prov.describe()} — first released at "
+                        f"{prev[1]}, released again at {site}")
+                raise SanitizerError(
+                    f"release at {site} of a lease this allocator never "
+                    "granted")
+            for p in pages.ids():
+                self._remove_holder(p, key, site)
+            PageAllocator.release(self, pages)
+            self._released[key] = (st, site)
+            while len(self._released) > self._TOMBSTONES:
+                self._released.popitem(last=False)
+            return
+        ids = [int(p) for p in pages]
+        for p in ids:
+            holders = self._page_holders.get(p, [])
+            pin = next((h for h in holders if h.kind in ("pin", "raw")), None)
+            if pin is None:
+                if holders:
+                    who = "; ".join(h.describe() for h in holders)
+                    raise SanitizerError(
+                        f"raw release of page {p} at {site} — the page is "
+                        f"still mapped by a live lease ({who}); dropping its "
+                        "refcount would free or corrupt a sharer's KV "
+                        "(evict-while-shared)")
+                raise SanitizerError(
+                    f"raw release of page {p} at {site} with no recorded "
+                    "holder — the page was never granted (or already fully "
+                    "released)")
+            holders.remove(pin)
+            if not holders:
+                self._page_holders.pop(p, None)
+        PageAllocator.release(self, ids)
+
+    # ------------------------------------------------------------ engine API
+    def annotate(self, lease: PageLease, *, slot: Optional[int] = None,
+                 rid: Optional[int] = None,
+                 digest: Optional[str] = None) -> None:
+        """Enrich a lease's provenance with serving identity (slot / request
+        id / fused digest) — every holder of the lease shares the record."""
+        st = self._lease_states.get(id(lease))
+        if st is None:
+            raise SanitizerError(
+                f"annotate() at {_call_site()} on an unknown lease")
+        if slot is not None:
+            st.prov.slot = slot
+        if rid is not None:
+            st.prov.rid = rid
+        if digest is not None:
+            st.prov.digest = digest
+
+    def note_write(self, page_ids: Iterable[int],
+                   lease: Optional[PageLease] = None, *,
+                   what: str = "write") -> None:
+        """Validate a device write the caller is about to issue into
+        ``page_ids`` on behalf of ``lease``: the writer must hold every page
+        **owned**, and no other lease may hold it (prefix-index pins are
+        fine — registered pages are append-only past their pinned rows).
+        Bumps each page's generation stamp."""
+        key = None if lease is None else id(lease)
+        for raw_p in page_ids:
+            p = int(raw_p)
+            holders = self._page_holders.get(p, [])
+            mine = None if key is None else \
+                next((h for h in holders if h.key == key), None)
+            others = [h for h in holders
+                      if h is not mine and h.kind != "pin"]
+            if key is not None and mine is None:
+                raise SanitizerError(
+                    f"{what}: page {p} written by a lease that does not "
+                    f"hold it (holders: "
+                    f"{'; '.join(h.describe() for h in holders) or 'none'})")
+            if mine is not None and not mine.owned:
+                gen = int(self._gen[p])
+                raise SanitizerError(
+                    f"{what}: write to page {p} held SHARED (granted "
+                    f"{mine.prov.describe()} at generation "
+                    f"{mine.gen_at_grant}, now {gen}) without a cow() "
+                    "fault — the write would corrupt: "
+                    + ("; ".join(h.describe() for h in others)
+                       or "the cached prefix"))
+            if others:
+                raise SanitizerError(
+                    f"{what}: page {p} is also held by "
+                    f"{'; '.join(h.describe() for h in others)} — "
+                    "concurrent writable mapping")
+            self._gen[p] += 1
+
+    def check_step(self, page_map: np.ndarray, active: np.ndarray,
+                   leases: Mapping[int, PageLease],
+                   invalid_page: int) -> None:
+        """Validate allocator/shadow/device agreement after an engine step:
+        refcounts match shadow holders, every active slot's device page row
+        is exactly its lease (INVALID-padded), inactive rows are fully
+        INVALID, no mapped page is free, and no page is writable twice."""
+        self.assert_consistent()
+        for p in range(self.num_pages):
+            shadow = len(self._page_holders.get(p, []))
+            rc = self.refcount(p)
+            if shadow != rc:
+                who = "; ".join(self.holders_of(p)) or "none"
+                raise SanitizerError(
+                    f"page {p}: allocator refcount {rc} != {shadow} shadow "
+                    f"holder(s) [{who}] — a grant or release bypassed the "
+                    "sanitizer")
+        page_map = np.asarray(page_map)
+        mapped: Dict[int, List[Tuple[int, bool]]] = {}
+        for s in range(page_map.shape[0]):
+            row = page_map[s]
+            if not bool(active[s]):
+                extra = row[row != invalid_page]
+                if extra.size:
+                    raise SanitizerError(
+                        f"inactive slot {s} still maps pages "
+                        f"{[int(p) for p in extra]}")
+                continue
+            lease = leases.get(s)
+            if lease is None:
+                raise SanitizerError(f"active slot {s} has no lease")
+            if id(lease) not in self._lease_states:
+                raise SanitizerError(
+                    f"active slot {s}'s lease is unknown to the sanitizer "
+                    "(released while the slot is live?)")
+            n = lease.num_pages
+            if not (row[:n] == lease.page_ids).all() or \
+                    (row[n:] != invalid_page).any():
+                raise SanitizerError(
+                    f"slot {s}: device page row {[int(p) for p in row]} "
+                    f"diverges from its lease {lease.ids()}")
+            for i in range(n):
+                p = int(lease.page_ids[i])
+                if self.refcount(p) <= 0:
+                    raise SanitizerError(
+                        f"slot {s} maps page {p} with refcount 0 — the page "
+                        "was freed while still mapped (evict-while-shared)")
+                mapped.setdefault(p, []).append((s, bool(lease.owned[i])))
+        for p, slots in mapped.items():
+            # one owner + read-only sharers is the normal prefix-sharing
+            # shape (writes into shared pages are policed dynamically by
+            # note_write); two slots both claiming ownership never is
+            if sum(1 for _, owned in slots if owned) > 1:
+                raise SanitizerError(
+                    f"page {p} is mapped OWNED by multiple slots "
+                    f"{[s for s, owned in slots if owned]} — exclusive "
+                    "ownership violated (missing share/cow)")
+
+    def leak_report(self, live: Mapping[int, PageLease] = {}) -> List[str]:
+        """Grants that never reached a release, each named by its alloc
+        site. ``live`` holds the engine's still-intentionally-held leases
+        (in-flight slots); prefix-index pins are expected holders and are
+        never reported."""
+        live_keys = {id(lease) for lease in live.values()}
+        report: List[str] = []
+        for key, st in self._lease_states.items():
+            if key in live_keys:
+                continue
+            report.append(
+                f"leaked lease of {st.lease.num_pages} page(s) "
+                f"{st.lease.ids()} granted {st.prov.describe()}")
+        for p, holders in sorted(self._page_holders.items()):
+            for h in holders:
+                if h.kind == "raw":
+                    report.append(f"outstanding raw grant of page {p} from "
+                                  f"{h.prov.describe()}")
+        return report
+
+    def describe_holders(self) -> str:
+        """Per-holder provenance summary (pool-exhaustion error payload)."""
+        lines: List[str] = []
+        for st in self._lease_states.values():
+            lines.append(f"  {st.lease.num_pages} page(s) held by "
+                         f"{st.prov.describe()}")
+        pins = sum(1 for hs in self._page_holders.values()
+                   for h in hs if h.kind == "pin")
+        if pins:
+            lines.append(f"  {pins} page pin(s) held by the prefix index")
+        raws = sum(1 for hs in self._page_holders.values()
+                   for h in hs if h.kind == "raw")
+        if raws:
+            lines.append(f"  {raws} raw page grant(s)")
+        return "\n".join(lines)

@@ -145,7 +145,8 @@ class FedRefineSystem:
         All protocols share it: standalone and T2T requests decode alongside
         C2C-fused ones in the same slot table (launch/engine.py). Extra
         keywords (``paged=True``, ``page_size=``, ``num_pages=``,
-        ``admit_batch=``) reach the engine unchanged."""
+        ``admit_batch=``, ``sanitize=True`` for the page-lifecycle
+        sanitizer) reach the engine unchanged."""
         from repro.launch.engine import ContinuousBatchingEngine
 
         rxp = self.participants[receiver]

@@ -67,6 +67,17 @@ Design:
   indirection, so a prefix a peer transmitted once is inserted once and every
   later request fusing the same digest just points its slot at that row.
 
+- **Sanitizer (paged only, ``sanitize=True``)** — the allocator is built as
+  ``analysis/sanitizer.PageSanitizer``, a PageAllocator subclass carrying
+  per-page shadow holders with grant-site provenance. The engine reports
+  every device write it issues (``note_write``: prefill inserts, suffix
+  scatters, CoW copies, per-step decode writes) and hands over its device
+  state after each step (``check_step``); ``drain()`` raises on a non-empty
+  leak report. Leaks, double-releases, evict-while-shared and
+  shared-writes-without-CoW surface at the offending step, named by the
+  allocation site — with ``sanitize=False`` (default) no sanitizer exists
+  and decode outputs are byte-identical either way.
+
 Prefill is bucketed separately (``prompt_bucket``): right-padding a prompt is
 exact for *full-attention* layers (causality — pad keys sit after every real
 query, and the per-slot position mask hides them). It is NOT exact for
@@ -100,6 +111,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.sanitizer import PageSanitizer, SanitizerError
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 from repro.models.cache import (FusedPrefix, KVCache, PageAllocator,
@@ -151,6 +163,7 @@ class ContinuousBatchingEngine:
         num_pages: Optional[int] = None,
         paged_attention: str = "kernel",
         prefix_cache: bool = True,
+        sanitize: bool = False,
     ):
         if max_prefix and not cfg.attention_layers:
             raise ValueError("fused prefixes need attention layers (C2C medium)")
@@ -160,6 +173,9 @@ class ContinuousBatchingEngine:
             raise ValueError(f"paged_attention must be 'kernel' (in-place "
                              f"Pallas walk) or 'gather' (dense_view "
                              f"reference), got {paged_attention!r}")
+        if sanitize and not paged:
+            raise ValueError("sanitize=True checks page lifecycles and "
+                             "needs paged=True (dense slots own no pages)")
         self.cfg, self.params = cfg, params
         self.max_slots, self.max_seq = max_slots, max_seq
         self.max_prefix = max_prefix
@@ -184,11 +200,20 @@ class ContinuousBatchingEngine:
             self._table = SlotTable.init(cfg, max_slots, max_seq, cache_dtype,
                                          page_size=page_size,
                                          num_pages=num_pages)
-            self._allocator = PageAllocator(self._table.num_pages)
+            # PageSanitizer IS a PageAllocator (analysis/sanitizer.py): same
+            # refcounts plus shadow holder/provenance state the engine feeds
+            # through note_write/check_step hooks below
+            self._san: Optional[PageSanitizer] = (
+                PageSanitizer(self._table.num_pages) if sanitize else None)
+            self._allocator: Optional[PageAllocator] = (
+                self._san if self._san is not None
+                else PageAllocator(self._table.num_pages))
+            self._allocator.holders_hook = self._pool_holders
             self._leases: Dict[int, PageLease] = {}
         else:
             self._table = KVCache.init_slots(cfg, max_slots, max_seq,
                                              cache_dtype)
+            self._san = None
             self._allocator = None
         self._radix = (RadixPrefixIndex(page_size)
                        if self.prefix_cache else None)
@@ -432,7 +457,10 @@ class ContinuousBatchingEngine:
             return []
         head = self._queue[0]
         Sb = self._bucket_len(int(head.prompt.shape[1]))
-        pages_left = self._allocator.num_free if self.paged else None
+        pages_left = 0
+        if self.paged:
+            assert self._allocator is not None
+            pages_left = self._allocator.num_free
         batch: List[EngineRequest] = []
         taken_idx: List[int] = []
         for i, req in enumerate(self._queue):
@@ -465,11 +493,33 @@ class ContinuousBatchingEngine:
     def _ensure_pages(self, need: int) -> bool:
         """Make ``need`` pages allocatable, evicting LRU prefix-index entries
         under pool pressure (only pages no slot still maps actually free)."""
+        assert self._allocator is not None
         if self._allocator.can_alloc(need):
             return True
         if self._radix is not None:
             self._radix.evict(self._allocator, need - self._allocator.num_free)
         return self._allocator.can_alloc(need)
+
+    def _pool_holders(self) -> str:
+        """Who holds the page pool right now — attached to the allocator's
+        pool-exhaustion RuntimeError (``PageAllocator.holders_hook``) so an
+        admission failure names the slots, index pins and (under
+        ``sanitize=True``) the grant sites responsible."""
+        lines: List[str] = []
+        for s in sorted(self._leases):
+            lease = self._leases[s]
+            lines.append(f"  slot {s} (rid={self._slot_rid[s]}): "
+                         f"{lease.num_pages} page(s)")
+        if self._radix is not None:
+            for name, n in sorted(self._radix.pin_summary().items()):
+                lines.append(f"  prefix index [{name[:16]}]: "
+                             f"{n} pinned page(s)")
+        if self._san is not None:
+            detail = self._san.describe_holders()
+            if detail:
+                lines.append("  sanitizer grant sites:")
+                lines.extend("  " + ln for ln in detail.splitlines())
+        return "\n".join(lines)
 
     def _register_prefix(self, req: EngineRequest, lease: PageLease) -> None:
         """Publish an admitted prompt's pages to the radix index (pins them,
@@ -534,7 +584,11 @@ class ContinuousBatchingEngine:
         fresh = total - len(shared_ids)
         if not self._ensure_pages(fresh + (1 if cow_idx is not None else 0)):
             return False
+        assert self._allocator is not None
         lease = self._allocator.lease(shared=shared_ids, fresh=fresh)
+        if self._san is not None:
+            self._san.annotate(lease, slot=slot, rid=req.rid,
+                               digest=req.digest)
         if cow_idx is not None:
             # the suffix prefill writes position P inside the partially
             # matched page — its first divergent token write — so the CoW
@@ -542,6 +596,8 @@ class ContinuousBatchingEngine:
             src, dst = self._allocator.cow(lease, cow_idx)
             self._table = self._copy_page(self._table, jnp.int32(src),
                                           jnp.int32(dst))
+            if self._san is not None:
+                self._san.note_write([dst], lease, what="cow page copy")
             self.stats["cow_copies"] += 1
         pps, invalid = self._table.pages_per_slot, self._table.invalid_page
         row = lease.page_row(pps, invalid)
@@ -560,6 +616,11 @@ class ContinuousBatchingEngine:
         page_idx = np.minimum(abs_pos // pg, pps - 1)
         phys = np.where(abs_pos < S, row[page_idx], invalid).astype(np.int32)
         off = (abs_pos % pg).astype(np.int32)
+        if self._san is not None:
+            # the suffix scatter must only touch pages the lease OWNS: fresh
+            # pages and the CoW copy, never the shared full-prefix pages
+            self._san.note_write(np.unique(phys[phys != invalid]), lease,
+                                 what=f"suffix prefill (slot {slot})")
 
         rf = req.fused if req.fused is not None else self._empty_req_fused
         logits, self._table = self._suffix_prefill(
@@ -633,7 +694,14 @@ class ContinuousBatchingEngine:
                     continue
                 slot = free.popleft()
                 if self.paged:
+                    assert self._allocator is not None
                     lease = self._allocator.lease(fresh=self._pages_needed(req))
+                    if self._san is not None:
+                        self._san.annotate(lease, slot=slot, rid=req.rid,
+                                           digest=req.digest)
+                        self._san.note_write(lease.ids(), lease,
+                                             what=f"prefill insert "
+                                                  f"(slot {slot})")
                     self._leases[slot] = lease
                     row = lease.page_row(self._table.pages_per_slot,
                                          self._table.invalid_page)
@@ -663,6 +731,7 @@ class ContinuousBatchingEngine:
     def _evict(self, slot: int) -> None:
         self._table = self._table.evict_slot(slot)
         if self.paged:
+            assert self._allocator is not None
             lease = self._leases.pop(slot, None)
             if lease is not None:
                 # refcounted: pages another sharer (or the prefix index)
@@ -689,6 +758,21 @@ class ContinuousBatchingEngine:
             jnp.asarray(self._active))
         self.stats["decode_steps"] += 1
         tok_host = np.asarray(self._tok)
+        if self._san is not None:
+            # the decode step scattered each active slot's new token into
+            # page pos//page_size at the slot's pre-increment position —
+            # validate those writes before evictions release any lease
+            pos_host = np.asarray(self._table.pos)
+            for s in np.nonzero(self._active)[0]:
+                lease = self._leases[int(s)]
+                idx = (int(pos_host[s]) - 1) // self.page_size
+                if idx >= lease.num_pages:
+                    raise SanitizerError(
+                        f"decode wrote position {int(pos_host[s]) - 1} of "
+                        f"slot {int(s)}, past its lease of "
+                        f"{lease.num_pages} page(s)")
+                self._san.note_write([int(lease.page_ids[idx])], lease,
+                                     what=f"decode write (slot {int(s)})")
         for s in np.nonzero(self._active)[0]:
             rid = self._slot_rid[s]
             self._outputs[rid].append(tok_host[s])
@@ -698,6 +782,12 @@ class ContinuousBatchingEngine:
                 self._slot_rid[s] = None
                 self._evict(int(s))
                 done.append(self._finish(rid))
+        if self._san is not None:
+            # allocator / shadow-state / device page-map agreement, after
+            # this step's admissions, decode writes and evictions all landed
+            self._san.check_step(np.asarray(self._table.page_map),
+                                 self._active, self._leases,
+                                 self._table.invalid_page)
         return done
 
     # ----------------------------------------------------------------- drain
@@ -708,7 +798,20 @@ class ContinuousBatchingEngine:
             out.extend(self.step())
         out.extend(self._ready)
         self._ready = []
+        if self._san is not None:
+            report = self._san.leak_report(self._leases)
+            if report:
+                raise SanitizerError(
+                    "page leak(s) at drain:\n"
+                    + "\n".join("  " + line for line in report))
         return out
+
+    def sanitizer_report(self) -> List[str]:
+        """Outstanding page grants the sanitizer cannot attribute to a live
+        slot (empty when clean or when built with ``sanitize=False``)."""
+        if self._san is None:
+            return []
+        return self._san.leak_report(self._leases)
 
     # ----------------------------------------------------------------- intro
     @property

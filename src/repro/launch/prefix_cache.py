@@ -37,7 +37,8 @@ still maps it (the allocator's refcount guarantees this).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from functools import partial
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -98,7 +99,8 @@ class RadixPrefixIndex:
     All state is host-side Python/numpy; the only device interaction is
     indirect, through the page ids it hands back."""
 
-    def __init__(self, page_size: int, *, max_partials_per_node: int = 4):
+    def __init__(self, page_size: int, *,
+                 max_partials_per_node: int = 4) -> None:
         self.page_size = page_size
         self.max_partials_per_node = max_partials_per_node
         self._roots: Dict[Optional[str], _Root] = {}
@@ -112,15 +114,22 @@ class RadixPrefixIndex:
     @property
     def num_pages(self) -> int:
         """Pages currently pinned by the index."""
-        n = 0
-        for root in self._roots.values():
-            n += len(root.partials)
+        return sum(self.pin_summary().values())
+
+    def pin_summary(self) -> Dict[str, int]:
+        """Pinned-page count per fused digest (``"<standalone>"`` for the
+        None root) — the index-side holders in the engine's pool-exhaustion
+        report."""
+        out: Dict[str, int] = {}
+        for digest, root in self._roots.items():
+            n = len(root.partials)
             stack = list(root.children.values())
             while stack:
                 node = stack.pop()
                 n += 1 + len(node.partials)
                 stack.extend(node.children.values())
-        return n
+            out[digest if digest is not None else "<standalone>"] = n
+        return out
 
     def lookup(self, digest: Optional[str], tokens: np.ndarray) -> Optional[PrefixMatch]:
         """Longest matching prefix of ``tokens`` under fused key ``digest``,
@@ -227,38 +236,39 @@ class RadixPrefixIndex:
             victim = self._lru_leaf()
             if victim is None:
                 break
-            kind, parent, key, entry = victim
+            entry, remove = victim
             before = allocator.num_free
             allocator.release([entry.page_id])
             freed += allocator.num_free - before
-            if kind == "partial":
-                parent.remove(entry)
-            else:
-                del parent[key]
+            remove()
         self._gc_roots()
         return freed
 
-    def _lru_leaf(self):
+    def _lru_leaf(
+        self,
+    ) -> Optional[Tuple[Union[_Node, _Partial], Callable[[], None]]]:
         """Oldest evictable entry: a partial, or a full node with no children
-        and no partials. Returns (kind, container, key, entry) or None."""
-        best = None
+        and no partials. Returns (entry, remove-from-parent thunk) or None."""
+        best: Optional[Tuple[Union[_Node, _Partial],
+                             Callable[[], None]]] = None
 
-        def consider(kind, parent, key, entry):
+        def consider(entry: Union[_Node, _Partial],
+                     remove: Callable[[], None]) -> None:
             nonlocal best
-            if best is None or entry.last_use < best[3].last_use:
-                best = (kind, parent, key, entry)
+            if best is None or entry.last_use < best[0].last_use:
+                best = (entry, remove)
 
         for root in self._roots.values():
             # walk the forest; leaves = no children AND no partials
             nodes = [(root.children, c, n) for c, n in root.children.items()]
             for p in root.partials:
-                consider("partial", root.partials, None, p)
+                consider(p, partial(root.partials.remove, p))
             while nodes:
                 parent_children, chunk, node = nodes.pop()
                 for p in node.partials:
-                    consider("partial", node.partials, None, p)
+                    consider(p, partial(node.partials.remove, p))
                 if not node.children and not node.partials:
-                    consider("node", parent_children, chunk, node)
+                    consider(node, partial(parent_children.__delitem__, chunk))
                 nodes.extend((node.children, c, n)
                              for c, n in node.children.items())
         return best

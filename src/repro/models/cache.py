@@ -43,7 +43,7 @@ import hashlib
 import warnings
 from dataclasses import dataclass
 from functools import partial
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -867,6 +867,20 @@ class PageAllocator:
         self.num_pages = num_pages
         self._refcounts = np.zeros(num_pages, np.int64)
         self._free: List[int] = list(range(num_pages))
+        # optional () -> str callback naming the current holders (per-slot
+        # page counts, pinned digests, sanitizer provenance); its output is
+        # appended to pool-exhaustion errors so they are actionable
+        self.holders_hook: Optional[Callable[[], str]] = None
+
+    def _exhausted(self, requested: int, what: str) -> RuntimeError:
+        msg = (f"page pool exhausted: requested {requested} {what}, "
+               f"free {len(self._free)} of {self.num_pages} "
+               f"({self.pages_in_use} in use)")
+        if self.holders_hook is not None:
+            detail = self.holders_hook()
+            if detail:
+                msg += "\ncurrent holders:\n" + detail
+        return RuntimeError(msg)
 
     # ------------------------------------------------------------ queries
     @property
@@ -887,8 +901,7 @@ class PageAllocator:
     def alloc(self, n: int) -> List[int]:
         """Grant ``n`` exclusive pages (refcount 1 each)."""
         if n > len(self._free):
-            raise RuntimeError(
-                f"page pool exhausted: requested {n}, free {len(self._free)}")
+            raise self._exhausted(n, "pages")
         ids = [self._free.pop() for _ in range(n)]
         self._refcounts[ids] += 1
         return ids
@@ -921,9 +934,7 @@ class PageAllocator:
         """Issue a slot's lease: incref ``shared`` prefix pages (in order)
         followed by ``fresh`` newly-allocated exclusive pages."""
         if fresh > len(self._free):
-            raise RuntimeError(
-                f"page pool exhausted: requested {fresh} fresh pages, "
-                f"free {len(self._free)}")
+            raise self._exhausted(fresh, "fresh pages")
         s = self.share(shared)
         f = self.alloc(fresh)
         return PageLease(

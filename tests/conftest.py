@@ -56,6 +56,21 @@ def trace_guard():
     return TraceGuard
 
 
+@pytest.fixture
+def sanitized_engine():
+    """Factory fixture: a paged ContinuousBatchingEngine with the page-
+    lifecycle sanitizer on (repro.analysis.PageSanitizer backs the
+    allocator; every step is cross-checked and drain() raises on leaks).
+    Usage: ``eng = sanitized_engine(cfg, params, max_slots=4, ...)``."""
+    from repro.launch.engine import ContinuousBatchingEngine
+
+    def make(cfg, params, **kw):
+        kw.setdefault("paged", True)
+        return ContinuousBatchingEngine(cfg, params, sanitize=True, **kw)
+
+    return make
+
+
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)

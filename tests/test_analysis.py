@@ -276,6 +276,100 @@ CORPUS = {
             return T // bt
         """,
     ),
+    # ---- OWNxxx: page-lease ownership pass (repro.analysis.ownership) ----
+    "lease-leak": (
+        """
+        def admit(allocator):
+            lease = allocator.lease(fresh=2)   # never sunk: pages held forever
+            return lease.num_pages
+        """,
+        """
+        def admit(allocator, table, slot):
+            lease = allocator.lease(fresh=2)
+            row = lease.page_row(8, 99)
+            table = table.insert_slot(slot, row)
+            return table, lease
+
+        def borrow(lease):
+            return lease.num_pages  # parameters are borrowed, not owned
+        """,
+    ),
+    "lease-double-release": (
+        """
+        def evict(allocator, lease0):
+            lease = allocator.lease(fresh=1)
+            allocator.release(lease)
+            allocator.release(lease)
+        """,
+        """
+        def evict(allocator, keep):
+            lease = allocator.lease(fresh=1)
+            if keep:
+                allocator.release(lease)
+            else:
+                allocator.release(lease)  # exactly once on every path
+        """,
+    ),
+    "lease-use-after-release": (
+        """
+        def evict(allocator):
+            lease = allocator.lease(fresh=1)
+            allocator.release(lease)
+            return lease.ids()
+        """,
+        """
+        def evict(allocator, index):
+            lease = allocator.lease(fresh=1)
+            index.register(lease.ids())  # derived views consumed pre-release
+            n = lease.num_pages
+            allocator.release(lease)
+            return n                     # plain ints: not a tainted view
+        """,
+    ),
+    "shared-write-no-cow": (
+        """
+        def admit(allocator, table, slot, cache, phys, off, pos):
+            lease = allocator.lease(shared=[3, 4], fresh=1)
+            row = lease.page_row(8, 99)
+            table = table.insert_suffix(slot, cache, phys, off, row, pos)
+            return table, lease
+        """,
+        """
+        def admit(allocator, table, slot, cache, phys, off, pos):
+            lease = allocator.lease(shared=[3, 4], fresh=1)
+            allocator.cow(lease, 1)   # fault the partial page first
+            row = lease.page_row(8, 99)
+            table = table.insert_suffix(slot, cache, phys, off, row, pos)
+            return table, lease
+        """,
+    ),
+    "jit-page-mutation": (
+        """
+        import jax
+
+        class Eng:
+            def __init__(self):
+                self._step = jax.jit(lambda t: self.decode(t))
+
+            def decode(self, t):
+                ids = self._allocator.alloc(1)  # host mutation under trace
+                return t, ids
+        """,
+        """
+        import jax
+
+        class Eng:
+            def __init__(self):
+                self._step = jax.jit(lambda t: self.decode(t))
+
+            def decode(self, t):
+                return t * 2
+
+            def admit(self):                  # host-side: mutation is fine
+                ids = self._allocator.alloc(1)
+                return ids
+        """,
+    ),
 }
 
 
@@ -325,6 +419,33 @@ def test_suppression_comment_drops_finding(tmp_path):
     q = tmp_path / "nosup.py"
     q.write_text(src.replace("# lint: allow(dict-kv-literal)", ""))
     assert len(lint_paths([str(q)])) == 2
+
+
+def test_audit_suppressions_flags_stale_and_unknown(tmp_path):
+    """--audit-suppressions: an allow() whose rule no longer fires in its
+    window is stale; an unknown rule name is always stale; a live one (the
+    finding it covers still exists raw) is kept."""
+    from repro.analysis import audit_suppressions
+
+    src = textwrap.dedent("""
+        def f(k, v, b):
+            live = {"k": k, "v": v, "bias": b}  # lint: allow(dict-kv-literal)
+            # lint: allow(dict-kv-literal)
+            stale = [k, v, b]
+            bogus = 1  # lint: allow(no-such-rule)
+            return live, stale, bogus
+    """)
+    p = tmp_path / "sup.py"
+    p.write_text(src)
+    stale = audit_suppressions([str(p)])
+    assert sorted(s.rule for s in stale) == ["dict-kv-literal",
+                                             "no-such-rule"]
+    assert all(s.path == str(p) for s in stale)
+    # CLI surface: exit 1 + one line per stale comment
+    assert lint_main([str(p), "--audit-suppressions"]) == 1
+    clean = tmp_path / "clean.py"
+    clean.write_text(src.splitlines()[1] + "\n    return k\n")
+    assert lint_main([str(clean), "--audit-suppressions"]) == 0
 
 
 def test_jit_factory_pattern_is_reachable(tmp_path):
@@ -401,7 +522,9 @@ def test_mypy_analysis_and_cache_clean():
         [sys.executable, "-m", "mypy", "--config-file",
          os.path.join(root, "mypy.ini"),
          os.path.join(root, "src", "repro", "analysis"),
-         os.path.join(root, "src", "repro", "models", "cache.py")],
+         os.path.join(root, "src", "repro", "models", "cache.py"),
+         os.path.join(root, "src", "repro", "launch", "prefix_cache.py"),
+         os.path.join(root, "src", "repro", "launch", "engine.py")],
         capture_output=True, text=True, env=env, cwd=root)
     assert res.returncode == 0, res.stdout + res.stderr
 
@@ -542,3 +665,217 @@ def test_traceguard_engine_bench_style_smoke():
     assert tg.counts["decode"] == 1
     for a, b in zip(base, guarded):
         assert np.array_equal(a, b)
+
+
+# ------------------------------------------- PageSanitizer (runtime checker)
+
+
+def _san_cfg():
+    return ModelConfig(name="san-tiny", family="dense", num_layers=2,
+                       d_model=32, num_heads=2, num_kv_heads=1, head_dim=16,
+                       d_ff=64, vocab_size=VOCAB, tie_embeddings=True)
+
+
+def test_sanitizer_reports_leak_with_alloc_site():
+    from repro.analysis import PageSanitizer
+
+    san = PageSanitizer(8)
+    lease = san.lease(fresh=2)
+    san.annotate(lease, slot=3, rid=7)
+    (line,) = san.leak_report()
+    assert "leaked lease of 2 page(s)" in line
+    assert "slot=3" in line and "rid=7" in line
+    assert "test_analysis.py" in line  # the grant site, not the report site
+
+
+def test_sanitizer_double_release_names_both_sites():
+    from repro.analysis import PageSanitizer, SanitizerError
+
+    san = PageSanitizer(4)
+    lease = san.lease(fresh=1)
+    san.release(lease)
+    with pytest.raises(SanitizerError, match="double release") as ei:
+        san.release(lease)
+    msg = str(ei.value)
+    assert "first released at" in msg and "test_analysis.py" in msg
+    assert san.leak_report() == []
+
+
+def test_sanitizer_raw_release_of_leased_page_is_evict_while_shared():
+    from repro.analysis import PageSanitizer, SanitizerError
+
+    san = PageSanitizer(4)
+    lease = san.lease(fresh=2)
+    with pytest.raises(SanitizerError, match="evict-while-shared") as ei:
+        san.release([lease.ids()[0]])
+    assert "test_analysis.py" in str(ei.value)  # names the holder's grant
+    # a pinned page releases its pin without touching the lease's hold
+    san.retain(lease.ids()[0])
+    san.release([lease.ids()[0]])
+    assert san.refcount(lease.ids()[0]) == 1
+    san.release(lease)
+    assert san.num_free == 4
+
+
+def test_sanitizer_shared_write_requires_cow():
+    from repro.analysis import PageSanitizer, SanitizerError
+
+    san = PageSanitizer(4)
+    owner = san.lease(fresh=1)
+    sharer = san.lease(shared=owner.ids())
+    with pytest.raises(SanitizerError, match="without a cow"):
+        san.note_write(sharer.ids(), sharer)
+    san.cow(sharer, 0)
+    san.note_write(sharer.ids(), sharer)  # owned after the fault: fine
+    san.release(owner)
+    san.release(sharer)
+    assert san.leak_report() == []
+
+
+def _san_engine_run(cfg, params, sanitize, **kw):
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=4, max_seq=64,
+                                   paged=True, page_size=8, num_pages=24,
+                                   sanitize=sanitize, **kw)
+    key = jax.random.PRNGKey(60)
+    base = _prompt(key, 20)
+    shared_tail = jnp.concatenate(
+        [base[:, :17], _prompt(jax.random.fold_in(key, 1), 6)], axis=1)
+    rids = [eng.submit(base, 6),            # registers its pages
+            eng.submit(shared_tail, 5),     # radix hit + CoW partial page
+            eng.submit(_prompt(jax.random.fold_in(key, 2), 11), 7),
+            eng.submit(base[:, :9], 1)]     # answered at prefill, no slot
+    done = {c.rid: c.tokens for c in eng.drain()}
+    return [done[r] for r in rids], eng
+
+
+def test_sanitized_engine_byte_identical_and_clean():
+    """Clean shared-prefix/CoW/mixed-length runs finish with a zero-finding
+    sanitizer report and tokens byte-identical to sanitize=False."""
+    cfg = _san_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    base_toks, base_eng = _san_engine_run(cfg, params, sanitize=False)
+    san_toks, san_eng = _san_engine_run(cfg, params, sanitize=True)
+    assert san_eng.stats["shared_admits"] >= 1
+    assert san_eng.stats["cow_copies"] >= 1
+    assert san_eng.sanitizer_report() == []
+    for a, b in zip(base_toks, san_toks):
+        assert np.array_equal(a, b)
+    assert base_eng.stats["decode_steps"] == san_eng.stats["decode_steps"]
+
+
+def test_sanitized_engine_fixture_runs_clean(sanitized_engine):
+    cfg = _san_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    eng = sanitized_engine(cfg, params, max_slots=2, max_seq=32,
+                           page_size=8, num_pages=8)
+    eng.submit(_prompt(jax.random.PRNGKey(61), 7), 4)
+    assert len(eng.drain()) == 1
+    assert eng.sanitizer_report() == []
+
+
+def test_sanitized_engine_catches_injected_leak():
+    """An eviction that drops the lease without releasing it surfaces at
+    drain() as a leak naming the admitting call site."""
+    from repro.analysis import SanitizerError
+
+    cfg = _san_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2, max_seq=32,
+                                   paged=True, page_size=8, num_pages=8,
+                                   sanitize=True)
+    orig_evict = eng._evict
+
+    def leaky_evict(slot):
+        eng._leases.pop(slot, None)  # injected: lease dropped, never released
+        orig_evict(slot)
+
+    eng._evict = leaky_evict
+    eng.submit(_prompt(jax.random.PRNGKey(62), 7), 3)
+    with pytest.raises(SanitizerError, match="leaked lease") as ei:
+        eng.drain()
+    assert "engine.py" in str(ei.value)  # grant site: _admit's lease() call
+
+
+def test_sanitized_engine_catches_premature_release():
+    """Releasing a live slot's lease out from under the engine trips the
+    very next step's cross-check (and the engine's own eviction would be the
+    double release)."""
+    from repro.analysis import SanitizerError
+
+    cfg = _san_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2, max_seq=32,
+                                   paged=True, page_size=8, num_pages=8,
+                                   sanitize=True)
+    eng.submit(_prompt(jax.random.PRNGKey(63), 7), 4)
+    eng.step()
+    slot = int(np.nonzero(eng._active)[0][0])
+    eng._allocator.release(eng._leases[slot])  # injected premature release
+    with pytest.raises(SanitizerError):
+        eng.drain()
+
+
+def test_sanitized_engine_catches_evict_while_shared():
+    """A raw page-id release of a page a live lease still maps (the bug class
+    refcounting exists to prevent) is refused with the holder named."""
+    from repro.analysis import SanitizerError
+
+    cfg = _san_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2, max_seq=32,
+                                   paged=True, page_size=8, num_pages=8,
+                                   sanitize=True, prefix_cache=False)
+    eng.submit(_prompt(jax.random.PRNGKey(64), 7), 4)
+    eng.step()
+    slot = int(np.nonzero(eng._active)[0][0])
+    page = int(eng._leases[slot].page_ids[0])
+    with pytest.raises(SanitizerError, match="evict-while-shared") as ei:
+        eng._allocator.release([page])
+    msg = str(ei.value)
+    assert f"slot={slot}" in msg and "engine.py" in msg
+
+
+def test_sanitized_engine_catches_missing_cow(monkeypatch):
+    """If the CoW fault is skipped (the shared partial page handed to the
+    sharer as-is), the suffix prefill's write into it is caught before it
+    lands, naming the page's other holder."""
+    from repro.analysis import SanitizerError
+
+    cfg = _san_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=4, max_seq=64,
+                                   paged=True, page_size=8, num_pages=24,
+                                   sanitize=True)
+    key = jax.random.PRNGKey(65)
+    base = _prompt(key, 12)
+    eng.submit(base, 4)
+    eng.drain()  # registers base's pages (incl. the partial second page)
+
+    def broken_cow(lease, index):  # injected: no copy, share stays shared
+        src = int(lease.page_ids[index])
+        return src, src
+
+    monkeypatch.setattr(eng._allocator, "cow", broken_cow)
+    tail = jnp.concatenate([base[:, :10],
+                            _prompt(jax.random.fold_in(key, 1), 5)], axis=1)
+    eng.submit(tail, 4)  # radix hit with a partial-page extension
+    with pytest.raises(SanitizerError, match="without a cow") as ei:
+        eng.drain()
+    assert "cow page copy" in str(ei.value)
+
+
+def test_pool_exhaustion_reports_holders():
+    """Satellite: the allocator's exhaustion error names who holds the pool —
+    slots, index pins, and (sanitized) the grant sites."""
+    cfg = _san_cfg()
+    params = T.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2, max_seq=32,
+                                   paged=True, page_size=8, num_pages=4,
+                                   sanitize=True)
+    eng.submit(_prompt(jax.random.PRNGKey(66), 9), 4)
+    eng.step()
+    with pytest.raises(RuntimeError, match="exhausted") as ei:
+        eng._allocator.alloc(10)
+    msg = str(ei.value)
+    assert "current holders" in msg
+    assert "slot 0" in msg and "grant sites" in msg
