@@ -8,6 +8,11 @@ drop in that ratio fails. Structural properties (byte-identity, capacity and
 slot ratios, fused-prefix amortisation, one decode trace) are compared
 exactly — they are hardware-independent and must never regress.
 
+The chunked-prefill latency gates follow the same normalization: the p99
+decode-step and TTFT ratios (chunked engine / monolithic engine, measured in
+the same process) must not regress past the baseline's ratio times a
+tolerance headroom, and the chunked p99 must stay strictly below monolithic.
+
 Run:  python benchmarks/compare_bench.py BENCH_engine.json \
           [--baseline benchmarks/BENCH_engine_baseline.json] \
           [--tolerance 0.10]
@@ -27,6 +32,8 @@ def structural_gates(report: dict):
     cap = report["capacity"]
     pk = report["paged_kernel"]
     sp = report["shared_prefix"]
+    ck = report["chunked_prefill"]
+    ra = report["ragged_prefill"]
     stats = report["throughput"]["engine_stats"]
     return [
         ("bench self-reported pass", bool(report["pass"])),
@@ -44,6 +51,16 @@ def structural_gates(report: dict):
          sp["prefill_token_ratio"] < 1.0),
         ("fused prefix inserted once per digest",
          sp["fused_inserts"] == 1 and sp["fused_digest_hits"] >= 1),
+        ("chunked == monolithic outputs",
+         bool(ck["byte_identical_outputs"])),
+        ("one chunk-prefill trace across the mix",
+         ck["chunked"]["prefill_traces"] == 1),
+        ("chunked p99 step latency below monolithic",
+         ck["p99_step_ratio"] < 1.0),
+        ("ragged packing cuts padded-bucket FLOPs",
+         ra["flops_ratio"] < 1.0),
+        ("ragged packing cuts padded-bucket HBM bytes",
+         ra["hbm_bytes_ratio"] < 1.0),
     ]
 
 
@@ -71,6 +88,24 @@ def main() -> int:
         print(f"FAIL: normalized throughput regressed "
               f"{1 - cur_r / base_r:.1%} > {args.tolerance:.0%}")
         ok = False
+
+    # chunked-prefill latency: gate the machine-normalized chunked/monolithic
+    # ratios, never absolute seconds; wall-clock ratios are noisier than the
+    # throughput ratio, so the ceiling gets 3x the throughput tolerance.
+    # Headroom is multiplicative — the TTFT ratio sits far above 1 by design
+    # (chunked longs trade first-token latency for a flat decode p99), so an
+    # additive margin would be meaninglessly tight there and slack at 1.
+    ckc, ckb = cur["chunked_prefill"], base["chunked_prefill"]
+    for label, key in (("p99 decode-step", "p99_step_ratio"),
+                       ("TTFT p99", "ttft_p99_ratio")):
+        cur_x, base_x = ckc[key], ckb[key]
+        ceil = base_x * (1.0 + max(3 * args.tolerance, 0.15))
+        print(f"chunked/monolithic {label} ratio: current {cur_x:.3f} vs "
+              f"baseline {base_x:.3f} (ceiling {ceil:.3f})")
+        if cur_x > ceil:
+            print(f"FAIL: chunked {label} ratio regressed past baseline "
+                  f"headroom")
+            ok = False
 
     for name, passed in structural_gates(cur):
         print(f"{'ok  ' if passed else 'FAIL'}: {name}")

@@ -21,6 +21,55 @@ def _timed(fn, *args, repeat=5):
     return (time.perf_counter() - t0) / repeat * 1e6  # us
 
 
+def ragged_prefill_analytics(prompt_lens, *, bucket, H, Hkv, hd, page_size,
+                             block_q=8, itemsize=4):
+    """Padded-bucket vs ragged-packed prefill: analytic FLOPs and KV HBM
+    bytes (dataflow accounting, not measurement — interpret mode has no
+    hardware counters; engine_bench embeds this in BENCH_engine.json).
+
+    Both sides are costed with the SAME causal-flash block model — block_q
+    query rows per grid step, each step DMAing the page-aligned keys at or
+    before its last query — so the comparison isolates exactly one thing:
+    the padded kernel runs that model over ``bucket`` rows per prompt (pad
+    rows execute, pad keys get DMAed), while ragged packing
+    (kernels/prefill_attention.py) runs only live query blocks and only the
+    pages holding real keys. Costing the padded side as a single monolithic
+    K/V stream instead would compare two different kernels, not padding vs
+    packing."""
+    att = lambda sq, sk: 4 * H * hd * sq * sk  # QK^T + AV, 2 ops per MAC
+    row_q = H * hd * itemsize                  # one q read + one o write
+    row_kv = 2 * Hkv * hd * itemsize           # one k + one v row
+
+    def flash_cost(S):
+        """(flops, bytes) of a causal flash prefill over S rows."""
+        flops = bytes_ = 0
+        for b in range(-(-S // block_q)):
+            nq = min(block_q, S - b * block_q)
+            pages = -(-(b * block_q + nq) // page_size)
+            flops += att(block_q, pages * page_size)
+            bytes_ += pages * page_size * row_kv + block_q * 2 * row_q
+        return flops, bytes_
+
+    flops_pad = flops_rag = bytes_pad = bytes_rag = 0
+    for S in prompt_lens:
+        f, by = flash_cost(bucket)
+        flops_pad += f
+        bytes_pad += by
+        f, by = flash_cost(S)
+        flops_rag += f
+        bytes_rag += by
+    return {
+        "prompt_lens": list(prompt_lens), "bucket": bucket,
+        "page_size": page_size, "block_q": block_q,
+        "flops_padded_bucket": flops_pad,
+        "flops_ragged_packed": flops_rag,
+        "flops_ratio": flops_rag / max(flops_pad, 1),
+        "hbm_bytes_padded_bucket": bytes_pad,
+        "hbm_bytes_ragged_packed": bytes_rag,
+        "hbm_bytes_ratio": bytes_rag / max(bytes_pad, 1),
+    }
+
+
 def run() -> list:
     key = jax.random.PRNGKey(0)
     rows = []
@@ -69,6 +118,52 @@ def run() -> list:
         jax.jit(lambda qq: ref.paged_decode_attention_ref(
             qq.reshape(B, Hkv, H // Hkv, hd), k_pool, v_pool, pm, lengths)),
         q)))
+    # ragged varlen prefill over a paged pool vs padded-bucket dense prefill
+    Hkv_r, G_r, hd_r, pg_r, bq_r = 2, 4, 32, 32, 8
+    H_r = Hkv_r * G_r
+    lens = [64, 17, 40]
+    bucket = max(lens)
+    pps_r = -(-bucket // pg_r)
+    n_pages_r = sum(-(-s // pg_r) for s in lens)
+    kq = jax.random.split(jax.random.fold_in(key, 7), 4)
+    pm_r = jnp.full((len(lens), pps_r), n_pages_r, jnp.int32)
+    nxt = 0
+    bs_r, bp_r, bl_r, qs = [], [], [], []
+    for i, s in enumerate(lens):
+        np_i = -(-s // pg_r)
+        pm_r = pm_r.at[i, :np_i].set(jnp.arange(nxt, nxt + np_i))
+        nxt += np_i
+        nb = -(-s // bq_r)
+        qs.append(jnp.pad(jax.random.normal(jax.random.fold_in(kq[0], i),
+                                            (s, H_r, hd_r), jnp.float32),
+                          ((0, nb * bq_r - s), (0, 0), (0, 0))))
+        for b in range(nb):
+            bs_r.append(i)
+            bp_r.append(b * bq_r)
+            bl_r.append(min(bq_r, s - b * bq_r))
+    q_r = jnp.concatenate(qs)
+    k_pool_r = jax.random.normal(kq[1], (n_pages_r, Hkv_r, pg_r, hd_r))
+    v_pool_r = jax.random.normal(kq[2], (n_pages_r, Hkv_r, pg_r, hd_r))
+    mk = lambda xs: jnp.asarray(xs, jnp.int32)
+    bs_r, bp_r, bl_r = mk(bs_r), mk(bp_r), mk(bl_r)
+    rows.append(("ragged_prefill_pallas_interp",
+                 _timed(lambda: ops.ragged_prefill_attention(
+                     q_r, k_pool_r, v_pool_r, bs_r, bp_r, bl_r, pm_r,
+                     block_q=bq_r))))
+    # padded-bucket twin: every prompt padded to the bucket, dense causal
+    qp = jax.random.normal(kq[3], (len(lens), bucket, H_r, hd_r))
+    kp = jax.random.normal(kq[3], (len(lens), bucket, Hkv_r, hd_r))
+    vp = kp * 0.5
+
+    def _padded_prefill(qq, kk, vv):
+        qg = qq.reshape(qq.shape[0], bucket, Hkv_r, G_r, hd_r)
+        s = jnp.einsum("nqkgd,ntkd->nkgqt", qg, kk) * (hd_r ** -0.5)
+        causal = jnp.tril(jnp.ones((bucket, bucket), bool))
+        s = jnp.where(causal[None, None, None], s, -1e30)
+        return jnp.einsum("nkgqt,ntkd->nkgqd", jax.nn.softmax(s, -1), vv)
+
+    rows.append(("prefill_padded_bucket_dense_jnp",
+                 _timed(jax.jit(_padded_prefill), qp, kp, vp)))
     # banded SWA prefill vs dense-masked reference at window << S
     Sb, w = 2048, 256
     qb = jax.random.normal(key, (1, 4, Sb, 64), jnp.float32)
@@ -87,6 +182,12 @@ def run() -> list:
 def main() -> None:
     for name, us in run():
         print(f"kernel,{name},{us:.0f},us_per_call")
+    # serving-scale dataflow accounting for the ragged prefill packing
+    ra = ragged_prefill_analytics([512, 64, 384, 48, 256, 9], bucket=512,
+                                  H=32, Hkv=8, hd=128, page_size=64)
+    print(f"kernel,ragged_prefill_flops_vs_padded,{ra['flops_ratio']:.3f},ratio")
+    print(f"kernel,ragged_prefill_hbm_bytes_vs_padded,"
+          f"{ra['hbm_bytes_ratio']:.3f},ratio")
 
 
 if __name__ == "__main__":

@@ -168,6 +168,45 @@ def paged_decode_attention(q, k_pool, v_pool, page_map, lengths):
     return out.reshape(B, H, hd), m.reshape(B, H), l.reshape(B, H)
 
 
+def ragged_prefill_attention(q, k_pool, v_pool, block_seq, block_pos,
+                             block_len, page_map, *, block_q: int = 8):
+    """Ragged/varlen causal flash prefill straight over a paged KV pool.
+
+    ``q`` (T, H, hd) is a packed buffer of chunk query tokens — multiple
+    variable-length prompts laid back to back at ``block_q`` alignment, no
+    bucket padding. Per block of ``block_q`` tokens, ``block_seq`` names the
+    ``page_map`` row the block's sequence maps its pages through (-1 = pad
+    block), ``block_pos`` its absolute first-token position and ``block_len``
+    its live rows. Each query attends causally (absolute positions) over its
+    own sequence's pool pages — shared prefix pages, earlier chunks and the
+    current chunk (scattered into the pool before this call) alike.
+
+    Returns ``(out (T, H, hd), m (T, H), l (T, H))`` — the online softmax
+    statistics let the caller LSE-merge a fused C2C prefix segment
+    (models/attention.merge_attention). Rows past a block's ragged tail and
+    pad blocks return zeros with l == 0.
+    """
+    from repro.kernels.prefill_attention import ragged_prefill_attention_pallas
+    T, H, hd = q.shape
+    if block_q < 1 or T % block_q:
+        raise ValueError(f"packed length T={T} is not divisible by "
+                         f"block_q={block_q}")
+    Hkv = k_pool.shape[1]
+    G = H // Hkv
+    n_blocks = T // block_q
+    # (T, H, hd) -> (n_blocks, Hkv, G*block_q, hd): kernel row r = g*block_q + t
+    qb = q.reshape(n_blocks, block_q, Hkv, G, hd).transpose(0, 2, 3, 1, 4)
+    qb = qb.reshape(n_blocks, Hkv, G * block_q, hd)
+    o, m, l = ragged_prefill_attention_pallas(
+        qb, k_pool, v_pool, block_seq, block_pos, block_len, page_map,
+        block_q=block_q, interpret=_interpret())
+    unpack = lambda a, *tail: (
+        a.reshape(n_blocks, Hkv, G, block_q, *tail)
+        .transpose(0, 3, 1, 2, *range(4, 4 + len(tail)))
+        .reshape(T, H, *tail))
+    return unpack(o, hd), unpack(m), unpack(l)
+
+
 def paged_decode_attention_q8(q, qpool, page_map, lengths):
     """int8-pool twin of :func:`paged_decode_attention`: qpool is
     {"k_q","v_q" int8 (num_pages,Hkv,page_size,hd),

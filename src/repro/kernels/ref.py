@@ -64,6 +64,46 @@ def paged_decode_attention_ref(q, k_pool, v_pool, page_map, lengths):
     return jnp.where(any_live, out, 0.0).astype(q.dtype)
 
 
+def ragged_prefill_attention_ref(q, k_pool, v_pool, block_seq, block_pos,
+                                 block_len, page_map, *, block_q: int):
+    """Gather-then-attend oracle for the ragged varlen flash-prefill kernel.
+
+    q (T, H, hd) packed chunk queries at block_q alignment; k_pool/v_pool
+    (num_pages, Hkv, page_size, hd); per-block metadata as in
+    ops.ragged_prefill_attention. Each query row attends causally (absolute
+    positions) over its sequence's mapped pages gathered dense; rows past a
+    block's ragged tail and pad blocks return zeros (the hardened kernel
+    contract). Returns out (T, H, hd)."""
+    num_pages, Hkv, pg, hd = k_pool.shape
+    T, H, _ = q.shape
+    G = H // Hkv
+    n_blocks = T // block_q
+    pps = page_map.shape[1]
+    rows = jnp.maximum(block_seq, 0)
+    pmb = jnp.minimum(page_map, num_pages - 1)[rows]  # (n_blocks, pps)
+    mapped = jnp.repeat(page_map[rows] < num_pages, pg, axis=1)
+
+    def gather(pool):
+        v = pool[pmb]  # (n_blocks, pps, Hkv, pg, hd)
+        return v.transpose(0, 2, 1, 3, 4).reshape(n_blocks, Hkv, pps * pg, hd)
+
+    t = jnp.arange(block_q)
+    q_pos = block_pos[:, None] + t[None, :]  # (n_blocks, block_q)
+    live_q = (block_seq[:, None] >= 0) & (t[None, :] < block_len[:, None])
+    k_pos = jnp.arange(pps * pg)
+    valid = (mapped[:, None, :] & (k_pos[None, None, :] <= q_pos[..., None])
+             & live_q[..., None])  # (n_blocks, block_q, pps*pg)
+    qb = q.reshape(n_blocks, block_q, Hkv, G, hd).transpose(0, 2, 3, 1, 4)
+    s = jnp.einsum("bkgqd,bktd->bkgqt", qb.astype(jnp.float32),
+                   gather(k_pool).astype(jnp.float32)) * (hd ** -0.5)
+    s = jnp.where(valid[:, None, None], s, _NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,bktd->bkgqd", w,
+                     gather(v_pool).astype(jnp.float32))
+    out = jnp.where(valid.any(-1)[:, None, None, :, None], out, 0.0)
+    return out.transpose(0, 3, 1, 2, 4).reshape(T, H, hd).astype(q.dtype)
+
+
 def banded_attention_ref(q, k, v, *, window: int):
     """q/k/v (BH, S, hd); causal sliding-window attention, fp32 softmax."""
     BH, S, hd = q.shape

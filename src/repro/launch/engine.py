@@ -67,6 +67,25 @@ Design:
   indirection, so a prefix a peer transmitted once is inserted once and every
   later request fusing the same digest just points its slot at that row.
 
+- **Chunked prefill (paged only, ``prefill_token_budget=N``)** — a monolithic
+  prefill of a long prompt stalls every in-flight decode behind one huge
+  forward (the long-prompt p99 tail). With a token budget set, admission only
+  *reserves* a slot + page lease; each ``step()`` then spends at most ``N``
+  prompt tokens — across the oldest partially-prefilled prompts — before
+  decoding, so decode latency is bounded by the budget, not the longest
+  prompt. Chunks run through ``transformer.prefill_chunk``: K/V scatter
+  straight into the lease's pool pages and the ragged varlen flash-prefill
+  kernel (kernels/prefill_attention.py) attends causally over radix-shared
+  prefix pages, earlier chunks and the current chunk in one pass — no dense
+  staging cache, no ``extra_kv`` prefix gather. The call width is always
+  exactly ``N`` (ragged tails padded with dead rows the kernel zero-masks),
+  so chunked prefill traces ONCE per engine regardless of prompt lengths or
+  chunk counts. Mid-prefill the slot is invisible to decode: its device
+  page-map row stays INVALID (decode writes drop) until the final chunk
+  adopts the lease row (``SlotTable.adopt_slot``) and publishes the first
+  generated token. Radix hits still share matched pages (CoW on a partial
+  page) at reservation time — only the unmatched tail is chunked.
+
 - **Sanitizer (paged only, ``sanitize=True``)** — the allocator is built as
   ``analysis/sanitizer.PageSanitizer``, a PageAllocator subclass carrying
   per-page shadow holders with grant-site provenance. The engine reports
@@ -144,6 +163,23 @@ class Completion:
     meta: dict = field(default_factory=dict)
 
 
+@dataclass
+class _PartialPrefill:
+    """One prompt mid-chunked-prefill: slot + lease reserved, prompt tokens
+    ``[0, done)`` already resident in the lease's pages (a radix-shared
+    prefix counts), the slot still inactive and its device page-map row
+    still INVALID until the final chunk adopts it."""
+
+    req: EngineRequest
+    slot: int
+    lease: PageLease
+    row: np.ndarray  # (pages_per_slot,) int32 lease page row, INVALID-padded
+    done: int        # tokens already resident (shared prefix + prior chunks)
+    matched: int     # tokens served by the radix hit at reservation time
+    host_prompt: np.ndarray  # (S,) int32 host copy: chunk slicing must not
+    #                          pay a device sync per per-step chunk call
+
+
 class ContinuousBatchingEngine:
     """Fixed-slot continuous-batching decode engine for one receiver model."""
 
@@ -164,6 +200,7 @@ class ContinuousBatchingEngine:
         paged_attention: str = "kernel",
         prefix_cache: bool = True,
         sanitize: bool = False,
+        prefill_token_budget: Optional[int] = None,
     ):
         if max_prefix and not cfg.attention_layers:
             raise ValueError("fused prefixes need attention layers (C2C medium)")
@@ -189,6 +226,24 @@ class ContinuousBatchingEngine:
         # writes can wrap a swa ring buffer and evict real in-window entries
         pad_safe = all(k == "attn" for k in cfg.block_pattern)
         self.prompt_bucket = prompt_bucket if pad_safe else None
+
+        if prefill_token_budget is not None:
+            if prefill_token_budget < 1:
+                raise ValueError("prefill_token_budget must be >= 1")
+            if not paged:
+                raise ValueError("prefill_token_budget (chunked prefill) "
+                                 "needs paged=True — chunks scatter straight "
+                                 "into pool pages")
+            if not pad_safe:
+                raise ValueError("chunked prefill requires a pure "
+                                 "full-attention block pattern; "
+                                 f"{cfg.name} has {cfg.block_pattern}")
+        self.prefill_budget = prefill_token_budget
+        # the ragged kernel's query-block size must divide the chunk width;
+        # one full-width block per chunk call minimises grid points (the
+        # kernel masks dead rows, so a partial final chunk stays exact)
+        self._chunk_bq = prefill_token_budget if prefill_token_budget else 0
+        self._partials: "deque[_PartialPrefill]" = deque()
 
         self.prefix_cache = bool(prefix_cache and paged)
 
@@ -244,7 +299,8 @@ class ContinuousBatchingEngine:
         self.stats = {"decode_traces": 0, "prefill_traces": 0, "admitted": 0,
                       "completed": 0, "decode_steps": 0, "admit_batches": 0,
                       "peak_active": 0, "decode_view_gathers": 0,
-                      "prefill_tokens": 0, "suffix_prefill_traces": 0,
+                      "prefill_tokens": 0, "prefill_chunks": 0,
+                      "suffix_prefill_traces": 0,
                       "shared_admits": 0, "radix_hits": 0,
                       "radix_matched_tokens": 0, "cow_copies": 0,
                       "fused_inserts": 0, "fused_digest_hits": 0}
@@ -264,6 +320,8 @@ class ContinuousBatchingEngine:
             self._suffix_prefill = jax.jit(self._make_suffix_prefill())
             self._copy_page = jax.jit(
                 lambda table, src, dst: table.copy_page(src, dst))
+        if self.prefill_budget:
+            self._chunk_prefill = jax.jit(self._make_chunk_prefill())
 
     # ------------------------------------------------------------- jitted fns
     def _make_decode(self):
@@ -355,6 +413,54 @@ class ContinuousBatchingEngine:
 
         return sprefill
 
+    def _make_chunk_prefill(self):
+        """One token-budget chunk of one prompt, straight into pool pages.
+
+        The call width is ALWAYS ``prefill_token_budget`` (ragged tails ride
+        as dead rows: pad writes drop through INVALID page ids and the
+        ragged kernel zero-masks their outputs), and every other operand is
+        fixed-shape or a traced scalar — so the fn traces exactly once per
+        engine no matter how prompt lengths, chunk counts or radix hits
+        vary (``stats["prefill_traces"]`` counts it).
+
+        All per-chunk operands ride in ONE packed int32 vector ``meta`` =
+        [pos_offset, n_live, slot, adopt_len, page_row(pps), toks(C)]: a
+        chunk call is a single host->device transfer plus a single
+        dispatch, instead of six eager transfers — on the chunk scheduler's
+        per-step hot path that overhead is comparable to the kernel
+        itself."""
+        cfg, bq = self.cfg, self._chunk_bq
+        pps = self.max_seq // self.page_size
+
+        def cprefill(params, table, tok, meta, fused):
+            self.stats["prefill_traces"] += 1  # lint: allow(trace-side-effect)
+            pos_offset, n_live = meta[0], meta[1]
+            slot, adopt_len = meta[2], meta[3]
+            page_row = meta[4:4 + pps]
+            toks = meta[4 + pps:].reshape(1, -1)
+            ek = fused.to_extra_kv(cfg) if fused is not None else None
+            logits, table = T.prefill_chunk(cfg, params, table, toks,
+                                            pos_offset, n_live, page_row,
+                                            block_q=bq, extra_kv=ek)
+            # greedy next token off the chunk's last live row, in-jit: only
+            # the final chunk's value is used, but computing it here spares
+            # the activation path an eager argmax dispatch per admission
+            first = jnp.argmax(logits[0, n_live - 1]).astype(jnp.int32)
+            # final chunk of a multi-token request (adopt_len = prompt
+            # length, else 0): adopt the page row and install the first
+            # token in one fused dispatch — an eager adopt + at[].set here
+            # would add two device round-trips to every activation step
+            adopt = adopt_len > 0
+            table = jax.lax.cond(
+                adopt,
+                lambda t: t.adopt_slot(slot, page_row, adopt_len),
+                lambda t: t, table)
+            tok = jnp.where(adopt & (jnp.arange(tok.shape[0]) == slot),
+                            first, tok)
+            return first, tok, table
+
+        return cprefill
+
     # ------------------------------------------------------------- submission
     def submit(self, prompt, max_new_tokens: int, *,
                fused=None, digest: Optional[str] = None,
@@ -374,10 +480,20 @@ class ContinuousBatchingEngine:
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
         S = int(prompt.shape[1])
+        if S >= self.max_seq:
+            # checked before the combined bound so the degenerate case gets
+            # its own name: bucket rounding (_bucket_len) clamps at max_seq,
+            # and a prompt that large would land in a bucket with zero
+            # headroom for even the first decoded token
+            raise ValueError(
+                f"prompt({S}) fills the whole max_seq={self.max_seq} cache: "
+                "no headroom for the first decoded token")
         if S + max_new_tokens > self.max_seq:
             raise ValueError(f"prompt({S}) + gen({max_new_tokens}) exceeds "
                              f"max_seq={self.max_seq}")
-        if self.paged and max_new_tokens > 1:  # 1-token: answered at prefill
+        # 1-token requests are answered at prefill and own no pages — except
+        # under chunked prefill, which leases pages for the prompt itself
+        if self.paged and (max_new_tokens > 1 or self.prefill_budget):
             need = math.ceil((S + max_new_tokens - 1) / self.page_size)
             if need > self._table.num_pages:
                 raise ValueError(
@@ -403,6 +519,16 @@ class ContinuousBatchingEngine:
 
     # -------------------------------------------------------------- admission
     def _bucket_len(self, S: int) -> int:
+        """Prefill width for an S-token prompt (or prompt suffix): rounded up
+        to the bucket, clamped at ``max_seq``. The clamp is only sound while
+        the *exact* length leaves decode headroom — a prompt of ``max_seq``
+        itself would round into a bucket with zero room for the first decoded
+        token, so that degenerate case is rejected here (submit() already
+        refuses it with its own message; this guard covers direct callers)."""
+        if S >= self.max_seq:
+            raise ValueError(
+                f"cannot bucket {S} token(s): max_seq={self.max_seq} leaves "
+                "no headroom for the first decoded token")
         if self.prompt_bucket is None:
             return S
         b = ((S + self.prompt_bucket - 1) // self.prompt_bucket
@@ -410,7 +536,9 @@ class ContinuousBatchingEngine:
         return min(b, self.max_seq)
 
     def _free_slots(self) -> List[int]:
-        return [i for i in range(self.max_slots) if not self._active[i]]
+        # a slot mid-chunked-prefill is inactive but reserved (_slot_rid set)
+        return [i for i in range(self.max_slots)
+                if not self._active[i] and self._slot_rid[i] is None]
 
     def _pages_needed(self, req: EngineRequest) -> int:
         # Highest position ever *written* is S + max_new - 2 (the final
@@ -721,10 +849,185 @@ class ContinuousBatchingEngine:
             self.stats["peak_active"] = max(self.stats["peak_active"],
                                             int(self._active.sum()))
 
+    # ------------------------------------------------------- chunked prefill
+    def _begin_partial(self, req: EngineRequest, slot: int, lease: PageLease,
+                       *, done: int, matched: int) -> None:
+        """Reserve ``slot`` for a chunked admission: the lease is held (and
+        visible to the sanitizer's leak report) from reservation on, but the
+        slot stays inactive and its device page row INVALID until the final
+        chunk adopts it."""
+        row = lease.page_row(self._table.pages_per_slot,
+                             self._table.invalid_page)
+        self._leases[slot] = lease
+        self._slot_rid[slot] = req.rid
+        self._partials.append(_PartialPrefill(req, slot, lease,
+                                              np.asarray(row, np.int32),
+                                              done, matched,
+                                              np.asarray(req.prompt[0],
+                                                         np.int32)))
+
+    def _reserve_fresh(self, req: EngineRequest, slot: int) -> bool:
+        """Reserve pages for a chunked admission with no cached prefix."""
+        need = self._pages_needed(req)
+        if not self._ensure_pages(need):
+            return False
+        assert self._allocator is not None
+        lease = self._allocator.lease(fresh=need)
+        if self._san is not None:
+            self._san.annotate(lease, slot=slot, rid=req.rid,
+                               digest=req.digest)
+        self._begin_partial(req, slot, lease, done=0, matched=0)
+        return True
+
+    def _reserve_shared(self, req: EngineRequest, slot: int,
+                        match: PrefixMatch) -> bool:
+        """Reserve a radix-hit chunked admission: share the matched pages,
+        CoW-copy a partially matched one (the first chunk writes position
+        ``matched`` inside it), lease fresh pages for the rest. Only the
+        unmatched tail will be chunked."""
+        P = match.matched
+        total = self._pages_needed(req)
+        shared_ids = list(match.page_ids)
+        cow_idx = None
+        if match.partial_page is not None:
+            shared_ids.append(match.partial_page)
+            cow_idx = len(shared_ids) - 1
+        fresh = total - len(shared_ids)
+        if not self._ensure_pages(fresh + (1 if cow_idx is not None else 0)):
+            return False
+        assert self._allocator is not None
+        lease = self._allocator.lease(shared=shared_ids, fresh=fresh)
+        if self._san is not None:
+            self._san.annotate(lease, slot=slot, rid=req.rid,
+                               digest=req.digest)
+        if cow_idx is not None:
+            src, dst = self._allocator.cow(lease, cow_idx)
+            self._table = self._copy_page(self._table, jnp.int32(src),
+                                          jnp.int32(dst))
+            if self._san is not None:
+                self._san.note_write([dst], lease, what="cow page copy")
+            self.stats["cow_copies"] += 1
+        self.stats["radix_hits"] += 1
+        self.stats["radix_matched_tokens"] += P
+        self._begin_partial(req, slot, lease, done=P, matched=P)
+        return True
+
+    def _defer_for_partial(self, req: EngineRequest) -> bool:
+        """True when the queue head should wait: an in-flight partial with
+        the same digest and leading token will register a shareable prefix
+        at its final chunk (the chunked analogue of _defer_for_sharing —
+        partials progress every step, so the wait is bounded)."""
+        if self._radix is None or req.max_new_tokens <= 1:
+            return False
+        tb = np.asarray(req.prompt[0])
+        for part in self._partials:
+            ta = part.host_prompt
+            if part.req.digest == req.digest and tb.size > 1 and ta.size \
+                    and int(ta[0]) == int(tb[0]):
+                return True
+        return False
+
+    def _admit_chunked(self) -> None:
+        """Chunked admission: FIFO-reserve slots + page leases for queued
+        prompts. No prefill compute happens here — _run_chunks spends the
+        per-step token budget on the oldest reservations."""
+        while self._queue:
+            free = self._free_slots()
+            if not free:
+                break
+            head = self._queue[0]
+            match = self._radix_match(head)
+            if match is None and self._defer_for_partial(head):
+                break
+            ok = (self._reserve_shared(head, free[0], match)
+                  if match is not None else
+                  self._reserve_fresh(head, free[0]))
+            if not ok:
+                break  # head-of-line blocked on pages: wait for evictions
+            self._queue.popleft()
+
+    def _run_chunks(self) -> None:
+        """Spend up to ``prefill_token_budget`` prompt tokens on the oldest
+        partial prefills (leftover budget rolls into the next partial — the
+        calls all share one trace). A prompt's final chunk activates it; at
+        most one prompt activates per step, so adoption cost (page-row
+        adopt + first-token install) is bounded per step the same way the
+        token budget bounds prefill compute — a backlog of small partials
+        drains one per step instead of bursting into a single stall."""
+        if not self.prefill_budget:
+            return
+        C = self.prefill_budget
+        pg, invalid = self.page_size, self._table.invalid_page
+        pps = self.max_seq // pg
+        left = C
+        while left > 0 and self._partials:
+            part = self._partials[0]
+            req = part.req
+            S = int(req.prompt.shape[1])
+            n = min(left, S - part.done)
+            left -= n
+            if self._san is not None:
+                # the chunk's scatter only touches pages the lease OWNS:
+                # shared full-prefix pages all sit before done//pg, and the
+                # page holding position `done` is the CoW copy or fresh
+                pages = part.row[part.done // pg:(part.done + n - 1) // pg + 1]
+                self._san.note_write(np.unique(pages[pages != invalid]),
+                                     part.lease,
+                                     what=f"chunk prefill (slot {part.slot})")
+            rf = req.fused if req.fused is not None else self._empty_req_fused
+            final = part.done + n == S
+            adopt_len = S if final and req.max_new_tokens > 1 else 0
+            meta = np.zeros(4 + pps + C, np.int32)
+            meta[:4] = (part.done, n, part.slot, adopt_len)
+            meta[4:4 + pps] = part.row
+            meta[4 + pps:4 + pps + n] = \
+                part.host_prompt[part.done:part.done + n]
+            first, self._tok, self._table = self._chunk_prefill(
+                self.params, self._table, self._tok, jnp.asarray(meta), rf)
+            part.done += n
+            self.stats["prefill_tokens"] += n
+            self.stats["prefill_chunks"] += 1
+            if part.done == S:
+                self._partials.popleft()
+                self._activate_partial(part, first)
+                break  # one adoption per step: keep the stall envelope flat
+
+    def _activate_partial(self, part: _PartialPrefill, first) -> None:
+        """A prompt's final chunk landed: book-keep its activation. The
+        device-side work — page-row adoption and first-token install — was
+        fused into the final chunk call itself; ``first`` is the chunk jit's
+        in-jit argmax. A 1-token request completes here instead (its page
+        row was never adopted: the radix registration keeps the pages)."""
+        req, slot = part.req, part.slot
+        self._outputs[req.rid] = [first]
+        self._register_prefix(req, part.lease)
+        self.stats["admitted"] += 1
+        if part.matched:
+            self.stats["shared_admits"] += 1
+        if req.max_new_tokens == 1:
+            # answered by the final chunk: drop the reservation — the radix
+            # registration above keeps the pages pinned for future sharers
+            del self._leases[slot]
+            assert self._allocator is not None
+            self._allocator.release(part.lease)
+            self._slot_rid[slot] = None
+            self._ready.append(self._finish(req.rid))
+            return
+        self._assign_fused_row(slot, req)
+        self._active[slot] = True
+        self._remaining[slot] = req.max_new_tokens - 1
+        self.stats["peak_active"] = max(self.stats["peak_active"],
+                                        int(self._active.sum()))
+
     # ------------------------------------------------------------- completion
     def _finish(self, rid: int) -> Completion:
         req = self._req_info.pop(rid)
-        toks = np.asarray(jnp.stack(self._outputs.pop(rid)), np.int32)
+        # host-side stack: jnp.stack here would eagerly compile a fresh XLA
+        # stack per distinct token count, a multi-ms stall on the step that
+        # completes a request (the entries are host scalars already, bar the
+        # first token, which np.asarray converts per element)
+        toks = np.asarray([np.asarray(t) for t in self._outputs.pop(rid)],
+                          np.int32)
         self.stats["completed"] += 1
         return Completion(rid, toks, req.protocol, req.meta)
 
@@ -746,8 +1049,16 @@ class ContinuousBatchingEngine:
     # ------------------------------------------------------------------ step
     def step(self) -> List[Completion]:
         """Admit what fits, decode one token for every active slot, free any
-        slot whose request just finished. Returns the completions."""
-        self._admit()
+        slot whose request just finished. Returns the completions.
+
+        Chunked mode (``prefill_token_budget``) replaces monolithic admission
+        prefills with a reservation pass plus at most one token-budget's
+        worth of chunk compute, so the decode cadence below stays bounded."""
+        if self.prefill_budget:
+            self._admit_chunked()
+            self._run_chunks()
+        else:
+            self._admit()
         done, self._ready = self._ready, []
         if not self._active.any():
             return done
@@ -792,9 +1103,9 @@ class ContinuousBatchingEngine:
 
     # ----------------------------------------------------------------- drain
     def drain(self) -> List[Completion]:
-        """Run until the queue and every slot are empty."""
+        """Run until the queue, partial prefills and every slot are empty."""
         out: List[Completion] = []
-        while self._queue or self._active.any():
+        while self._queue or self._partials or self._active.any():
             out.extend(self.step())
         out.extend(self._ready)
         self._ready = []
@@ -821,6 +1132,16 @@ class ContinuousBatchingEngine:
     @property
     def num_queued(self) -> int:
         return len(self._queue)
+
+    @property
+    def num_partial(self) -> int:
+        """Prompts reserved for chunked prefill but not yet fully resident."""
+        return len(self._partials)
+
+    def first_token_ready(self, rid: int) -> bool:
+        """True once ``rid``'s first token exists (the TTFT marker: set at
+        admission for monolithic prefill, at the final chunk when chunked)."""
+        return rid in self._outputs
 
     @property
     def kv_table_bytes(self) -> int:

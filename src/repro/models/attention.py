@@ -394,6 +394,69 @@ def decode_forward(
     return L.linear(params["wo"], out), new_kv
 
 
+def prefill_chunk_forward(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,  # (1, C, d) — one packed chunk of prompt tokens
+    cos: jax.Array,  # (1, C, hd//2) at absolute positions pos_offset + [0, C)
+    sin: jax.Array,
+    entry: dict,  # {"k","v"} page pools (num_pages, Hkv, page_size, hd)
+    page_row: jax.Array,  # (pages_per_slot,) int32 — the slot's lease pages
+    block_seq: jax.Array,  # (C//block_q,) int32 0 = live block, -1 = pad
+    block_pos: jax.Array,  # (C//block_q,) int32 absolute first-query position
+    block_len: jax.Array,  # (C//block_q,) int32 live rows per block
+    phys: jax.Array,  # (C,) int32 physical page per token (INVALID = drop)
+    off: jax.Array,  # (C,) int32 in-page offset per token
+    *,
+    block_q: int,
+    extra_kv: Optional[Any] = None,  # per-layer FusedPrefix slice, always visible
+) -> Tuple[jax.Array, dict]:
+    """One chunk of token-budget prefill straight against the paged pool.
+
+    The chunk's K/V scatter to their physical pages first (per-token phys/off,
+    the same advanced-indexing scatter as SlotTable.insert_suffix; rows past
+    the live count carry INVALID phys and drop), then the ragged flash-prefill
+    kernel attends over the slot's page row — radix-shared prefix pages,
+    earlier chunks and the current chunk uniformly under absolute-position
+    causality. No dense staging cache is ever materialised: a partially
+    prefilled slot holds real pool pages only. A fused C2C prefix is LSE-merged
+    from the kernel's online-softmax statistics.
+
+    Returns (out (1, C, d), updated {"k","v"} pools)."""
+    from repro.kernels import ops
+
+    extra_kv = _ensure_prefix(extra_kv)
+    q, k_new, v_new = project_qkv(cfg, params, x, cos, sin)  # q (1,H,C,hd)
+
+    def scatter(pool, new):
+        # (1, Hkv, C, hd) -> per-token (C, Hkv, hd), the shape advanced
+        # indexing wants for pool.at[phys, :, off]
+        tok = new[0].transpose(1, 0, 2)
+        return pool.at[phys, :, off].set(tok.astype(pool.dtype), mode="drop")
+
+    k_pool = scatter(entry["k"], k_new)
+    v_pool = scatter(entry["v"], v_new)
+    o, m, l = ops.ragged_prefill_attention(
+        q[0].transpose(1, 0, 2), k_pool, v_pool, block_seq, block_pos,
+        block_len, page_row[None], block_q=block_q)
+    new_kv = {"k": k_pool, "v": v_pool}
+    if extra_kv is not None:
+        # (C, H, ...) kernel outputs -> the (1, H, C, ...) part layout
+        # merge_attention expects; dead rows (l == 0) take the prefix part
+        # only, which is garbage confined to rows nothing ever reads
+        own = ((o.astype(jnp.float32) * l[..., None]).transpose(1, 0, 2)[None],
+               m.T[None], l.T[None])
+        pb = (extra_kv.bias[:, None, None, :]
+              if extra_kv.bias is not None else None)
+        pre = attend_stats(q, extra_kv.k.astype(k_pool.dtype),
+                           extra_kv.v.astype(v_pool.dtype), None, pb)
+        out = merge_attention([own, pre]).astype(x.dtype)
+    else:
+        C, H, hd = o.shape
+        out = o.reshape(1, C, H * hd)
+    return L.linear(params["wo"], out), new_kv
+
+
 def decode_forward_paged(
     cfg: ModelConfig,
     params: dict,

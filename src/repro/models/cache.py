@@ -715,6 +715,26 @@ class SlotTable:
             page_size=self.page_size,
         )
 
+    def adopt_slot(self, slot, page_row, length) -> "SlotTable":
+        """Activate a slot whose pages were already filled out-of-band.
+
+        Chunked prefill (transformer.prefill_chunk) scatters K/V through
+        per-token phys/off while the slot's page-map row stays INVALID — so
+        decode's :meth:`write_token` cannot touch the in-flight pages and the
+        slot is invisible to the batch. On the prompt's final chunk the engine
+        adopts the lease's row and sets the live length; the next decode step
+        sees a fully prefilled slot. No pool data moves."""
+        slot = jnp.asarray(slot, jnp.int32)
+        if isinstance(page_row, PageLease):
+            page_row = page_row.page_row(self.pages_per_slot,
+                                         self.invalid_page)
+        return dataclasses.replace(
+            self,
+            pos=self.pos.at[slot].set(jnp.asarray(length, jnp.int32)),
+            page_map=self.page_map.at[slot].set(
+                jnp.asarray(page_row, jnp.int32)),
+        )
+
     def copy_page(self, src, dst) -> "SlotTable":
         """Copy one physical page's K/V (every layer entry) ``src`` → ``dst``:
         the device half of the allocator's copy-on-write fault. The host side

@@ -428,6 +428,119 @@ def prefill(
         pos=jnp.asarray(S, jnp.int32), layers=tuple(new_layers))
 
 
+def _apply_layer_chunk(cfg, kind, p, x, cos, sin, entry, chunk, extra_kv=None):
+    """One chunked-prefill layer step (paged attention only)."""
+    if kind != "attn":
+        raise ValueError(
+            f"chunked prefill requires a pure full-attention pattern; "
+            f"got {kind!r}")
+    page_row, bs, bp, bl, phys, off, block_q = chunk
+    xn = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    h, new_kv = A.prefill_chunk_forward(cfg, p["attn"], xn, cos, sin, entry,
+                                        page_row, bs, bp, bl, phys, off,
+                                        block_q=block_q, extra_kv=extra_kv)
+    x = x + h
+    h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    if cfg.num_experts:
+        # dropless: per-token routing — padded chunk rows must not affect
+        # live rows' expert capacity
+        y, _ = MOE.moe_ffn(cfg, p["ffn"], h2, dropless=True)
+    else:
+        y = L.swiglu(p["ffn"], h2)
+    return x + y, new_kv
+
+
+def prefill_chunk(
+    cfg: ModelConfig,
+    params: dict,
+    table: SlotTable,
+    tokens: jax.Array,  # (1, C) int32 — one fixed-width token-budget chunk
+    pos_offset: jax.Array,  # traced scalar: absolute position of tokens[0, 0]
+    n_live: jax.Array,  # traced scalar: live tokens in the chunk (<= C)
+    page_row: jax.Array,  # (pages_per_slot,) int32 — the slot's lease pages
+    *,
+    block_q: int,
+    extra_kv: Optional[list] = None,  # C2C fused prefix, as in ``forward``
+) -> Tuple[jax.Array, SlotTable]:
+    """Prefill ONE token-budget chunk of a prompt straight into pool pages.
+
+    The chunked twin of :func:`prefill`: instead of one monolithic forward
+    over a padded prompt bucket, the engine feeds fixed-width ``C``-token
+    chunks (C = its prefill token budget — one trace per chunk signature, not
+    per prompt length) at position offset ``pos_offset``. Every layer scatters
+    the chunk's K/V to the physical pages named by ``page_row`` and ragged-
+    flash-attends over that row, so causality uniformly covers radix-shared
+    prefix pages, earlier chunks, and the current chunk — there is no dense
+    staging cache and no ``prefix_extra_kv`` gather. Rows past ``n_live`` are
+    padding: their writes drop through INVALID page ids and their outputs are
+    exact zeros at the attention (per-token FFN keeps them confined).
+
+    The table's ``pos``/``page_map`` are deliberately left untouched — the
+    slot stays invisible to decode until its *final* chunk, when the engine
+    adopts the row (:meth:`SlotTable.adopt_slot`). Returns
+    (logits (1, C, V), table with updated pools)."""
+    cycles, pattern, tail = layer_grouping(cfg)
+    if any(k != "attn" for k in pattern + tail):
+        raise ValueError(
+            f"chunked prefill requires a pure full-attention pattern; "
+            f"{cfg.name} has {cfg.block_pattern}")
+    C = tokens.shape[1]
+    if C % block_q:
+        raise ValueError(f"chunk width C={C} not divisible by "
+                         f"block_q={block_q}")
+    pg, pps = table.page_size, table.pages_per_slot
+    pos_offset = jnp.asarray(pos_offset, jnp.int32)
+    n_live = jnp.asarray(n_live, jnp.int32)
+    positions = pos_offset + jnp.arange(C, dtype=jnp.int32)[None]
+    cos, sin = rope_tables(cfg, positions)
+    # per-block ragged metadata (kernels/prefill_attention.py contract)
+    i = jnp.arange(C // block_q, dtype=jnp.int32)
+    bl = jnp.clip(n_live - i * block_q, 0, block_q)
+    bs = jnp.where(bl > 0, 0, -1).astype(jnp.int32)
+    bp = pos_offset + i * block_q
+    # per-token scatter targets: INVALID past the live count (writes drop)
+    abs_pos = pos_offset + jnp.arange(C, dtype=jnp.int32)
+    page_idx = jnp.clip(abs_pos // pg, 0, pps - 1)
+    phys = jnp.where(jnp.arange(C) < n_live, page_row[page_idx],
+                     table.invalid_page).astype(jnp.int32)
+    off = abs_pos % pg
+    chunk = (jnp.asarray(page_row, jnp.int32), bs, bp, bl, phys, off, block_q)
+    x = _embed_in(cfg, params, tokens, None)
+    ek = extra_kv or [None] * (len(pattern) + len(tail))
+    ek_cycle = tuple(
+        ek[i] if ek[i] is not None else jnp.zeros((max(cycles, 1),), jnp.float32)
+        for i in range(len(pattern))
+    )
+
+    def cycle_body(x, xs):
+        p_stack, entries, ekx = xs
+        new_entries = []
+        for j, kind in enumerate(pattern):
+            e = ekx[j] if isinstance(ekx[j], (dict, FusedPrefix)) else None
+            x, new_e = _apply_layer_chunk(cfg, kind, p_stack[j], x, cos, sin,
+                                          entries[j], chunk, extra_kv=e)
+            new_entries.append(new_e)
+        return x, tuple(new_entries)
+
+    if cycles > 0:
+        xs_all = (tuple(params["cycle"]), tuple(table.layers[: len(pattern)]),
+                  ek_cycle)
+        x, new_layers = jax.lax.scan(cycle_body, x, xs_all)
+        new_layers = list(new_layers)
+    else:
+        new_layers = []
+    for j, kind in enumerate(tail):
+        entry = jax.tree.map(lambda a: a[0], table.layers[len(pattern) + j])
+        e = ek[len(pattern) + j]
+        e = jax.tree.map(lambda a: a[0], e) if e is not None else None
+        x, new_e = _apply_layer_chunk(cfg, kind, params["tail"][j], x, cos,
+                                      sin, entry, chunk, extra_kv=e)
+        new_layers.append(jax.tree.map(lambda a: a[None], new_e))
+    return _logits_out(cfg, params, x), SlotTable(
+        pos=table.pos, page_map=table.page_map, layers=tuple(new_layers),
+        page_size=table.page_size)
+
+
 def decode_step(
     cfg: ModelConfig,
     params: dict,

@@ -120,6 +120,10 @@ class _Strategies:
         return _Integers(min_value, max_value)
 
     @staticmethod
+    def booleans() -> SearchStrategy:
+        return _SampledFrom([False, True])
+
+    @staticmethod
     def floats(min_value: float, max_value: float) -> SearchStrategy:
         return _Floats(min_value, max_value)
 

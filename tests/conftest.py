@@ -46,6 +46,21 @@ if not _HAVE_TIMEOUT_PLUGIN:
             signal.signal(signal.SIGALRM, old)
 
 
+# ------------------------------------------------------------- compile churn
+# Every live jitted executable keeps its JIT-compiled code resident in the
+# XLA CPU client. Across the full suite (~350 tests, most compiling several
+# programs) that accumulates until a later backend_compile segfaults inside
+# the compiler — deterministically at whichever test crosses the threshold,
+# while any subset of the suite passes. Dropping the executable caches at
+# module teardown bounds resident code by the heaviest module instead of the
+# whole run; cross-module cache reuse is negligible (modules compile their
+# own shapes), so the wall-clock cost is noise.
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_compile_residency():
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture
 def trace_guard():
     """Factory fixture for repro.analysis.TraceGuard: returns the class so a

@@ -499,3 +499,122 @@ def test_paged_pages_sized_by_request_not_bucket(cfg, params):
     assert eng._leases[0].num_pages == 1  # one page, despite the 32-bucket
     done = {c.rid: c.tokens for c in eng.drain()}
     assert np.array_equal(done[rid], _solo(cfg, params, p, 3, 32))
+
+
+# -------------------------------------------------------- chunked prefill
+
+
+def test_chunked_prefill_matches_monolithic(cfg, params):
+    """Token-budget chunked prefill is a pure scheduling change: byte-identical
+    tokens vs the monolithic paged engine on a mixed long/short workload
+    (including a 1-token request), ONE chunk-prefill trace regardless of
+    prompt lengths or chunk counts, and a clean sanitizer."""
+    key = jax.random.PRNGKey(40)
+    reqs = [(_prompt(jax.random.fold_in(key, i), n), m)
+            for i, (n, m) in enumerate(
+                [(37, 6), (5, 4), (21, 1), (12, 8), (40, 3)])]
+
+    def run(**kw):
+        eng = ContinuousBatchingEngine(cfg, params, max_slots=3, max_seq=64,
+                                       paged=True, page_size=8, num_pages=40,
+                                       sanitize=True, **kw)
+        rids = [eng.submit(p, n) for p, n in reqs]
+        done = {c.rid: c.tokens for c in eng.drain()}
+        assert eng.sanitizer_report() == []
+        return eng, [done[r] for r in rids]
+
+    _, base = run()
+    for budget in (4, 16):
+        eng, out = run(prefill_token_budget=budget)
+        for a, b in zip(base, out):
+            assert np.array_equal(a, b)
+        assert eng.stats["prefill_traces"] == 1
+        assert eng.stats["decode_traces"] == 1
+        assert eng.stats["prefill_chunks"] >= sum(
+            -(-p.shape[1] // budget) for p, _ in reqs)
+
+
+def test_chunked_prefill_no_decode_before_final_chunk(cfg, params):
+    """Mid-prefill a slot is invisible to decode: no decode step runs (and the
+    slot never activates) until the prompt's final chunk adopts its pages."""
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2, max_seq=64,
+                                   paged=True, page_size=8,
+                                   prefill_token_budget=8, sanitize=True)
+    p = _prompt(jax.random.PRNGKey(41), 29)  # ceil(29/8) = 4 chunks
+    rid = eng.submit(p, 5)
+    for i in range(3):  # chunks 1..3: 24 of 29 tokens resident
+        eng.step()
+        assert eng.num_active == 0 and eng.stats["decode_steps"] == 0
+        assert len(eng._partials) == 1
+        assert eng._partials[0].done == 8 * (i + 1)
+        # the reserved slot's device page row stays INVALID throughout
+        assert (np.asarray(eng._table.page_map[eng._partials[0].slot])
+                == eng._table.invalid_page).all()
+    done = {c.rid: c.tokens for c in eng.drain()}
+    assert eng.stats["prefill_chunks"] == 4
+    assert np.array_equal(done[rid], _solo(cfg, params, p, 5, 64))
+
+
+def test_chunked_prefill_radix_sharing_and_cow(cfg, params):
+    """Radix hits still share pages under chunking: a common (non-page-
+    aligned) system prompt is served from cached pages with a CoW copy of the
+    partial page, only the tail is chunked, and tokens stay byte-identical
+    to the monolithic engine's."""
+    key = jax.random.PRNGKey(42)
+    sys_p = _prompt(jax.random.fold_in(key, 100), 19)  # 19 % 8 != 0 -> CoW
+    reqs = [(jnp.concatenate(
+        [sys_p, _prompt(jax.random.fold_in(key, i), 6 + 3 * i)], 1), 4 + i)
+        for i in range(3)]
+
+    def run(**kw):
+        eng = ContinuousBatchingEngine(cfg, params, max_slots=2, max_seq=64,
+                                       paged=True, page_size=8, num_pages=40,
+                                       sanitize=True, **kw)
+        rids = [eng.submit(p, n) for p, n in reqs]
+        done = {c.rid: c.tokens for c in eng.drain()}
+        assert eng.sanitizer_report() == []
+        return eng, [done[r] for r in rids]
+
+    _, base = run()
+    eng, out = run(prefill_token_budget=8)
+    for a, b in zip(base, out):
+        assert np.array_equal(a, b)
+    assert eng.stats["radix_hits"] == 2
+    assert eng.stats["cow_copies"] == 2
+    assert eng.stats["radix_matched_tokens"] > 0
+    # shared tokens never re-prefilled: chunked tokens cover only the tails
+    total = sum(p.shape[1] for p, _ in reqs)
+    assert eng.stats["prefill_tokens"] == \
+        total - eng.stats["radix_matched_tokens"]
+
+
+def test_chunked_prefill_validation(cfg, params):
+    with pytest.raises(ValueError, match="needs paged=True"):
+        ContinuousBatchingEngine(cfg, params, max_slots=2, max_seq=32,
+                                 prefill_token_budget=8)
+    with pytest.raises(ValueError, match="must be >= 1"):
+        ContinuousBatchingEngine(cfg, params, max_slots=2, max_seq=32,
+                                 paged=True, page_size=8,
+                                 prefill_token_budget=0)
+
+
+# ------------------------------------------- prompt bucket max_seq headroom
+
+
+def test_prompt_of_max_seq_rejected_with_headroom_error(cfg, params):
+    """Regression: a prompt of exactly max_seq must be rejected up front with
+    an error naming the missing decode headroom — bucket rounding clamps at
+    max_seq, so such a prompt would otherwise land in a bucket with zero room
+    for the first decoded token."""
+    eng = ContinuousBatchingEngine(cfg, params, max_slots=2, max_seq=32,
+                                   prompt_bucket=8)
+    with pytest.raises(ValueError, match="no headroom"):
+        eng.submit(_prompt(jax.random.PRNGKey(43), 32), 1)
+    with pytest.raises(ValueError, match="no headroom"):
+        eng._bucket_len(32)  # the guard also covers direct callers
+    # the boundary that IS admissible: prompt + gen == max_seq exactly, with
+    # the bucket rounding the prompt up to the max_seq clamp
+    p = _prompt(jax.random.PRNGKey(44), 31)
+    rid = eng.submit(p, 1)
+    done = {c.rid: c.tokens for c in eng.drain()}
+    assert np.array_equal(done[rid], _solo(cfg, params, p, 1, 32))

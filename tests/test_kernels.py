@@ -350,6 +350,171 @@ def test_slot_table_write_token_respects_invalid_pages():
     assert float(jnp.abs(out).max()) == 0.0
 
 
+# ------------------------------------------------- ragged varlen prefill
+
+
+def _ragged_case(page_size, block_q, *, dt=jnp.float32):
+    """Packed varlen chunk over a paged pool: three sequences at different
+    position offsets (a chunked continuation, a fresh short prompt, a suffix
+    after a shared prefix), ragged tails, a trailing dead pad block, and
+    INVALID pages past each sequence's live range. Returns the packed operands
+    plus per-sequence dense (q, k, v, base, rows) for the monolithic oracle."""
+    Hkv, G, hd = 2, 2, 16
+    H = Hkv * G
+    pps = 4
+    num_pages = 3 * pps
+    INV = num_pages
+    # (first query position, #queries); context covers [0, base + nq)
+    seqs = [(page_size + 1, page_size - 1), (0, 5), (3, 2 * page_size)]
+    ks = jax.random.split(KEY, 2 + 3 * len(seqs))
+    # unmapped pages hold huge garbage: masking must keep it out entirely
+    k_pool = jax.random.normal(ks[0], (num_pages, Hkv, page_size, hd),
+                               jnp.float32) * 1e3
+    v_pool = jax.random.normal(ks[1], (num_pages, Hkv, page_size, hd),
+                               jnp.float32) * 1e3
+    pm = jnp.full((len(seqs), pps), INV, jnp.int32)
+    next_page = 0
+    packed_q, block_seq, block_pos, block_len, dense = [], [], [], [], []
+    for i, (base, nq) in enumerate(seqs):
+        ctx = base + nq
+        n_pages = -(-ctx // page_size)
+        pages = jnp.arange(next_page, next_page + n_pages)
+        next_page += n_pages
+        pm = pm.at[i, :n_pages].set(pages)
+        kk = jax.random.split(ks[2 + i], 3)
+        kd = jax.random.normal(kk[0], (ctx, Hkv, hd), jnp.float32)
+        vd = jax.random.normal(kk[1], (ctx, Hkv, hd), jnp.float32)
+        qd = jax.random.normal(kk[2], (nq, H, hd), jnp.float32)
+        pad = n_pages * page_size - ctx
+        put = lambda pool, d: pool.at[pages].set(
+            jnp.pad(d, ((0, pad), (0, 0), (0, 0)))
+            .reshape(n_pages, page_size, Hkv, hd).transpose(0, 2, 1, 3))
+        k_pool = put(k_pool, kd)
+        v_pool = put(v_pool, vd)
+        n_blk = -(-nq // block_q)
+        start = sum(a.shape[0] for a in packed_q)
+        packed_q.append(jnp.pad(qd, ((0, n_blk * block_q - nq),
+                                     (0, 0), (0, 0))))
+        for b in range(n_blk):
+            block_seq.append(i)
+            block_pos.append(base + b * block_q)
+            block_len.append(min(block_q, nq - b * block_q))
+        rows = [start + b * block_q + t
+                for b in range(n_blk)
+                for t in range(min(block_q, nq - b * block_q))]
+        dense.append((qd, kd, vd, base, rows))
+    packed_q.append(jnp.zeros((block_q, H, hd)))  # dead pad block
+    block_seq.append(-1)
+    block_pos.append(0)
+    block_len.append(0)
+    q = jnp.concatenate(packed_q).astype(dt)
+    mk = lambda xs: jnp.asarray(xs, jnp.int32)
+    return (q, k_pool.astype(dt), v_pool.astype(dt), mk(block_seq),
+            mk(block_pos), mk(block_len), pm, dense)
+
+
+def _dense_causal_chunk(qd, kd, vd, base):
+    """Monolithic padded-prefill oracle: chunk queries at absolute offset
+    ``base`` attend densely + causally over the full context [0, base+nq)."""
+    nq, H, hd = qd.shape
+    Hkv = kd.shape[1]
+    qg = qd.reshape(nq, Hkv, H // Hkv, hd)
+    s = jnp.einsum("qkgd,tkd->kgqt", qg.astype(jnp.float32),
+                   kd.astype(jnp.float32)) * (hd ** -0.5)
+    causal = jnp.arange(kd.shape[0])[None, :] <= (base + jnp.arange(nq))[:, None]
+    s = jnp.where(causal[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("kgqt,tkd->kgqd", w, vd.astype(jnp.float32))
+    return out.transpose(2, 0, 1, 3).reshape(nq, H, hd).astype(qd.dtype)
+
+
+@pytest.mark.parametrize("page_size", [4, 8, 16])
+@pytest.mark.parametrize("block_q", [4, 8])
+def test_ragged_prefill_matches_gather_ref(page_size, block_q):
+    """Scalar-prefetch page-map walk == gather-then-attend oracle across page
+    sizes and block widths; ragged tails, pad blocks and unmapped pages emit
+    exact zeros with zero attention mass (hardened finish)."""
+    q, k_pool, v_pool, bs, bp, bl, pm, _ = _ragged_case(page_size, block_q)
+    out, m, l = ops.ragged_prefill_attention(q, k_pool, v_pool, bs, bp, bl,
+                                             pm, block_q=block_q)
+    oref = ref.ragged_prefill_attention_ref(q, k_pool, v_pool, bs, bp, bl,
+                                            pm, block_q=block_q)
+    assert float(jnp.abs(out - oref).max()) < 1e-4
+    live = (jnp.arange(block_q)[None] < bl[:, None]).reshape(-1)
+    assert float(jnp.abs(out[~live]).max()) == 0.0
+    assert float(l[~live].max()) == 0.0
+    assert bool((l[live] > 0).all())
+
+
+@pytest.mark.parametrize("page_size", [4, 8, 16])
+def test_ragged_prefill_token_identical_to_dense(page_size):
+    """Each packed sequence's rows equal a monolithic dense causal prefill of
+    the same chunk — across position offsets and ragged prompt lengths. This
+    is the invariant that makes chunked == monolithic prefill token-identical."""
+    block_q = 8
+    q, k_pool, v_pool, bs, bp, bl, pm, dense = _ragged_case(page_size, block_q)
+    out, _, _ = ops.ragged_prefill_attention(q, k_pool, v_pool, bs, bp, bl,
+                                             pm, block_q=block_q)
+    for qd, kd, vd, base, rows in dense:
+        want = _dense_causal_chunk(qd, kd, vd, base)
+        assert float(jnp.abs(out[jnp.asarray(rows)] - want).max()) < 1e-4
+
+
+def test_ragged_prefill_lse_stats_merge():
+    """The kernel's (m, l) statistics LSE-merge two disjoint page subsets of
+    one sequence to the same result as its full page map — the property the
+    fused-prefix merge in the chunked prefill path relies on."""
+    from repro.models.attention import merge_attention
+    page_size, Hkv, G, hd, bq = 8, 2, 2, 16, 8
+    H = Hkv * G
+    nq = 2 * page_size
+    base = 2 * page_size  # queries sit over pages 2..3; pages 0..1 are context
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (nq, H, hd))
+    k_pool = jax.random.normal(ks[1], (4, Hkv, page_size, hd))
+    v_pool = jax.random.normal(ks[2], (4, Hkv, page_size, hd))
+    n_blk = nq // bq
+    bs = jnp.zeros((n_blk,), jnp.int32)
+    bp = base + jnp.arange(n_blk, dtype=jnp.int32) * bq
+    bl = jnp.full((n_blk,), bq, jnp.int32)
+    full, _, _ = ops.ragged_prefill_attention(
+        q, k_pool, v_pool, bs, bp, bl, jnp.array([[0, 1, 2, 3]], jnp.int32),
+        block_q=bq)
+    INV = 4
+    parts = []
+    for pm in ([[0, 1, INV, INV]], [[INV, INV, 2, 3]]):
+        o, m, l = ops.ragged_prefill_attention(
+            q, k_pool, v_pool, bs, bp, bl, jnp.array(pm, jnp.int32),
+            block_q=bq)
+        # (T, H, ...) -> (1, H, T, ...) part layout merge_attention expects
+        parts.append(((o * l[..., None]).transpose(1, 0, 2)[None],
+                      m.T[None], l.T[None]))
+    merged = merge_attention(parts).reshape(nq, H, hd)
+    assert float(jnp.abs(merged - full).max()) < 1e-4
+
+
+def test_ragged_prefill_bad_shapes_raise():
+    from repro.kernels.prefill_attention import ragged_prefill_attention_pallas
+    pool = jnp.zeros((4, 2, 8, 16))
+    bs = jnp.zeros((2,), jnp.int32)
+    pm = jnp.zeros((1, 2), jnp.int32)
+    with pytest.raises(ValueError, match="not divisible"):
+        ops.ragged_prefill_attention(jnp.zeros((10, 4, 16)), pool, pool,
+                                     bs, bs, bs, pm, block_q=8)
+    with pytest.raises(ValueError, match="does not match pool"):
+        ragged_prefill_attention_pallas(jnp.zeros((2, 1, 8, 16)), pool, pool,
+                                        bs, bs, bs, pm, block_q=8,
+                                        interpret=True)
+    with pytest.raises(ValueError, match="block_pos"):
+        ragged_prefill_attention_pallas(jnp.zeros((2, 2, 8, 16)), pool, pool,
+                                        bs, jnp.zeros((3,), jnp.int32), bs,
+                                        pm, block_q=8, interpret=True)
+    with pytest.raises(ValueError, match="page_map"):
+        ragged_prefill_attention_pallas(jnp.zeros((2, 2, 8, 16)), pool, pool,
+                                        bs, bs, bs, jnp.zeros((2,), jnp.int32),
+                                        block_q=8, interpret=True)
+
+
 @pytest.mark.parametrize("S,hd,w,blk", [
     (256, 32, 64, 64),
     pytest.param(512, 64, 100, 128, marks=pytest.mark.slow),  # largest interp case
