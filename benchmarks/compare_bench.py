@@ -34,6 +34,7 @@ def structural_gates(report: dict):
     sp = report["shared_prefix"]
     ck = report["chunked_prefill"]
     ra = report["ragged_prefill"]
+    au = report["audited"]
     stats = report["throughput"]["engine_stats"]
     return [
         ("bench self-reported pass", bool(report["pass"])),
@@ -61,6 +62,12 @@ def structural_gates(report: dict):
          ra["flops_ratio"] < 1.0),
         ("ragged packing cuts padded-bucket HBM bytes",
          ra["hbm_bytes_ratio"] < 1.0),
+        ("wire audit report empty", au["audit_findings"] == 0),
+        ("wire auditor saw traffic", au["audited_messages"] > 0),
+        ("audited == unaudited outputs",
+         bool(au["byte_identical_outputs"])),
+        ("audited wire_bytes match unaudited",
+         bool(au["wire_bytes_match"])),
     ]
 
 

@@ -51,6 +51,7 @@ from kernel_bench import ragged_prefill_analytics
 from repro.analysis import TraceGuard
 from repro.configs.case_study import tiny_zoo
 from repro.core import c2c, fuser as F
+from repro.core.fedrefine import FedRefineSystem, Participant
 from repro.launch.engine import ContinuousBatchingEngine
 from repro.launch.serve import BatchedServer
 from repro.models import transformer as T
@@ -426,6 +427,55 @@ def run_sanitized(rx, p_rx, *, vocab, n_requests=6, shared_len=26,
     }
 
 
+def run_audited(*, vocab, n_requests=6, prompt_len=6, gen=6):
+    """Wire-audit gate: mixed C2C/T2T traffic through
+    ``FedRefineSystem.build(audit_wire=True)`` must (a) finish — every
+    transmitted message passes the protocol's WireSchema check (media,
+    dtypes, codec stages, commload byte accounting) — with an empty audit
+    report, and (b) emit byte-identical tokens and identical per-request
+    wire_bytes to the unaudited system. CI fails on any finding."""
+    zoo = tiny_zoo(vocab_size=vocab)
+    key = jax.random.PRNGKey(29)
+    members = [
+        Participant(cfg.name, cfg,
+                    T.init_params(cfg, jax.random.fold_in(key, i),
+                                  jnp.float32))
+        for i, cfg in enumerate([zoo["receiver"], *zoo["transmitters"]])]
+    rx = members[0].name
+    prompts = [jax.random.randint(jax.random.fold_in(key, 100 + i),
+                                  (1, prompt_len), 0, vocab)
+               for i in range(n_requests)]
+
+    outs = {}
+    auditor = None
+    for name, audit in (("audited", True), ("plain", False)):
+        sys_ = FedRefineSystem.build(members, audit_wire=audit)
+        rids = [sys_.submit(rx, p, gen,
+                            protocol="c2c" if i % 2 else "t2t",
+                            key=jax.random.PRNGKey(7))
+                for i, p in enumerate(prompts)]
+        done = sys_.drain(rx)  # raises WireAuditError on violations
+        outs[name] = {
+            "tokens": [np.asarray(done[r]["tokens"]) for r in rids],
+            "wire_bytes": [done[r].get("wire_bytes", 0) for r in rids]}
+        if audit:
+            auditor = sys_.wire
+
+    return {
+        "audit_findings": len(auditor.report()),
+        "audited_messages": len(auditor.records),
+        "audited_protocols": sorted({r.protocol for r in auditor.records}),
+        "audited_wire_bytes": int(sum(r.measured_bytes
+                                      for r in auditor.records)),
+        "byte_identical_outputs": bool(all(
+            np.array_equal(a, b)
+            for a, b in zip(outs["audited"]["tokens"],
+                            outs["plain"]["tokens"]))),
+        "wire_bytes_match": bool(
+            outs["audited"]["wire_bytes"] == outs["plain"]["wire_bytes"]),
+    }
+
+
 # ------------------------------------------------------- chunked prefill
 
 
@@ -668,6 +718,15 @@ def main() -> int:
           f"{sz['leak_report_findings']} leak-report finding(s), "
           f"byte-identical outputs: {sz['byte_identical_outputs']}")
 
+    # --- wire-contract audit over mixed C2C/T2T federation traffic -------
+    au = run_audited(vocab=vocab)
+    print(f"\naudited run: {au['audited_messages']} message(s) "
+          f"({'/'.join(au['audited_protocols'])}) totalling "
+          f"{au['audited_wire_bytes']} B on wire, "
+          f"{au['audit_findings']} audit finding(s), "
+          f"byte-identical outputs: {au['byte_identical_outputs']}, "
+          f"wire-bytes match: {au['wire_bytes_match']}")
+
     # --- chunked prefill vs monolithic under mixed long-prompt traffic ----
     if args.smoke:
         ck = run_chunked(rx, p_rx, vocab=vocab, n_short=8, short_every=8,
@@ -747,6 +806,19 @@ def main() -> int:
     if not sz["byte_identical_outputs"]:
         print("FAIL: sanitize=True changed decode outputs")
         ok = False
+    if au["audit_findings"] != 0:
+        print("FAIL: wire audit report is non-empty after drain")
+        ok = False
+    if au["audited_messages"] == 0:
+        print("FAIL: audited run transmitted no messages — the auditor "
+              "was not on the wire path")
+        ok = False
+    if not au["byte_identical_outputs"]:
+        print("FAIL: audit_wire=True changed decode outputs")
+        ok = False
+    if not au["wire_bytes_match"]:
+        print("FAIL: audit_wire=True changed per-request wire_bytes")
+        ok = False
     if not ck["byte_identical_outputs"]:
         print("FAIL: chunked prefill changed decode outputs")
         ok = False
@@ -783,6 +855,7 @@ def main() -> int:
             "paged_kernel": pk,
             "shared_prefix": sp,
             "sanitized": sz,
+            "audited": au,
             "chunked_prefill": ck,
             "ragged_prefill": ra,
             "pass": ok,

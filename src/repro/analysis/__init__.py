@@ -13,6 +13,19 @@ lifecycles):
   ``lint_paths``) tracking every :class:`~repro.models.cache.PageLease` from
   origin to sink: leaks, double-release, use-after-release, shared writes
   without CoW, allocator mutation inside jit-reachable code.
+- :mod:`repro.analysis.wire` — wire-contract & privacy dataflow pass
+  (WIR001–WIR005, runs inside ``lint_paths``): statically proves no private
+  value (dense KV stacks, raw prompt/token ids, checkpoint weights) reaches
+  the federation wire outside the sanctioned codec path, that every
+  ``prepare()`` byte-accounts what it ships, and that codec pipelines carry
+  every stage their :class:`~repro.core.protocol.WireSchema` declares.
+- :mod:`repro.analysis.wire_audit` — :class:`WireAuditor`, the runtime twin:
+  a wrapping :class:`~repro.core.transport.Channel` that verifies every
+  encoded message against the protocol's WireSchema (media, dtypes, stages,
+  commload byte accounting, QoS byte budget) with call-site provenance;
+  ``FedRefineSystem.build(..., audit_wire=True)`` threads it in.
+- :mod:`repro.analysis.sarif` — SARIF 2.1.0 serialisation of findings
+  (``python -m repro.analysis --sarif``), uploaded by CI as an artifact.
 - :mod:`repro.analysis.sanitizer` — :class:`PageSanitizer`, a drop-in
   :class:`~repro.models.cache.PageAllocator` with per-page shadow holders and
   grant-site provenance; the engine's ``sanitize=True`` mode feeds it every
@@ -26,7 +39,10 @@ from repro.analysis.lint import (StaleSuppression, audit_suppressions,
                                  lint_paths)
 from repro.analysis.sanitizer import PageSanitizer, SanitizerError
 from repro.analysis.traceguard import TraceGuard, TraceGuardError
+from repro.analysis.wire_audit import (WireAuditError, WireAuditor,
+                                       WireRecord)
 
 __all__ = ["Finding", "RULES", "lint_paths", "audit_suppressions",
            "StaleSuppression", "PageSanitizer", "SanitizerError",
-           "TraceGuard", "TraceGuardError"]
+           "TraceGuard", "TraceGuardError", "WireAuditor", "WireAuditError",
+           "WireRecord"]

@@ -3,9 +3,11 @@
 Exit code 0 when the tree is clean, 1 when any finding survives
 suppression comments. Default output is one ``path:line:col: CODE[rule]
 message`` line per finding; ``--json`` emits a machine-readable report;
-``--audit-suppressions`` instead lists ``# lint: allow(...)`` comments
-whose rule no longer fires (exit 1 when any are stale, so CI can gate
-suppression rot the same way it gates findings).
+``--sarif`` emits a SARIF 2.1.0 log (code-scanning interchange format,
+uploaded as a CI artifact); ``--audit-suppressions`` instead lists
+``# lint: allow(...)`` comments whose rule no longer fires (exit 1 when
+any are stale, so CI can gate suppression rot the same way it gates
+findings).
 """
 from __future__ import annotations
 
@@ -26,6 +28,8 @@ def main(argv: Optional[List[str]] = None) -> int:
                         help="files or directories to lint (default: src)")
     parser.add_argument("--json", action="store_true", dest="as_json",
                         help="emit findings as a JSON report")
+    parser.add_argument("--sarif", action="store_true", dest="as_sarif",
+                        help="emit findings as a SARIF 2.1.0 log")
     parser.add_argument("--list-rules", action="store_true",
                         help="print the rule registry and exit")
     parser.add_argument("--audit-suppressions", action="store_true",
@@ -51,6 +55,11 @@ def main(argv: Optional[List[str]] = None) -> int:
         return 1 if stale else 0
 
     findings = lint_paths(args.paths or ["src"])
+    if args.as_sarif:
+        from repro.analysis.sarif import to_sarif
+
+        print(json.dumps(to_sarif(findings), indent=2))
+        return 1 if findings else 0
     if args.as_json:
         print(json.dumps({"findings": [f.to_dict() for f in findings],
                           "count": len(findings)}, indent=2))

@@ -885,8 +885,9 @@ def _mark_parent_calls(mod: Module) -> None:
 
 def _collect_findings(paths: Sequence[str]) -> Tuple[Project, List[Finding]]:
     """Run every pass over ``paths``; returns raw (pre-suppression) findings."""
-    # local import: ownership reuses this module's project/reachability model
+    # local imports: ownership + wire reuse this module's project/reachability
     from repro.analysis.ownership import check_ownership
+    from repro.analysis.wire import check_wire
 
     project, errors = load_project(paths)
     checker = _Checker(project)
@@ -903,6 +904,7 @@ def _collect_findings(paths: Sequence[str]) -> Tuple[Project, List[Finding]]:
         if id(info.node) in reachable:
             checker.check_traced(info)
     checker.findings.extend(check_ownership(project, reachable))
+    checker.findings.extend(check_wire(project, reachable))
     return project, checker.findings
 
 

@@ -98,6 +98,27 @@ _RULES = [
          "allocator / radix-index host state mutated from jit-reachable "
          "code — page bookkeeping under trace runs once per compile, not "
          "per call"),
+    Rule("WIR001", "private-on-wire",
+         "a private value (dense KV stack, raw prompt/token ids, model "
+         "weights) is passed directly to a wire sink "
+         "(Channel.encode/transmit) — wrap it via "
+         "stack_message/token_message so the codec pipeline sees it"),
+    Rule("WIR002", "message-outside-codec",
+         "transport.Message constructed outside core/transport or a "
+         "channel's encode/decode — ad-hoc wire messages bypass the schema "
+         "and byte accounting the WireAuditor enforces"),
+    Rule("WIR003", "unaccounted-wire-bytes",
+         "a FederationProtocol.prepare() ships tensors but returns a "
+         "PreparedRequest whose wire_bytes is missing or not derived from "
+         "commload / transmit / bytes_on_wire accounting"),
+    Rule("WIR004", "pipeline-drops-stage",
+         "a codec Pipeline omits a stage (quant/rephrase) that a WireSchema "
+         "in scope declares — the wire would carry media the protocol "
+         "contract says must be transformed first"),
+    Rule("WIR005", "jit-wire-sink",
+         "wire sink (Channel.encode/transmit or Message construction) "
+         "reachable from jit-traced code — serialization and byte "
+         "accounting would run at trace time only"),
 ]
 
 RULES: Dict[str, Rule] = {r.name: r for r in _RULES}

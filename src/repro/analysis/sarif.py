@@ -1,0 +1,72 @@
+"""SARIF 2.1.0 serialisation of linter findings.
+
+``python -m repro.analysis --sarif`` emits a Static Analysis Results
+Interchange Format log so CI (and code-scanning UIs) can ingest the
+TRCxxx/OWNxxx/WIRxxx families without parsing our plain-text format.
+Only the stable core of the spec is used: one ``run`` with a ``tool``
+declaring every registered rule, and one ``result`` per finding with a
+physical location. All rules map to SARIF level ``error`` — this repo's
+CI treats any surviving finding as a failure.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence
+
+from repro.analysis.rules import Finding, RULES
+
+SARIF_VERSION = "2.1.0"
+SARIF_SCHEMA = ("https://raw.githubusercontent.com/oasis-tcs/sarif-spec/"
+                "master/Schemata/sarif-schema-2.1.0.json")
+
+
+def _rule_descriptor(rule_name: str) -> Dict[str, Any]:
+    rule = RULES[rule_name]
+    return {
+        "id": rule.code,
+        "name": rule.name,
+        "shortDescription": {"text": rule.summary},
+        "defaultConfiguration": {"level": "error"},
+    }
+
+
+def _result(finding: Finding, rule_index: Dict[str, int]) -> Dict[str, Any]:
+    return {
+        "ruleId": finding.code,
+        "ruleIndex": rule_index[finding.rule],
+        "level": "error",
+        "message": {"text": f"[{finding.rule}] {finding.message}"},
+        "locations": [{
+            "physicalLocation": {
+                "artifactLocation": {"uri": finding.path.replace("\\", "/"),
+                                     "uriBaseId": "SRCROOT"},
+                "region": {"startLine": max(finding.line, 1),
+                           "startColumn": max(finding.col + 1, 1)},
+            },
+        }],
+    }
+
+
+def to_sarif(findings: Sequence[Finding]) -> Dict[str, Any]:
+    """Build a SARIF 2.1.0 log dict from linter findings.
+
+    The tool section always declares the *full* rule registry (not just
+    the rules that fired) so scanning UIs can show the family catalogue
+    even on a clean run."""
+    rule_names: List[str] = list(RULES)
+    rule_index = {name: i for i, name in enumerate(rule_names)}
+    return {
+        "$schema": SARIF_SCHEMA,
+        "version": SARIF_VERSION,
+        "runs": [{
+            "tool": {
+                "driver": {
+                    "name": "repro.analysis",
+                    "informationUri":
+                        "https://example.invalid/repro/analysis",
+                    "rules": [_rule_descriptor(n) for n in rule_names],
+                },
+            },
+            "originalUriBaseIds": {"SRCROOT": {"uri": "file:///"}},
+            "results": [_result(f, rule_index) for f in findings],
+        }],
+    }

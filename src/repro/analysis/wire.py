@@ -1,0 +1,499 @@
+"""Wire-contract & privacy dataflow pass (the WIR* rules).
+
+Statically proves that nothing private reaches the federation wire: the
+paper's promise is that heterogeneous LLMs collaborate by communicating KV
+caches *privacy-preservingly*, so raw prompt token ids, dense
+KVCache/KVStack tensors, slot-table pool pages, and checkpoint weights are
+**private sources**, and ``Channel.encode`` / ``Channel.transmit`` /
+``Message`` construction / ``FederationProtocol.prepare()`` are the **only
+sanctioned wire sinks**. Reuses lint.py's :class:`Project` call-graph and
+jit-reachability, and ownership.py's structural receiver classification
+(an expression is channel-like when its name tail contains
+wire/channel/pipeline/codec, when it is bound to a ``*Channel(...)`` /
+``Pipeline(...)`` constructor or annotation, or when it is ``self`` inside
+a ``*Channel``/``*Pipeline`` class).
+
+Rules emitted (runs inside ``lint_paths``; suppressions / JSON / SARIF /
+``--audit-suppressions`` come with the linter):
+
+- ``private-on-wire`` (WIR001): a private value is passed *directly* to a
+  channel-like ``.encode()`` / ``.transmit()`` — the sanctioned path wraps
+  it via ``stack_message`` / ``token_message`` so the codec pipeline (and
+  the WireAuditor's schema check) sees it as a typed ``Message``.
+- ``message-outside-codec`` (WIR002): ``transport.Message`` constructed
+  outside ``core/transport.py`` or a channel's ``encode``/``decode`` —
+  ad-hoc messages bypass schema verification and byte accounting.
+- ``unaccounted-wire-bytes`` (WIR003): a ``FederationProtocol`` subclass's
+  ``prepare()`` ships tensors (a transmit call, or a fused prefix in the
+  returned ``PreparedRequest``) without a ``wire_bytes=`` derived from
+  ``commload`` / ``.transmit()`` / ``.bytes_on_wire()`` accounting.
+- ``pipeline-drops-stage`` (WIR004): a codec ``Pipeline([...])`` literal
+  omits a stage a :class:`~repro.core.protocol.WireSchema` in the same
+  module declares (e.g. the schema says ``stages=("quant",)`` but the
+  pipeline has no quant codec).
+- ``jit-wire-sink`` (WIR005): a wire sink reachable from jit-traced code —
+  encode/serialize at trace time runs once per compile, not per request,
+  and its byte accounting silently freezes.
+
+Like the ownership pass, the analysis is biased in the quiet direction (CI
+treats any finding as failure): privacy is claimed only for values whose
+provenance is statically known (KV-typed annotations, ``export_stack`` /
+``dense_view`` / ``dequantize_stack`` / KV-constructor results, or
+names that read as prompt/token/weight media), and is *dropped* once a
+value passes a sanitioning producer (``quantize_stack``, ``rephrase``,
+``stack_message`` / ``token_message`` wrapping, a codec ``encode``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.lint import (FuncInfo, Module, Project, _walk_own,
+                                 qualify)
+from repro.analysis.rules import Finding
+
+#: modules that ARE the wire layer: sources/sinks defined there are the
+#: sanctioned implementation, not leaks
+_WIRE_LAYER_MODULES = ("repro.core.transport", "repro.analysis.wire_audit")
+
+_WIRE_SINK_METHODS = {"encode", "transmit"}
+_CHANNEL_TYPES = {"Channel", "IdentityChannel", "QuantChannel",
+                  "RephraseChannel", "Pipeline", "WireAuditor"}
+_CHANNEL_NAME_HINTS = ("wire", "channel", "pipeline", "codec")
+_CHANNEL_CLASS_HINTS = ("Channel", "Pipeline", "Auditor", "Codec")
+_PRIVATE_KV_TYPES = {"KVCache", "KVStack", "FusedPrefix", "SlotTable"}
+_PRIVATE_KV_METHODS = {"export_stack", "dense_view"}
+_PRIVATE_KV_FUNCS = {"dequantize_stack"}
+_SANITIZED_PRODUCERS = {"quantize_stack", "stack_message", "token_message",
+                        "rephrase", "encode"}
+_ACCOUNTING_METHODS = {"transmit", "transmit_stacks", "bytes_on_wire"}
+
+
+def check_wire(project: Project, reachable: Set[int]) -> List[Finding]:
+    """Run the WIR* rules over every parsed function/module."""
+    findings: List[Finding] = []
+    for mod in project.modules:
+        if _wire_layer(mod):
+            continue
+        _check_schema_pipelines(mod, findings)
+        _check_prepare_accounting(mod, findings)
+    for info in project.functions.values():
+        if isinstance(info.node, ast.Lambda) or _wire_layer(info.module):
+            continue
+        _check_function(info, findings)
+        if id(info.node) in reachable:
+            _check_jit_wire(info, findings)
+    return findings
+
+
+def _wire_layer(mod: Module) -> bool:
+    return mod.name in _WIRE_LAYER_MODULES
+
+
+# ------------------------------------------------------------- classifiers
+
+
+def _tail_name(expr: ast.expr) -> Optional[str]:
+    if isinstance(expr, ast.Name):
+        return expr.id
+    if isinstance(expr, ast.Attribute):
+        return expr.attr
+    return None
+
+
+def _ann_tail(mod: Module, ann: Optional[ast.expr]) -> Optional[str]:
+    if ann is None:
+        return None
+    qual = qualify(mod, ann)
+    if qual is None and isinstance(ann, ast.Constant) and \
+            isinstance(ann.value, str):
+        qual = ann.value
+    return None if qual is None else qual.rsplit(".", 1)[-1]
+
+
+def _call_tail(mod: Module, expr: ast.expr) -> Optional[str]:
+    if not isinstance(expr, ast.Call):
+        return None
+    qual = qualify(mod, expr.func)
+    if qual is not None:
+        return qual.rsplit(".", 1)[-1]
+    if isinstance(expr.func, ast.Attribute):
+        return expr.func.attr
+    return None
+
+
+def _tokens_name(name: str) -> bool:
+    low = name.lower()
+    return ("prompt" in low or low == "tokens" or low.endswith("_tokens") or
+            "token_id" in low)
+
+
+def _weights_name(name: str) -> bool:
+    low = name.lower()
+    return (low in ("params", "weights", "checkpoint") or
+            low.endswith(("_params", "_weights")))
+
+
+def _channel_locals(info: FuncInfo) -> Set[str]:
+    """Local names statically known to hold a Channel (annotation tails and
+    direct constructor assignments — ownership.py's classifier shape)."""
+    fn = info.node
+    out: Set[str] = set()
+    if isinstance(fn, ast.Lambda):
+        return out
+    for arg in (list(fn.args.posonlyargs) + list(fn.args.args) +
+                list(fn.args.kwonlyargs)):
+        if _ann_tail(info.module, arg.annotation) in _CHANNEL_TYPES:
+            out.add(arg.arg)
+    for node in _walk_own(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name):
+            if _call_tail(info.module, node.value) in _CHANNEL_TYPES:
+                out.add(node.targets[0].id)
+        elif isinstance(node, ast.AnnAssign) and \
+                isinstance(node.target, ast.Name) and \
+                _ann_tail(info.module, node.annotation) in _CHANNEL_TYPES:
+            out.add(node.target.id)
+    return out
+
+
+def _channel_like(info: FuncInfo, expr: ast.expr,
+                  channels: Set[str]) -> bool:
+    if isinstance(expr, ast.Name) and expr.id == "self":
+        cls = info.cls or ""
+        return any(h in cls for h in _CHANNEL_CLASS_HINTS)
+    tail = _tail_name(expr)
+    if tail is None:
+        return False
+    if isinstance(expr, ast.Name) and tail in channels:
+        return True
+    low = tail.lower()
+    return any(h in low for h in _CHANNEL_NAME_HINTS)
+
+
+def _private_producer(mod: Module, expr: ast.expr) -> Optional[str]:
+    """Description of the private medium ``expr`` produces, if any."""
+    if not isinstance(expr, ast.Call):
+        return None
+    if isinstance(expr.func, ast.Attribute) and \
+            expr.func.attr in _PRIVATE_KV_METHODS:
+        return f"a dense KV tensor (.{expr.func.attr}() result)"
+    tail = _call_tail(mod, expr)
+    if tail in _PRIVATE_KV_FUNCS:
+        return "a dense KV stack (dequantize_stack result)"
+    if tail in _PRIVATE_KV_TYPES:
+        return f"a dense {tail} tensor"
+    return None
+
+
+def _sanitized_producer(mod: Module, expr: ast.expr) -> bool:
+    if not isinstance(expr, ast.Call):
+        return False
+    if isinstance(expr.func, ast.Attribute) and \
+            expr.func.attr in _SANITIZED_PRODUCERS:
+        return True
+    return _call_tail(mod, expr) in _SANITIZED_PRODUCERS
+
+
+def _private_locals(info: FuncInfo) -> Dict[str, str]:
+    """Map local names to a description of the private medium they hold."""
+    fn = info.node
+    mod = info.module
+    out: Dict[str, str] = {}
+    sanitized: Set[str] = set()
+    if isinstance(fn, ast.Lambda):
+        return out
+    for arg in (list(fn.args.posonlyargs) + list(fn.args.args) +
+                list(fn.args.kwonlyargs)):
+        tail = _ann_tail(mod, arg.annotation)
+        if tail in _PRIVATE_KV_TYPES:
+            out[arg.arg] = f"a dense {tail} tensor"
+        elif _tokens_name(arg.arg):
+            out[arg.arg] = "raw prompt/token ids"
+        elif _weights_name(arg.arg):
+            out[arg.arg] = "model weights"
+    for node in _walk_own(fn):
+        tgt: Optional[ast.expr] = None
+        val: Optional[ast.expr] = None
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt, val = node.targets[0], node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            tgt, val = node.target, node.value
+            tail = _ann_tail(mod, node.annotation)
+            if isinstance(tgt, ast.Name) and tail in _PRIVATE_KV_TYPES:
+                out[tgt.id] = f"a dense {tail} tensor"
+        if not isinstance(tgt, ast.Name) or val is None:
+            continue
+        desc = _private_producer(mod, val)
+        if desc is not None:
+            out[tgt.id] = desc
+        elif _sanitized_producer(mod, val):
+            sanitized.add(tgt.id)
+        elif _tokens_name(tgt.id):
+            out.setdefault(tgt.id, "raw prompt/token ids")
+        elif _weights_name(tgt.id):
+            out.setdefault(tgt.id, "model weights")
+    for name in sanitized:
+        out.pop(name, None)
+    return out
+
+
+def _is_message_ctor(mod: Module, call: ast.Call) -> bool:
+    qual = qualify(mod, call.func)
+    return qual is not None and qual.endswith("transport.Message")
+
+
+def _is_codec_method(info: FuncInfo) -> bool:
+    """encode/decode defined on a class — a channel implementation, the one
+    place ad-hoc Message manipulation is the sanctioned job."""
+    fn = info.node
+    return info.cls is not None and not isinstance(fn, ast.Lambda) and \
+        fn.name in ("encode", "decode")
+
+
+# -------------------------------------------------- WIR001 / WIR002 per-fn
+
+
+def _check_function(info: FuncInfo, findings: List[Finding]) -> None:
+    mod = info.module
+    codec_method = _is_codec_method(info)
+    channels = _channel_locals(info)
+    private = _private_locals(info)
+    for node in _walk_own(info.node):
+        if not isinstance(node, ast.Call):
+            continue
+        if _is_message_ctor(mod, node):
+            if not codec_method:
+                findings.append(Finding(
+                    mod.path, node.lineno, node.col_offset,
+                    "message-outside-codec",
+                    "transport.Message constructed outside core/transport "
+                    "or a channel's encode/decode — build wire messages "
+                    "via stack_message/token_message so schema and byte "
+                    "accounting apply"))
+            continue
+        if codec_method:
+            continue
+        if not (isinstance(node.func, ast.Attribute) and
+                node.func.attr in _WIRE_SINK_METHODS and
+                _channel_like(info, node.func.value, channels)):
+            continue
+        sink = node.func.attr
+        for arg in list(node.args) + [k.value for k in node.keywords]:
+            desc: Optional[str] = None
+            if isinstance(arg, ast.Name):
+                desc = private.get(arg.id)
+            else:
+                desc = _private_producer(mod, arg)
+            if desc is not None:
+                findings.append(Finding(
+                    mod.path, node.lineno, node.col_offset,
+                    "private-on-wire",
+                    f"{desc} passed directly to a wire sink "
+                    f"(.{sink}()) — wrap it via stack_message/"
+                    "token_message so the codec pipeline sees it"))
+
+
+# --------------------------------------------------------- WIR005 (jit)
+
+
+def _check_jit_wire(info: FuncInfo, findings: List[Finding]) -> None:
+    mod = info.module
+    channels = _channel_locals(info)
+    for node in _walk_own(info.node):
+        if not isinstance(node, ast.Call):
+            continue
+        if _is_message_ctor(mod, node):
+            what = "transport.Message constructed"
+        elif isinstance(node.func, ast.Attribute) and \
+                node.func.attr in _WIRE_SINK_METHODS and \
+                _channel_like(info, node.func.value, channels):
+            what = f"channel .{node.func.attr}() called"
+        else:
+            continue
+        findings.append(Finding(
+            mod.path, node.lineno, node.col_offset, "jit-wire-sink",
+            f"{what} inside jit-reachable code — wire serialization and "
+            "byte accounting would run at trace time only; transmit on "
+            "the host side of the step"))
+
+
+# -------------------------------------------------------- WIR004 (schemas)
+
+
+def _schema_decls(mod: Module) -> List[Tuple[ast.Call, str, Set[str]]]:
+    out: List[Tuple[ast.Call, str, Set[str]]] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        qual = qualify(mod, node.func) or ""
+        if qual.rsplit(".", 1)[-1] != "WireSchema":
+            continue
+        kw = {k.arg: k.value for k in node.keywords if k.arg}
+        proto = "?"
+        proto_expr = kw.get("protocol",
+                            node.args[0] if node.args else None)
+        if isinstance(proto_expr, ast.Constant) and \
+                isinstance(proto_expr.value, str):
+            proto = proto_expr.value
+        stages: Set[str] = set()
+        stages_expr = kw.get("stages")
+        if isinstance(stages_expr, (ast.Tuple, ast.List)):
+            stages = {e.value for e in stages_expr.elts
+                      if isinstance(e, ast.Constant) and
+                      isinstance(e.value, str)}
+        if stages:
+            out.append((node, proto, stages))
+    return out
+
+
+def _stage_of(channel_class: str) -> str:
+    low = channel_class.lower()
+    if "quant" in low:
+        return "quant"
+    if "rephrase" in low or "paraphrase" in low:
+        return "rephrase"
+    if "identity" in low:
+        return "identity"
+    return low
+
+
+def _check_schema_pipelines(mod: Module, findings: List[Finding]) -> None:
+    declared = _schema_decls(mod)
+    if not declared:
+        return
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        qual = qualify(mod, node.func) or ""
+        if qual.rsplit(".", 1)[-1] != "Pipeline" or not node.args or \
+                not isinstance(node.args[0], (ast.List, ast.Tuple)):
+            continue
+        stages: Set[str] = set()
+        for elt in node.args[0].elts:
+            if isinstance(elt, ast.Call):
+                tail = (qualify(mod, elt.func) or "").rsplit(".", 1)[-1]
+                if not tail and isinstance(elt.func, ast.Attribute):
+                    tail = elt.func.attr
+                stages.add(_stage_of(tail))
+        for _, proto, want in declared:
+            missing = sorted(want - stages)
+            if missing:
+                findings.append(Finding(
+                    mod.path, node.lineno, node.col_offset,
+                    "pipeline-drops-stage",
+                    f"Pipeline omits stage(s) {missing} declared by the "
+                    f"WireSchema for protocol {proto!r} in this module — "
+                    "the wire would carry media the contract says must be "
+                    "transformed"))
+
+
+# ------------------------------------------------------- WIR003 (prepare)
+
+
+def _protocol_classes(mod: Module) -> List[ast.ClassDef]:
+    out: List[ast.ClassDef] = []
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        for base in node.bases:
+            qual = qualify(mod, base) or ""
+            if qual.rsplit(".", 1)[-1] == "FederationProtocol":
+                out.append(node)
+                break
+    return out
+
+
+def _accounts(mod: Module, expr: ast.expr) -> bool:
+    """True when ``expr`` contains byte accounting: a commload call, or a
+    ``.transmit()`` / ``.transmit_stacks()`` / ``.bytes_on_wire()`` call."""
+    for node in ast.walk(expr):
+        if not isinstance(node, ast.Call):
+            continue
+        qual = qualify(mod, node.func) or ""
+        if "commload" in qual.split("."):
+            return True
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr in _ACCOUNTING_METHODS:
+            return True
+    return False
+
+
+def _bind_names(target: ast.expr, names: Set[str]) -> None:
+    if isinstance(target, ast.Name):
+        names.add(target.id)
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            _bind_names(elt, names)
+    elif isinstance(target, ast.Starred):
+        _bind_names(target.value, names)
+
+
+def _check_prepare_accounting(mod: Module,
+                              findings: List[Finding]) -> None:
+    for cls in _protocol_classes(mod):
+        for item in cls.body:
+            if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and item.name == "prepare":
+                _check_one_prepare(mod, item, findings)
+
+
+def _check_one_prepare(mod: Module, fn: ast.FunctionDef,
+                       findings: List[Finding]) -> None:
+    accounted: Set[str] = set()
+    transmits = False
+    prep_binds: Dict[str, ast.Call] = {}
+    returned: List[ast.Call] = []
+    for node in _walk_own(fn):
+        if isinstance(node, ast.Assign):
+            if _accounts(mod, node.value):
+                for tgt in node.targets:
+                    _bind_names(tgt, accounted)
+            if len(node.targets) == 1 and \
+                    isinstance(node.targets[0], ast.Name) and \
+                    _is_prepared_call(mod, node.value):
+                prep_binds[node.targets[0].id] = node.value  # type: ignore[index]
+        elif isinstance(node, ast.AugAssign):
+            if _accounts(mod, node.value) and \
+                    isinstance(node.target, ast.Name):
+                accounted.add(node.target.id)
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in ("transmit", "transmit_stacks"):
+            transmits = True
+    for node in _walk_own(fn):
+        if not isinstance(node, ast.Return) or node.value is None:
+            continue
+        val = node.value
+        if _is_prepared_call(mod, val):
+            returned.append(val)  # type: ignore[arg-type]
+        elif isinstance(val, ast.Name) and val.id in prep_binds:
+            returned.append(prep_binds[val.id])
+    for call in returned:
+        kw = {k.arg: k.value for k in call.keywords if k.arg}
+        fused = kw.get("fused")
+        ships = transmits or (
+            fused is not None and not (isinstance(fused, ast.Constant) and
+                                       fused.value is None))
+        if not ships:
+            continue
+        wb = kw.get("wire_bytes")
+        ok = wb is not None and (
+            _accounts(mod, wb) or
+            any(isinstance(n, ast.Name) and n.id in accounted
+                for n in ast.walk(wb)))
+        if not ok:
+            findings.append(Finding(
+                mod.path, call.lineno, call.col_offset,
+                "unaccounted-wire-bytes",
+                "prepare() ships tensors but the returned PreparedRequest "
+                "has no wire_bytes derived from commload / transmit / "
+                "bytes_on_wire accounting — the link model would charge "
+                "zero for this request"))
+
+
+def _is_prepared_call(mod: Module, expr: ast.expr) -> bool:
+    if not isinstance(expr, ast.Call):
+        return False
+    qual = qualify(mod, expr.func) or ""
+    return qual.rsplit(".", 1)[-1] == "PreparedRequest"

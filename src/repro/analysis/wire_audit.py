@@ -1,0 +1,236 @@
+"""Runtime wire auditor: the dynamic twin of the WIR* static pass.
+
+:class:`WireAuditor` is a wrapping :class:`~repro.core.transport.Channel`
+(mirroring :class:`~repro.analysis.sanitizer.PageSanitizer`'s drop-in
+pattern): it delegates encode/decode/byte accounting to the real wire
+channel, and verifies every **encoded** message against the per-protocol
+:class:`~repro.core.protocol.WireSchema` declared in
+``core/protocol.py``'s registry:
+
+- **media**: a dense stack / raw tokens may cross the link only if the
+  protocol's schema lists that medium;
+- **dtypes**: no int64/uint64/float64 or object payloads ever
+  (:data:`~repro.core.protocol.FORBIDDEN_WIRE_DTYPES`), and a dense stack
+  must ship at one of the schema's ``stack_dtypes`` (so a schema declaring
+  ``{"int8"}`` rejects dense bf16 KV on an identity wire);
+- **stages**: a schema declaring the ``"quant"`` stage rejects any message
+  still carrying a dense stack after encode — the codec dropped the stage;
+- **bytes**: measured ``bytes_on_wire`` is cross-checked against the
+  commload estimate (:meth:`WireSchema.estimate_wire_bytes`, or an explicit
+  ``expect(estimate=...)``) within the schema's declared tolerance, and
+  against the request's QoS byte budget (:meth:`set_budget`).
+
+Violations raise :class:`WireAuditError` naming the producing call site
+(stack summary, sanitizer-style); every violation is also retained for
+:meth:`report`, and every clean transmission is recorded with provenance
+in :attr:`records` — the engine-bench audited smoke gates an empty report
+plus a non-zero record count.
+
+``FedRefineSystem.build(..., audit_wire=True)`` threads an auditor in as
+the system wire; ``transmit_stacks`` announces each message's protocol via
+:meth:`expect` before transmitting. Zero-cost when off: without
+``audit_wire`` no auditor exists and the wire is untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import traceback
+from dataclasses import dataclass
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+import jax
+
+from repro.core import transport as TR
+from repro.core.protocol import (FORBIDDEN_WIRE_DTYPES, WIRE_SCHEMAS,
+                                 WireSchema)
+
+
+class WireAuditError(AssertionError):
+    """A wire-contract invariant was violated at runtime."""
+
+
+def _call_site(depth: int = 3) -> str:
+    """Innermost ``depth`` stack frames outside this module and the
+    transport layer — the transmission's provenance trail."""
+    frames: List[str] = []
+    for fr in reversed(traceback.extract_stack()):
+        fname = fr.filename.replace(os.sep, "/")
+        if fname.endswith(("analysis/wire_audit.py", "core/transport.py")):
+            continue
+        frames.append(f"{os.path.basename(fr.filename)}:{fr.lineno} "
+                      f"{fr.name}")
+        if len(frames) == depth:
+            break
+    return " <- ".join(frames) if frames else "<unknown>"
+
+
+def _dtype_name(leaf: Any) -> Optional[str]:
+    dtype = getattr(leaf, "dtype", None)
+    return None if dtype is None else str(dtype)
+
+
+def derive_schemas(wire: TR.Channel) -> Dict[str, WireSchema]:
+    """Default :data:`WIRE_SCHEMAS` adapted to the wire's actual codec
+    composition: a wire containing a :class:`~repro.core.transport.
+    QuantChannel` (directly or inside a Pipeline) declares the ``"quant"``
+    stage on the C2C schema (so byte estimates use the int8 layout and a
+    dense stack on the wire becomes a violation); a RephraseChannel
+    declares ``"rephrase"``. Pass explicit ``schemas=`` to override."""
+    stages: List[str] = []
+
+    def walk(ch: TR.Channel) -> None:
+        if isinstance(ch, TR.Pipeline):
+            for sub in ch.channels:
+                walk(sub)
+        elif isinstance(ch, TR.QuantChannel):
+            stages.append("quant")
+        elif isinstance(ch, TR.RephraseChannel):
+            stages.append("rephrase")
+
+    walk(wire)
+    schemas = dict(WIRE_SCHEMAS)
+    if stages:
+        schemas["c2c"] = dataclasses.replace(
+            schemas["c2c"], stages=tuple(stages))
+        if "rephrase" in stages:
+            schemas["t2t"] = dataclasses.replace(
+                schemas["t2t"], stages=("rephrase",))
+    return schemas
+
+
+@dataclass(frozen=True)
+class WireRecord:
+    """Provenance of one audited transmission."""
+
+    protocol: str
+    site: str
+    media: Tuple[str, ...]        # media of the *pre-encode* message
+    measured_bytes: int
+    estimated_bytes: int
+
+    def describe(self) -> str:
+        return (f"{self.protocol} message ({'+'.join(self.media) or 'empty'}"
+                f") {self.measured_bytes} B on wire "
+                f"(estimate {self.estimated_bytes} B) @ {self.site}")
+
+
+class WireAuditor(TR.Channel):
+    """A wire :class:`~repro.core.transport.Channel` that verifies every
+    encoded message against the protocol's declared :class:`WireSchema`.
+
+    Wraps the real channel (``WireAuditor(QuantChannel())``); the default
+    inner channel is the identity wire, matching ``FedRefineSystem``'s
+    default. Announce each message's protocol (and optionally an explicit
+    commload estimate) with :meth:`expect` before transmitting — the
+    context is sticky until the next :meth:`expect`."""
+
+    def __init__(self, inner: Optional[TR.Channel] = None, *,
+                 schemas: Optional[Mapping[str, WireSchema]] = None) -> None:
+        self.inner: TR.Channel = inner if inner is not None \
+            else TR.IdentityChannel()
+        self.schemas: Dict[str, WireSchema] = (
+            derive_schemas(self.inner) if schemas is None else dict(schemas))
+        self.records: List[WireRecord] = []
+        self._violations: List[str] = []
+        self._protocol: Optional[str] = None
+        self._estimate: Optional[int] = None
+        self._budget: Optional[int] = None
+
+    # ------------------------------------------------------------- context
+    def expect(self, protocol: str, *, estimate: Optional[int] = None
+               ) -> None:
+        """Declare the protocol (and optionally a commload byte estimate)
+        of the next transmission(s). Sticky until the next call."""
+        if protocol not in self.schemas:
+            raise WireAuditError(
+                f"expect({protocol!r}) at {_call_site()}: no WireSchema "
+                f"registered for this protocol (have "
+                f"{sorted(self.schemas)})")
+        self._protocol = protocol
+        self._estimate = estimate
+
+    def set_budget(self, max_bytes: Optional[int]) -> None:
+        """Per-request QoS byte ceiling (e.g. link bandwidth x latency
+        budget); ``None`` clears it."""
+        self._budget = max_bytes
+
+    def report(self) -> List[str]:
+        """All violations seen so far (empty on a clean run)."""
+        return list(self._violations)
+
+    # ------------------------------------------------------- channel duty
+    def encode(self, msg: TR.Message) -> TR.Message:
+        wire = self.inner.encode(msg)
+        self._verify(msg, wire)
+        return wire
+
+    def decode(self, msg: TR.Message) -> TR.Message:
+        return self.inner.decode(msg)
+
+    def bytes_on_wire(self, msg: TR.Message) -> int:
+        return self.inner.bytes_on_wire(msg)
+
+    # ---------------------------------------------------------- the audit
+    def _fail(self, protocol: str, message: str) -> None:
+        detail = (f"wire audit [{protocol}]: {message} "
+                  f"(produced at {_call_site()})")
+        self._violations.append(detail)
+        raise WireAuditError(detail)
+
+    def _verify(self, pre: TR.Message, wire: TR.Message) -> None:
+        proto = self._protocol
+        if proto is None:
+            self._fail("?", "message encoded with no expect() context — "
+                       "the producing protocol is unknown, so no schema "
+                       "can be enforced")
+            return
+        schema = self.schemas[proto]
+        # media
+        if wire.stack is not None and "stack" not in schema.media:
+            self._fail(proto, "a KV stack is on the wire but the schema "
+                       f"allows media {sorted(schema.media)}")
+        if wire.tokens is not None and "tokens" not in schema.media:
+            self._fail(proto, "raw token ids are on the wire but the "
+                       f"schema allows media {sorted(schema.media)}")
+        if wire.payload and not schema.media:
+            self._fail(proto, "codec payload on a wire whose schema "
+                       "declares no media at all")
+        # dtypes — every array leaf of the encoded message
+        for leaf in jax.tree_util.tree_leaves(wire):
+            name = _dtype_name(leaf)
+            if name is None or name == "object":
+                self._fail(proto, f"non-tensor payload {type(leaf).__name__}"
+                           " on the wire")
+            elif name in FORBIDDEN_WIRE_DTYPES:
+                self._fail(proto, f"forbidden wire dtype {name} "
+                           f"(never allowed: {sorted(FORBIDDEN_WIRE_DTYPES)})")
+        if wire.stack is not None and schema.stack_dtypes:
+            name = _dtype_name(wire.stack.k) or "?"
+            if name not in schema.stack_dtypes:
+                self._fail(proto, f"dense stack ships at dtype {name} but "
+                           f"the schema declares {sorted(schema.stack_dtypes)}")
+        # declared codec stages
+        if "quant" in schema.stages and wire.stack is not None:
+            self._fail(proto, "schema declares the 'quant' stage but the "
+                       "encoded message still carries a dense stack — the "
+                       "codec pipeline dropped the quantization stage")
+        # byte accounting
+        measured = self.inner.bytes_on_wire(wire)
+        estimate = self._estimate if self._estimate is not None \
+            else schema.estimate_wire_bytes(pre)
+        tol = schema.tolerance
+        if abs(measured - estimate) > tol * max(estimate, 1):
+            self._fail(proto, f"measured bytes_on_wire {measured} drifts "
+                       f"from the commload estimate {estimate} past the "
+                       f"declared tolerance {tol:g}")
+        for ceiling, what in ((schema.max_message_bytes, "schema"),
+                              (self._budget, "QoS budget")):
+            if ceiling is not None and measured > ceiling:
+                self._fail(proto, f"message is {measured} B on the wire, "
+                           f"over the {what} ceiling of {ceiling} B")
+        media = tuple(m for m, v in (("stack", pre.stack),
+                                     ("tokens", pre.tokens)) if v is not None)
+        self.records.append(WireRecord(
+            protocol=proto, site=_call_site(), media=media,
+            measured_bytes=int(measured), estimated_bytes=int(estimate)))

@@ -19,6 +19,7 @@ owns the participants/registry/wire, and drives the engines.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -59,11 +60,24 @@ class FedRefineSystem:
     @classmethod
     def build(cls, members: Sequence[Participant],
               channel: Optional[ParaphraseChannel] = None,
-              wire: Optional[TR.Channel] = None) -> "FedRefineSystem":
+              wire: Optional[TR.Channel] = None, *,
+              audit_wire: bool = False,
+              wire_schemas: Optional[dict] = None) -> "FedRefineSystem":
+        """``audit_wire=True`` wraps the wire in a
+        :class:`~repro.analysis.wire_audit.WireAuditor`: every transmitted
+        message is verified against the protocol's declared WireSchema
+        (media, dtypes, codec stages, commload byte accounting) and
+        violations raise naming the producing call site. ``wire_schemas``
+        overrides the registry defaults (else they are derived from the
+        wire's codec composition)."""
         reg = FuserRegistry({m.name: m.cfg for m in members})
         reg.ensure_all_pairs()
-        return cls({m.name: m for m in members}, reg, channel,
-                   wire or TR.IdentityChannel())
+        wire = wire or TR.IdentityChannel()
+        if audit_wire:
+            from repro.analysis.wire_audit import WireAuditor
+
+            wire = WireAuditor(wire, schemas=wire_schemas)
+        return cls({m.name: m for m in members}, reg, channel, wire)
 
     # ------------------------------------------------------------- scheduling
     def schedule(self, task: str, receiver: str, n_tx: int) -> List[str]:
@@ -87,6 +101,8 @@ class FedRefineSystem:
         """Steps 2–3: local prefill at each transmitter; export KV stacks and
         ship them through the wire channel. Returns (received stacks, total
         bytes the link carried)."""
+        if hasattr(self.wire, "expect"):  # WireAuditor: declare the protocol
+            self.wire.expect(protocol="c2c")
         stacks, wire_bytes = [], 0
         for n in tx_names:
             p = self.participants[n]
@@ -231,6 +247,10 @@ class FedRefineSystem:
             cfg_txs, rxp.cfg, seq=int(prompt.shape[1]), gen_steps=steps,
             link=link, qos=qos)
         proto = PROTOCOLS[decision["protocol"] if tx_names else "standalone"]
+        if hasattr(self.wire, "set_budget"):  # WireAuditor: QoS byte ceiling
+            budget = link.bandwidth_bps * qos.max_latency_s
+            self.wire.set_budget(
+                int(budget) if math.isfinite(budget) else None)
         prep = proto.prepare(self, receiver, prompt, tx_names, steps=steps,
                              key=key)
         toks = c2c.generate(rxp.cfg, rxp.params, prep.prompt, steps,

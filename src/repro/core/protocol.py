@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import abc
 from dataclasses import dataclass, field
-from typing import Dict, List, Literal, Optional
+from typing import (Any, Dict, FrozenSet, List, Literal, Optional, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -109,7 +109,7 @@ class FederationProtocol(abc.ABC):
         """End-to-end latency of one request under this protocol."""
 
     @abc.abstractmethod
-    def prepare(self, system, receiver: str, prompt: jax.Array,
+    def prepare(self, system: Any, receiver: str, prompt: jax.Array,
                 tx_names: List[str], *, steps: int, key: jax.Array,
                 gated: bool = True,
                 tx_prompts: Optional[Dict[str, jax.Array]] = None
@@ -125,12 +125,17 @@ class Standalone(FederationProtocol):
     name = "standalone"
     quality = 0
 
-    def estimate_latency(self, cfg_txs, cfg_rx, seq, gen_steps, link, *,
+    def estimate_latency(self, cfg_txs: List[ModelConfig],
+                         cfg_rx: ModelConfig, seq: int, gen_steps: int,
+                         link: LinkModel, *,
                          shared_tokens: int = 64) -> float:
         return _prefill_time(cfg_rx, seq) + _decode_time(cfg_rx, gen_steps)
 
-    def prepare(self, system, receiver, prompt, tx_names, *, steps, key,
-                gated=True, tx_prompts=None) -> PreparedRequest:
+    def prepare(self, system: Any, receiver: str, prompt: jax.Array,
+                tx_names: List[str], *, steps: int, key: jax.Array,
+                gated: bool = True,
+                tx_prompts: Optional[Dict[str, jax.Array]] = None
+                ) -> PreparedRequest:
         return PreparedRequest(prompt=prompt, protocol=self.name)
 
     def needs_transmitters(self) -> bool:
@@ -145,14 +150,19 @@ class C2C(FederationProtocol):
     name = "c2c"
     quality = 2
 
-    def estimate_latency(self, cfg_txs, cfg_rx, seq, gen_steps, link, *,
+    def estimate_latency(self, cfg_txs: List[ModelConfig],
+                         cfg_rx: ModelConfig, seq: int, gen_steps: int,
+                         link: LinkModel, *,
                          shared_tokens: int = 64) -> float:
         xfer = link.transfer_time(commload.c2c_bytes_total(cfg_txs, seq))
         fuse = sum(_fuser_time(t, cfg_rx, seq) for t in cfg_txs)
         return xfer + fuse + _decode_time(cfg_rx, gen_steps)
 
-    def prepare(self, system, receiver, prompt, tx_names, *, steps, key,
-                gated=True, tx_prompts=None) -> PreparedRequest:
+    def prepare(self, system: Any, receiver: str, prompt: jax.Array,
+                tx_names: List[str], *, steps: int, key: jax.Array,
+                gated: bool = True,
+                tx_prompts: Optional[Dict[str, jax.Array]] = None
+                ) -> PreparedRequest:
         if tx_prompts is None:
             tx_prompts = {
                 n: system.rephrase(prompt, jax.random.fold_in(key, i))
@@ -172,7 +182,9 @@ class T2T(FederationProtocol):
     name = "t2t"
     quality = 1
 
-    def estimate_latency(self, cfg_txs, cfg_rx, seq, gen_steps, link, *,
+    def estimate_latency(self, cfg_txs: List[ModelConfig],
+                         cfg_rx: ModelConfig, seq: int, gen_steps: int,
+                         link: LinkModel, *,
                          shared_tokens: int = 64) -> float:
         tx_gen = (max(_decode_time(t, shared_tokens) for t in cfg_txs)
                   if cfg_txs else 0.0)
@@ -181,11 +193,14 @@ class T2T(FederationProtocol):
         rx_prefill = _prefill_time(cfg_rx, seq + shared_tokens * len(cfg_txs))
         return tx_gen + xfer + rx_prefill + _decode_time(cfg_rx, gen_steps)
 
-    def prepare(self, system, receiver, prompt, tx_names, *, steps, key,
-                gated=True, tx_prompts=None) -> PreparedRequest:
+    def prepare(self, system: Any, receiver: str, prompt: jax.Array,
+                tx_names: List[str], *, steps: int, key: jax.Array,
+                gated: bool = True,
+                tx_prompts: Optional[Dict[str, jax.Array]] = None
+                ) -> PreparedRequest:
         from repro.core import t2t
 
-        shared = []
+        shared: List[jax.Array] = []
         wire_bytes = 0
         for i, n in enumerate(tx_names):
             p = system.participants[n]
@@ -209,6 +224,78 @@ PROTOCOLS: Dict[str, FederationProtocol] = {
 #: Names in quality order, best first (paper Fig. 3a).
 QUALITY_ORDER: List[str] = sorted(
     PROTOCOLS, key=lambda n: -PROTOCOLS[n].quality)
+
+
+# ------------------------------------------------------------ wire contracts
+
+
+#: Wire dtypes no schema may carry: int64/uint64 token ids double the wire
+#: bytes for no information, float64 stacks quadruple them, and object
+#: payloads are not tensors at all. The WireAuditor rejects these regardless
+#: of the per-protocol schema.
+FORBIDDEN_WIRE_DTYPES: FrozenSet[str] = frozenset(
+    {"int64", "uint64", "float64"})
+
+
+@dataclass(frozen=True)
+class WireSchema:
+    """Declared wire contract of one protocol: which media may cross the
+    federation link, at which dtypes, through which codec stages.
+
+    The static pass (repro.analysis.wire, WIR004) cross-checks declared
+    ``stages`` against codec ``Pipeline`` literals; the runtime twin
+    (repro.analysis.wire_audit.WireAuditor) verifies every encoded
+    :class:`~repro.core.transport.Message` against the schema and its byte
+    estimate. ``Message`` is duck-typed here so protocol.py keeps its
+    layering (it never imports transport.py)."""
+
+    protocol: str
+    #: media allowed on the wire — subset of {"stack", "tokens"}
+    media: FrozenSet[str] = frozenset()
+    #: dtypes a *dense* stack may ship at; empty = any non-forbidden dtype
+    stack_dtypes: FrozenSet[str] = frozenset()
+    #: codec stages the wire pipeline must apply ("quant", "rephrase", ...)
+    stages: Tuple[str, ...] = ()
+    #: relative slack between measured bytes_on_wire and the estimate
+    tolerance: float = 0.0
+    #: hard per-message byte ceiling (None = only the QoS budget applies)
+    max_message_bytes: Optional[int] = None
+
+    def estimate_wire_bytes(self, msg: Any) -> int:
+        """commload-analytic wire bytes of a *pre-encode* message under this
+        schema's declared stages: an int8-quantised stack costs exactly
+        ``quant.quantized_bytes``, a dense one ``commload.measured_bytes``,
+        tokens ``t2t_bytes_per_token`` each."""
+        total = 0
+        stack = getattr(msg, "stack", None)
+        if stack is not None:
+            if "quant" in self.stages:
+                from repro.core import quant
+
+                total += quant.quantized_bytes(stack)
+            else:
+                total += commload.measured_bytes(stack)
+        tokens = getattr(msg, "tokens", None)
+        if tokens is not None:
+            total += int(tokens.size) * commload.t2t_bytes_per_token()
+        payload = getattr(msg, "payload", None)
+        if payload:
+            total += commload.measured_bytes(payload)
+        return total
+
+
+#: Per-protocol wire contracts, keyed like PROTOCOLS. The defaults describe
+#: the in-tree wire (FedRefineSystem defaults to an IdentityChannel, so a
+#: dense stack at a working dtype is legal for C2C); tests and deployments
+#: pass stricter schemas (e.g. stages=("quant",) + stack_dtypes={"int8"}) to
+#: the WireAuditor to *forbid* dense KV on the link.
+WIRE_SCHEMAS: Dict[str, WireSchema] = {
+    "c2c": WireSchema(
+        protocol="c2c", media=frozenset({"stack"}),
+        stack_dtypes=frozenset({"bfloat16", "float16", "float32", "int8"})),
+    "t2t": WireSchema(protocol="t2t", media=frozenset({"tokens"})),
+    "standalone": WireSchema(protocol="standalone"),
+}
 
 
 # --------------------------------------------------- legacy latency wrappers
@@ -259,5 +346,5 @@ def choose_protocol(
         if cands[name] <= qos.max_latency_s:
             return {"protocol": name, "latencies": cands, "qos_met": True}
     # infeasible QoS: degrade to the fastest candidate and flag it
-    fastest = min(cands, key=cands.get)
+    fastest = min(cands, key=lambda n: cands[n])
     return {"protocol": fastest, "latencies": cands, "qos_met": False}

@@ -18,6 +18,7 @@ protocol).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -50,28 +51,35 @@ class QuantizedKV:
         return tree_bytes(self)
 
 
-def quantize_stack(stack) -> QuantizedKV:
+def quantize_stack(stack: Any) -> QuantizedKV:
     """Quantise a KV stack (n, B, H, S, hd) to int8 + fp32 scales."""
     stack = KVStack.ensure(stack)
     out = {}
     for name in ("k", "v"):
         x = getattr(stack, name).astype(jnp.float32)
-        scale = jnp.max(jnp.abs(x), axis=-2, keepdims=True) / 127.0
-        scale = jnp.maximum(scale, 1e-8)
+        if x.shape[-2] == 0:
+            # empty stack: nothing to scale over the (empty) sequence axis —
+            # unit scales keep the wire layout (and its byte accounting)
+            # identical to the non-empty case
+            scale = jnp.ones(x.shape[:-2] + (1,) + x.shape[-1:], jnp.float32)
+        else:
+            scale = jnp.max(jnp.abs(x), axis=-2, keepdims=True) / 127.0
+            scale = jnp.maximum(scale, 1e-8)
         q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
         out[f"{name}_q"] = q
         out[f"{name}_scale"] = scale
     return QuantizedKV(**out)
 
 
-def dequantize_stack(qstack: QuantizedKV, dtype=jnp.bfloat16) -> KVStack:
+def dequantize_stack(qstack: QuantizedKV, dtype: Any = jnp.bfloat16
+                     ) -> KVStack:
     return KVStack(
         k=(qstack.k_q.astype(jnp.float32) * qstack.k_scale).astype(dtype),
         v=(qstack.v_q.astype(jnp.float32) * qstack.v_scale).astype(dtype),
     )
 
 
-def quantized_bytes(stack) -> int:
+def quantized_bytes(stack: Any) -> int:
     """Wire bytes of the quantised stack (int8 payload + fp32 scales)."""
     stack = KVStack.ensure(stack)
     n, B, H, S, hd = stack.k.shape
@@ -87,7 +95,7 @@ def c2c_bytes_per_token_quantized(cfg: ModelConfig) -> float:
     return 2.0 * n_attn * cfg.num_kv_heads * hd  # 1 byte per element
 
 
-def roundtrip_error(stack) -> float:
+def roundtrip_error(stack: Any) -> float:
     """Max relative L2 error of the quantisation round trip (diagnostics)."""
     stack = KVStack.ensure(stack)
     dq = dequantize_stack(quantize_stack(stack), jnp.float32)

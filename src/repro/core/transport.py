@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -60,7 +60,7 @@ class Message:
         width (int32 token ids are exactly commload's 4 B/token)."""
         return tree_bytes(self)
 
-    def replace(self, **kw) -> "Message":
+    def replace(self, **kw: Any) -> "Message":
         return dataclasses.replace(self, **kw)
 
 
@@ -81,7 +81,7 @@ class Channel:
         """Bytes the link carries for an already-``encode``-d message."""
         return msg.nbytes
 
-    def transmit(self, msg: Message) -> tuple:
+    def transmit(self, msg: Message) -> Tuple[Message, int]:
         """Convenience: encode, account, decode. Returns (received, bytes)."""
         wire = self.encode(msg)
         return self.decode(wire), self.bytes_on_wire(wire)
@@ -100,7 +100,7 @@ class QuantChannel(Channel):
     marker array; pass ``dtype=`` to force a different reconstruction dtype).
     Tokens and other payload pass through."""
 
-    def __init__(self, dtype=None):
+    def __init__(self, dtype: Any = None) -> None:
         self.dtype = dtype
 
     def encode(self, msg: Message) -> Message:
@@ -138,7 +138,7 @@ class RephraseChannel(Channel):
     pipeline) draw *distinct* rephrasings — reusing one draw would collapse
     the transmitter diversity the gating network is trained against."""
 
-    def __init__(self, paraphraser: ParaphraseChannel, key: jax.Array):
+    def __init__(self, paraphraser: ParaphraseChannel, key: jax.Array) -> None:
         self.paraphraser = paraphraser
         self.key = key
         self._calls = 0
@@ -156,7 +156,7 @@ class Pipeline(Channel):
     right→left (codec nesting order). bytes_on_wire is the final encoded
     message's — i.e. what actually crosses the link."""
 
-    def __init__(self, channels: Sequence[Channel]):
+    def __init__(self, channels: Sequence[Channel]) -> None:
         self.channels = list(channels)
 
     def encode(self, msg: Message) -> Message:
@@ -173,9 +173,41 @@ class Pipeline(Channel):
 # ------------------------------------------------------------------ helpers
 
 
-def stack_message(stack) -> Message:
+def stack_message(stack: Any) -> Message:
     return Message(stack=KVStack.ensure(stack))
 
 
 def token_message(tokens: jax.Array) -> Message:
     return Message(tokens=jnp.asarray(tokens, jnp.int32))
+
+
+# ------------------------------------------------------------- codec registry
+
+
+def _rephrase_codec(*, vocab: int, class_width: int,
+                    key: jax.Array) -> Channel:
+    from repro.core.privacy import synonym_channel
+
+    return RephraseChannel(synonym_channel(vocab, class_width, key), key)
+
+
+# Named wire codecs (every entry is round-trip- and byte-tested by
+# tests/test_transport.py against commload's analytic numbers).
+CODECS: Dict[str, Callable[..., Channel]] = {
+    "identity": lambda **kw: IdentityChannel(),
+    "int8": lambda **kw: QuantChannel(),
+    "rephrase": lambda **kw: _rephrase_codec(**kw),
+    "rephrase+int8": lambda **kw: Pipeline([_rephrase_codec(**kw),
+                                            QuantChannel()]),
+}
+
+
+def make_codec(name: str, *, vocab: int = 256, class_width: int = 4,
+               key: Optional[jax.Array] = None) -> Channel:
+    """Build a named wire codec. ``vocab``/``class_width``/``key`` feed the
+    rephrase stage (ignored by purely tensor codecs)."""
+    if name not in CODECS:
+        raise ValueError(f"unknown codec {name!r}; have {sorted(CODECS)}")
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    return CODECS[name](vocab=vocab, class_width=class_width, key=key)

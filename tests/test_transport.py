@@ -190,6 +190,72 @@ def test_quant_channel_restores_source_dtype_by_default():
         assert out.stack.k.dtype == dtype
 
 
+# ------------------------------------------------------------ codec registry
+
+
+def test_codec_registry_roundtrip_nondefault_layouts():
+    """Every registered codec round-trips shapes/dtypes exactly on int8-able
+    KV stacks across non-default head/layer layouts (MQA-style H=1, deep
+    narrow n=5, wide-head hd=32) — the channel contract, per codec."""
+    layouts = [dict(n=5, B=1, H=1, S=7, hd=32),   # MQA-ish, wide head
+               dict(n=1, B=3, H=4, S=9, hd=4),    # single layer, many heads
+               dict(n=3, B=2, H=2, S=1, hd=8)]    # single-token sequence
+    tokens = jax.random.randint(KEY, (2, 6), 0, 64)
+    for name in sorted(TR.CODECS):
+        for layout in layouts:
+            stack = _stack(**layout)
+            codec = TR.make_codec(name, vocab=64, key=KEY)
+            out, nbytes = codec.transmit(TR.Message(stack=stack,
+                                                    tokens=tokens))
+            assert out.stack.k.shape == stack.k.shape, (name, layout)
+            assert out.stack.v.dtype == stack.v.dtype, (name, layout)
+            assert out.tokens.shape == tokens.shape
+            assert out.tokens.dtype == tokens.dtype
+            assert nbytes > 0
+
+
+def test_codec_registry_empty_stack_edge_case():
+    """S=0 stacks (nothing prefilled yet) must survive every codec: exact
+    shape/dtype round trip and non-negative accounted bytes."""
+    empty = KVStack(k=jnp.zeros((2, 1, 2, 0, 8), jnp.float32),
+                    v=jnp.zeros((2, 1, 2, 0, 8), jnp.float32))
+    for name in sorted(TR.CODECS):
+        codec = TR.make_codec(name, vocab=64, key=KEY)
+        out, nbytes = codec.transmit(TR.stack_message(empty))
+        assert out.stack.k.shape == empty.k.shape, name
+        assert out.stack.k.dtype == empty.k.dtype, name
+        assert nbytes >= 0
+
+
+def test_codec_registry_bytes_pinned_against_commload():
+    """Measured bytes_on_wire for every registry codec equals the analytic
+    number: dense measured_bytes for token-only transforms, quantized_bytes
+    once an int8 stage is in the pipeline, plus 4 B/token either way."""
+    stack = _stack(n=3, B=2, H=2, S=12, hd=8)
+    tokens = jax.random.randint(KEY, (2, 12), 0, 64)
+    token_bytes = int(tokens.size) * commload.t2t_bytes_per_token()
+    expected = {
+        "identity": commload.measured_bytes(stack) + token_bytes,
+        "rephrase": commload.measured_bytes(stack) + token_bytes,
+        "int8": quant.quantized_bytes(stack) + token_bytes,
+        "rephrase+int8": quant.quantized_bytes(stack) + token_bytes,
+    }
+    assert set(expected) == set(TR.CODECS)  # pin the registry contents
+    for name, want in expected.items():
+        codec = TR.make_codec(name, vocab=64, key=KEY)
+        wire = codec.encode(TR.Message(stack=stack, tokens=tokens))
+        assert codec.bytes_on_wire(wire) == want, name
+
+
+def test_make_codec_unknown_name_raises():
+    try:
+        TR.make_codec("zstd")
+    except ValueError as e:
+        assert "zstd" in str(e) and "identity" in str(e)
+    else:
+        raise AssertionError("unknown codec name must raise")
+
+
 def test_rephrase_channel_distinct_draws_per_transmit():
     """Repeated encodes fold a call counter into the key: two transmissions
     of one prompt get different rephrasings (transmitter diversity)."""

@@ -1,0 +1,264 @@
+"""WireAuditor — runtime twin of the WIRxxx static pass (ISSUE 10).
+
+Unit half: schema verification on raw channels (media, dtypes, declared
+stages, byte accounting, QoS ceilings, call-site provenance). Engine half:
+``FedRefineSystem.build(..., audit_wire=True)`` — a clean mixed-protocol
+run stays byte-identical to the unaudited system with an empty audit
+report, and each of the injected leaks (raw token ids bypassing the codec,
+dense KV where the protocol declares int8, bytes_on_wire drift past
+tolerance) is caught with the producing call site named.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import WireAuditError, WireAuditor
+from repro.analysis.wire_audit import derive_schemas
+from repro.configs.case_study import tiny_zoo
+from repro.core import commload, quant
+from repro.core import transport as TR
+from repro.core.fedrefine import FedRefineSystem, Participant
+from repro.core.protocol import WIRE_SCHEMAS, LinkModel, QoS
+from repro.models import transformer as T
+from repro.models.cache import KVStack
+
+KEY = jax.random.PRNGKey(23)
+
+
+def _stack(n=2, B=1, H=2, S=6, hd=8, dtype=jnp.float32) -> KVStack:
+    k1, k2 = jax.random.split(KEY)
+    return KVStack(k=jax.random.normal(k1, (n, B, H, S, hd), dtype),
+                   v=jax.random.normal(k2, (n, B, H, S, hd), dtype))
+
+
+# ------------------------------------------------------------------ unit
+
+
+def test_identity_c2c_clean_and_recorded():
+    aud = WireAuditor()
+    stack = _stack()
+    aud.expect(protocol="c2c")
+    out, nbytes = aud.transmit(TR.stack_message(stack))
+    assert np.array_equal(np.asarray(out.stack.k), np.asarray(stack.k))
+    assert nbytes == commload.measured_bytes(stack)
+    assert aud.report() == []
+    [rec] = aud.records
+    assert rec.protocol == "c2c" and rec.media == ("stack",)
+    assert rec.measured_bytes == rec.estimated_bytes == nbytes
+    assert ".py:" in rec.site  # call-site provenance survives formatting
+    assert "test_wire_audit" in rec.describe()
+
+
+def test_quant_wire_derives_quant_stage_and_int8_estimate():
+    aud = WireAuditor(TR.QuantChannel())
+    assert aud.schemas["c2c"].stages == ("quant",)
+    stack = _stack(n=3, B=2, S=10)
+    aud.expect(protocol="c2c")
+    _, nbytes = aud.transmit(TR.stack_message(stack))
+    assert nbytes == quant.quantized_bytes(stack)
+    assert aud.report() == []
+
+
+def test_empty_stack_through_quant_wire_is_clean():
+    empty = KVStack(k=jnp.zeros((2, 1, 2, 0, 8), jnp.float32),
+                    v=jnp.zeros((2, 1, 2, 0, 8), jnp.float32))
+    aud = WireAuditor(TR.QuantChannel())
+    aud.expect(protocol="c2c")
+    _, nbytes = aud.transmit(TR.stack_message(empty))
+    assert nbytes == quant.quantized_bytes(empty)
+
+
+def test_t2t_tokens_clean_and_pinned():
+    aud = WireAuditor()
+    tokens = jax.random.randint(KEY, (2, 9), 0, 64)
+    aud.expect(protocol="t2t")
+    _, nbytes = aud.transmit(TR.token_message(tokens))
+    assert nbytes == tokens.size * commload.t2t_bytes_per_token()
+
+
+def test_no_expect_context_fails():
+    aud = WireAuditor()
+    with pytest.raises(WireAuditError, match="no expect"):
+        aud.transmit(TR.stack_message(_stack()))
+    assert len(aud.report()) == 1
+
+
+def test_unknown_protocol_in_expect_fails():
+    with pytest.raises(WireAuditError, match="carrier-pigeon"):
+        WireAuditor().expect(protocol="carrier-pigeon")
+
+
+def test_tokens_on_c2c_wire_is_media_violation():
+    aud = WireAuditor()
+    aud.expect(protocol="c2c")
+    with pytest.raises(WireAuditError, match="raw token ids"):
+        aud.transmit(TR.token_message(jnp.arange(5)))
+
+
+def test_stack_on_t2t_wire_is_media_violation():
+    aud = WireAuditor()
+    aud.expect(protocol="t2t")
+    with pytest.raises(WireAuditError, match="KV stack"):
+        aud.transmit(TR.stack_message(_stack()))
+
+
+def test_int64_payload_rejected():
+    aud = WireAuditor()
+    aud.expect(protocol="t2t")
+    with pytest.raises(WireAuditError, match="int64"):
+        aud.encode(TR.Message(tokens=np.arange(4, dtype=np.int64)))
+
+
+def test_schema_declared_quant_stage_rejects_dense_stack():
+    """Identity wire under a schema that declares the quant stage: the
+    dense stack itself (not just its byte count) is the violation."""
+    aud = WireAuditor(TR.IdentityChannel(),
+                      schemas=derive_schemas(TR.QuantChannel()))
+    aud.expect(protocol="c2c")
+    with pytest.raises(WireAuditError, match="quant"):
+        aud.transmit(TR.stack_message(_stack()))
+
+
+def test_byte_drift_past_tolerance_fails():
+    class JunkChannel(TR.Channel):
+        def encode(self, msg):
+            pad = jnp.zeros((64,), jnp.float32)
+            return msg.replace(payload={**msg.payload, "junk": pad})
+
+    aud = WireAuditor(JunkChannel())
+    aud.expect(protocol="c2c")
+    with pytest.raises(WireAuditError, match="drift"):
+        aud.transmit(TR.stack_message(_stack()))
+
+
+def test_qos_budget_ceiling_enforced():
+    stack = _stack(S=16)
+    aud = WireAuditor()
+    aud.set_budget(commload.measured_bytes(stack) - 1)
+    aud.expect(protocol="c2c")
+    with pytest.raises(WireAuditError, match="QoS budget"):
+        aud.transmit(TR.stack_message(stack))
+    aud.set_budget(None)
+    aud.expect(protocol="c2c")
+    aud.transmit(TR.stack_message(stack))  # cleared budget: clean again
+
+
+def test_schema_max_message_bytes_enforced():
+    small = dataclasses.replace(WIRE_SCHEMAS["c2c"], max_message_bytes=8)
+    aud = WireAuditor(schemas={"c2c": small})
+    aud.expect(protocol="c2c")
+    with pytest.raises(WireAuditError, match="schema ceiling"):
+        aud.transmit(TR.stack_message(_stack()))
+
+
+# ---------------------------------------------------------------- engine
+
+
+@pytest.fixture(scope="module")
+def zoo():
+    z = tiny_zoo()
+    members = []
+    for i, cfg in enumerate([z["receiver"], *z["transmitters"]]):
+        params = T.init_params(cfg, jax.random.fold_in(KEY, i), jnp.float32)
+        members.append(Participant(cfg.name, cfg, params))
+    return members
+
+
+def _run_mixed(system, rx, prompt):
+    system.submit(rx, prompt, 4, protocol="c2c", key=jax.random.PRNGKey(7))
+    system.submit(rx, prompt, 4, protocol="t2t", key=jax.random.PRNGKey(7))
+    system.submit(rx, prompt, 4, protocol="standalone")
+    return system.drain(rx)
+
+
+def test_audited_mixed_run_byte_identical_and_clean(zoo):
+    """audit_wire=True is observability, not behaviour: tokens and wire
+    bytes of a mixed C2C/T2T/standalone run match the unaudited system,
+    the audit report is empty, and every C2C transmission got a record."""
+    rx = zoo[0].name
+    prompt = jnp.array([[1, 2, 3, 4]], jnp.int32)
+    plain = _run_mixed(FedRefineSystem.build(zoo), rx, prompt)
+    audited_sys = FedRefineSystem.build(zoo, audit_wire=True)
+    audited = _run_mixed(audited_sys, rx, prompt)
+    assert sorted(plain) == sorted(audited)
+    for rid in plain:
+        assert np.array_equal(np.asarray(plain[rid]["tokens"]),
+                              np.asarray(audited[rid]["tokens"]))
+        assert plain[rid].get("wire_bytes") == audited[rid].get("wire_bytes")
+    aud = audited_sys.wire
+    assert aud.report() == []
+    assert [r.protocol for r in aud.records] == ["c2c"]
+    assert "transmit_stacks" in aud.records[0].site
+
+
+def test_audited_quant_wire_run_clean(zoo):
+    """Derived schemas make the int8 wire audit-clean with exact int8
+    byte accounting — no explicit wire_schemas needed."""
+    rx = zoo[0].name
+    sys_ = FedRefineSystem.build(zoo, wire=TR.QuantChannel(),
+                                 audit_wire=True)
+    out = _run_mixed(sys_, rx, jnp.array([[1, 2, 3, 4]], jnp.int32))
+    assert sys_.wire.report() == []
+    wb = [v["wire_bytes"] for v in out.values() if "transmitters" in v
+          and v["protocol"] == "c2c"]
+    assert wb == [sys_.wire.records[0].measured_bytes]
+
+
+def test_engine_catches_raw_tokens_bypassing_codec(zoo, monkeypatch):
+    """Injected leak 1: a compromised stack_message smuggles the raw prompt
+    ids alongside the KV stack — the c2c schema's media set catches it."""
+    rx = zoo[0].name
+    prompt = jnp.array([[1, 2, 3, 4]], jnp.int32)
+    real = TR.stack_message
+    monkeypatch.setattr(
+        TR, "stack_message",
+        lambda stack: real(stack).replace(tokens=prompt))
+    sys_ = FedRefineSystem.build(zoo, audit_wire=True)
+    with pytest.raises(WireAuditError, match="raw token ids"):
+        sys_.submit(rx, prompt, 4, protocol="c2c")
+    assert len(sys_.wire.report()) == 1
+
+
+def test_engine_catches_dense_kv_where_protocol_declares_int8(zoo):
+    """Injected leak 2: the protocol contract says int8 C2C but the system
+    was (mis)built with an identity wire — every dense stack is flagged."""
+    rx = zoo[0].name
+    sys_ = FedRefineSystem.build(
+        zoo, audit_wire=True,
+        wire_schemas=derive_schemas(TR.QuantChannel()))
+    with pytest.raises(WireAuditError, match="quant"):
+        sys_.submit(rx, jnp.array([[1, 2, 3, 4]], jnp.int32), 4,
+                    protocol="c2c")
+
+
+def test_engine_catches_bytes_on_wire_drift(zoo):
+    """Injected leak 3: a wire whose encode inflates the message (stray
+    debug payload) drifts measured bytes past the schema tolerance."""
+    class PaddingChannel(TR.Channel):
+        def encode(self, msg):
+            pad = jnp.zeros((128,), jnp.float32)
+            return msg.replace(payload={**msg.payload, "debug": pad})
+
+    rx = zoo[0].name
+    sys_ = FedRefineSystem.build(zoo, wire=PaddingChannel(),
+                                 audit_wire=True)
+    with pytest.raises(WireAuditError, match="drift"):
+        sys_.submit(rx, jnp.array([[1, 2, 3, 4]], jnp.int32), 4,
+                    protocol="c2c")
+
+
+def test_serve_opportunistic_threads_qos_budget(zoo):
+    """serve_opportunistic wires the link x latency byte budget into the
+    auditor; a generous budget stays clean end to end."""
+    rx = zoo[0].name
+    sys_ = FedRefineSystem.build(zoo, audit_wire=True)
+    out = sys_.serve_opportunistic(
+        rx, jnp.array([[1, 2, 3, 4]], jnp.int32), 4,
+        link=LinkModel(bandwidth_bps=1e9, rtt_s=0.001),
+        qos=QoS(max_latency_s=60.0, min_quality="standalone"))
+    assert sys_.wire.report() == []
+    if out["protocol"] == "c2c":
+        assert sys_.wire._budget == int(1e9 * 60.0)
